@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+           **kw) -> float:
+    """Median wall seconds per call (after warmup, blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line)
+    return line

@@ -1,0 +1,77 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-(arch x mesh)
+roofline table (markdown + CSV lines).
+
+Reads results/dryrun/<mesh>/<arch>__<shape>[__tag].json produced by
+``python -m repro.launch.dryrun``; emits for each cell the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS, useful-compute ratio, and
+the roofline fraction.  ``--markdown`` writes the EXPERIMENTS.md table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(out_dir="results/dryrun", mesh="16x16", tag=""):
+    cells = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(f"{out_dir}/{mesh}/*{suffix}")):
+        name = os.path.basename(path)[: -len(".json")]
+        if not tag and "__" in name.split("__", 1)[1]:
+            # skip tagged variants when loading baselines
+            parts = name.split("__")
+            if len(parts) > 2:
+                continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c: Dict) -> str:
+    r = c["roofline"]
+    return (f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction_mfu']:.4f} |")
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | MODEL_FLOPS | useful ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return "\n".join([hdr] + [fmt_row(c) for c in cells])
+
+
+def main(out: List[str] = None, mesh: str = "16x16", tag: str = ""):
+    out = out if out is not None else []
+    cells = load_cells(mesh=mesh, tag=tag)
+    if not cells:
+        out.append(f"roofline.{mesh},0,no dry-run artifacts found — run "
+                   "python -m repro.launch.dryrun --all first")
+        print(out[-1])
+        return
+    for c in cells:
+        r = c["roofline"]
+        out.append(
+            f"roofline.{c['arch']}.{c['shape']}.{mesh},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.0f},"
+            f"bottleneck={r['bottleneck']}|mfu={r['roofline_fraction_mfu']:.4f}"
+            f"|useful={r['useful_ratio']:.3f}")
+        print(out[-1])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    if args.markdown:
+        print(markdown_table(load_cells(mesh=args.mesh, tag=args.tag)))
+    else:
+        main(mesh=args.mesh, tag=args.tag)

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig6 table5
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows; the full set
+is also written to results/bench.csv.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List
+
+SUITES = {
+    "fig6": ("benchmarks.sharing_workloads",
+             "multi-tenant sharing modes (Fig 6 / Table 4)"),
+    "fig7": ("benchmarks.standalone_overhead",
+             "standalone fencing overhead (Fig 7/8)"),
+    "fig9": ("benchmarks.instruction_delta",
+             "instrumentation footprint (Fig 9)"),
+    "fig10": ("benchmarks.fence_vs_intensity",
+              "fence overhead vs intensity (Fig 10)"),
+    "table5": ("benchmarks.interception_cost",
+               "interception cost (Table 5)"),
+    "table6": ("benchmarks.implicit_calls",
+               "implicit library calls (Table 6)"),
+    "mem": ("benchmarks.manager_memory",
+            "context-memory footprint (§2.2)"),
+    "compress": ("benchmarks.compression",
+                 "cross-pod int8 gradient compression (beyond-paper)"),
+    "roofline": ("benchmarks.roofline", "dry-run roofline table"),
+}
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SUITES)
+    rows: List[str] = []
+    for key in want:
+        if key not in SUITES:
+            print(f"unknown suite {key!r}; known: {list(SUITES)}")
+            continue
+        mod_name, desc = SUITES[key]
+        print(f"\n=== {key}: {desc} ===")
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["main"])
+        try:
+            mod.main(rows)
+        except Exception as e:  # keep the harness going
+            rows.append(f"{key}.ERROR,0,{type(e).__name__}:{e}")
+            print(rows[-1])
+        print(f"--- {key} done in {time.time() - t0:.1f}s")
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(rows) + "\n")
+    print(f"\n{len(rows)} rows -> results/bench.csv")
+
+
+if __name__ == "__main__":
+    main()

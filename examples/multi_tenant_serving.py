@@ -1,0 +1,67 @@
+"""Multi-tenant LM serving with Guardian isolation.
+
+Three tenants share one model server and one KV page pool.  The engine
+carves pow2 slot partitions per tenant; every batched decode step fences
+each row's slot ids with its tenant's (base, mask).  The demo shows:
+
+1. normal co-located serving (round-robin batching across tenants),
+2. that a tenant's generations are bit-identical whether or not other
+   tenants are co-located (no cross-tenant interference),
+3. a forged-slot attack bouncing off the fence.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import ServeEngine
+
+
+def main():
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(7)
+    prompts = {f"tenant{i}": rng.integers(0, cfg.vocab, 12).astype(
+        np.int32) for i in range(3)}
+
+    print("=== co-located serving (3 tenants, shared pool) ===")
+    eng = ServeEngine(cfg, max_batch=8, max_len=128)
+    parts = {}
+    for t in prompts:
+        parts[t] = eng.register_tenant(t, 2)
+        print(f"  {t}: slots [{parts[t].base}, {parts[t].end})  "
+              f"mask={parts[t].mask:#x}")
+    rids = {t: eng.submit(t, p) for t, p in prompts.items()}
+    out = eng.run(max_new_tokens=10)
+    for t, rid in rids.items():
+        print(f"  {t}: {out[rid]}")
+
+    print("\n=== isolation: tenant0 alone vs co-located ===")
+    solo = ServeEngine(cfg, max_batch=8, max_len=128)
+    solo.register_tenant("tenant0", 2)
+    rid = solo.submit("tenant0", prompts["tenant0"])
+    solo_out = solo.run(max_new_tokens=10)[rid]
+    same = solo_out == out[rids["tenant0"]]
+    print(f"  identical generations: {same}")
+    assert same
+
+    print("\n=== forged slot id bounces off the fence ===")
+    eng2 = ServeEngine(cfg, max_batch=8, max_len=128)
+    vp = eng2.register_tenant("victim", 4)
+    eng2.register_tenant("attacker", 4)
+    rv = eng2.submit("victim", prompts["tenant0"])
+    eng2.run(max_new_tokens=4)
+    before = np.asarray(eng2.cache.k[:, vp.base:vp.end]).copy()
+    ra = eng2.submit("attacker", prompts["tenant1"])
+    req = [r for r in eng2._requests if r.rid == ra][0]
+    req.slot = vp.base      # scheduler compromise!
+    eng2.run(max_new_tokens=4)
+    after = np.asarray(eng2.cache.k[:, vp.base:vp.end])
+    print(f"  victim KV rows changed: {bool((before != after).any())} "
+          "(fence wrapped the attack into the attacker's partition)")
+    assert (before == after).all()
+    print("\nall good.")
+
+
+if __name__ == "__main__":
+    main()

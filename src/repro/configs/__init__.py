@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    register,
+    shape_applicable,
+)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "get_config", "list_archs", "register", "shape_applicable",
+]

@@ -1,0 +1,53 @@
+"""Guardian core: the paper's contribution as composable JAX modules.
+
+Layering (bottom-up):
+
+    partition   — pow2 buddy arena allocator + partition bounds table
+    fence       — the 3 bounds modes (bitwise / modulo / check) + guarded ops
+    arena       — shared device arenas (flat DRAM model + structured pools)
+    sandbox     — jaxpr-level kernel instrumentor (the "PTX-patcher")
+    interception— GuardianClient ("grdLib"): device-API shadowing + traces
+    manager     — GuardianManager ("grdManager"): sole device owner,
+                  validated calls, round-robin spatial multiplexing
+    libsim      — simulated closed-source accelerated libraries (Table 6)
+"""
+
+from repro.core.arena import Arena, ArenaSpec, make_flat_arena
+from repro.core.fence import (
+    FenceParams,
+    FencePolicy,
+    apply_fence,
+    fence_bitwise,
+    fence_check,
+    fence_modulo,
+    fence_modulo_magic,
+    guarded_take,
+    guarded_update,
+    magic_constants,
+)
+from repro.core.interception import CallTrace, DevicePtr, GuardianClient
+from repro.core.manager import (
+    GuardianManager,
+    GuardianViolation,
+    SharingMode,
+)
+from repro.core.partition import (
+    BuddyAllocator,
+    OutOfArenaMemory,
+    Partition,
+    PartitionBoundsTable,
+    UnknownTenant,
+)
+from repro.core.sandbox import SandboxError, sandbox, sandbox_report
+
+__all__ = [
+    "Arena", "ArenaSpec", "make_flat_arena",
+    "FenceParams", "FencePolicy", "apply_fence", "fence_bitwise",
+    "fence_check", "fence_modulo", "fence_modulo_magic", "guarded_take",
+    "guarded_update", "magic_constants",
+    "CallTrace", "DevicePtr", "GuardianClient",
+    "GuardianManager", "GuardianViolation", "SharingMode",
+    "BuddyAllocator", "OutOfArenaMemory", "Partition",
+    "PartitionBoundsTable", "UnknownTenant",
+    "SandboxError", "sandbox", "sandbox_report",
+]

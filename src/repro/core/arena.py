@@ -1,0 +1,140 @@
+"""Shared device arenas — the "single GPU address space" of the paper.
+
+The grdManager reserves all device memory at startup (§4.2.1: "a custom
+allocator that initially reserves all GPU memory and splits it into
+partitions").  On TPU the reservation is a set of **arena tensors** living in
+HBM, each an ``(num_slots, *slot_shape)`` array whose axis 0 is the shared
+slot space that partitions carve up:
+
+* the **flat arena** (slot_shape=()) models raw device DRAM for the
+  client-facing malloc/memcpy/kernel API;
+* structured arenas back the serving/training data paths: KV page pools,
+  SSM state pools, MoE dispatch buffers, embedding tables.
+
+Arenas are functionally updated (JAX); the manager is the only holder of the
+live buffer, which is what enforces "applications do not have direct access
+to the GPU" (§5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fence import (
+    FenceParams,
+    FencePolicy,
+    guarded_dynamic_slice,
+    guarded_dynamic_update_slice,
+    guarded_take,
+    guarded_update,
+)
+from repro.core.partition import is_pow2
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSpec:
+    """Static description of one shared arena tensor."""
+
+    name: str
+    num_slots: int                       # pow2 — the partitionable axis
+    slot_shape: Tuple[int, ...] = ()
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if not is_pow2(self.num_slots):
+            raise ValueError(
+                f"arena {self.name!r}: num_slots {self.num_slots} not pow2")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.num_slots, *self.slot_shape)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct stand-in for dry-runs (no allocation)."""
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def allocate(self) -> jax.Array:
+        return jnp.zeros(self.shape, self.dtype)
+
+    @property
+    def slot_bytes(self) -> int:
+        import numpy as np
+        n = 1
+        for d in self.slot_shape:
+            n *= d
+        return n * np.dtype(self.dtype).itemsize
+
+    @property
+    def total_bytes(self) -> int:
+        return self.num_slots * max(self.slot_bytes, 1)
+
+
+class Arena:
+    """A live arena: spec + current buffer.  All dynamic access goes through
+    the guarded ops so the fence policy is applied uniformly."""
+
+    def __init__(self, spec: ArenaSpec, buf: Optional[jax.Array] = None):
+        self.spec = spec
+        self.buf = spec.allocate() if buf is None else buf
+
+    # -- fenced row access ------------------------------------------------
+    def read_rows(self, idx, params: FenceParams,
+                  policy: FencePolicy = FencePolicy.BITWISE) -> jax.Array:
+        return guarded_take(self.buf, idx, params, policy)
+
+    def write_rows(self, idx, values, params: FenceParams,
+                   policy: FencePolicy = FencePolicy.BITWISE) -> None:
+        self.buf = guarded_update(self.buf, idx, values, params, policy)
+
+    def read_range(self, start, length: int, params: FenceParams,
+                   policy: FencePolicy = FencePolicy.BITWISE) -> jax.Array:
+        return guarded_dynamic_slice(self.buf, start, length, params, policy)
+
+    def write_range(self, start, values, params: FenceParams,
+                    policy: FencePolicy = FencePolicy.BITWISE) -> None:
+        self.buf = guarded_dynamic_update_slice(
+            self.buf, start, values, params, policy)
+
+    # -- unfenced (manager-internal, pre-validated) -----------------------
+    def unsafe_read_range(self, start: int, length: int) -> jax.Array:
+        return jax.lax.dynamic_slice_in_dim(self.buf, start, length, axis=0)
+
+    def unsafe_write_range(self, start: int, values: jax.Array) -> None:
+        self.buf = jax.lax.dynamic_update_slice_in_dim(
+            self.buf, values, start, axis=0)
+
+    def zero_range(self, start: int, length: int) -> None:
+        """Scrub a partition on tenant teardown (no cross-tenant leaks)."""
+        z = jnp.zeros((length, *self.spec.slot_shape), self.spec.dtype)
+        self.unsafe_write_range(start, z)
+
+    @property
+    def nbytes(self) -> int:
+        return self.spec.total_bytes
+
+
+def make_kv_page_arena(num_pages: int, page_size: int, num_kv_heads: int,
+                       head_dim: int, dtype=jnp.bfloat16,
+                       name: str = "kv_pages") -> ArenaSpec:
+    """Paged-KV pool: slot = one page of K and V (stacked on a leading 2)."""
+    return ArenaSpec(name=name, num_slots=num_pages,
+                     slot_shape=(2, page_size, num_kv_heads, head_dim),
+                     dtype=dtype)
+
+
+def make_state_arena(num_cells: int, state_dim: int, head_dim: int,
+                     dtype=jnp.float32, name: str = "ssm_state") -> ArenaSpec:
+    """SSM/recurrent state pool (zamba2 Mamba2 layers, xLSTM cells)."""
+    return ArenaSpec(name=name, num_slots=num_cells,
+                     slot_shape=(state_dim, head_dim), dtype=dtype)
+
+
+def make_flat_arena(num_slots: int, dtype=jnp.float32,
+                    name: str = "device_dram") -> ArenaSpec:
+    """The raw device-DRAM model used by the client malloc/memcpy API."""
+    return ArenaSpec(name=name, num_slots=num_slots, slot_shape=(),
+                     dtype=dtype)

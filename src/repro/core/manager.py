@@ -1,0 +1,457 @@
+"""GuardianManager — the ``grdManager`` analogue (Guardian §4.2).
+
+The manager is the **only entity with device access**: it owns the arena
+tensors, the partition bounds table, and the symbol table of pre-compiled
+sandboxed kernels.  Tenants reach it exclusively through
+:class:`~repro.core.interception.GuardianClient`.
+
+Responsibilities (paper section in parentheses):
+
+* **Memory partitioning** (§4.2.1): buddy-allocated pow2 partitions out of
+  the reserved arena; per-tenant intra-partition allocator serves malloc().
+* **Transfer validation** (§4.2.2): every host-initiated copy is checked
+  against the bounds table; violations raise :class:`GuardianViolation`
+  ("fencing erroneous operations") without touching the device.
+* **Kernel invocation** (§4.2.3): ``pointerToSymbol`` maps kernel name →
+  (native, sandboxed) executables; launches are *augmented* with the
+  partition's (base, mask) scalars and issued as the sandboxed twin —
+  unless the tenant runs **standalone**, in which case the native kernel is
+  issued (zero-overhead fast path).
+* **Spatial multiplexing** (§4.2.4): per-tenant queues drained round-robin;
+  JAX's async dispatch plays the role of CUDA streams (ops from different
+  tenants overlap on device).  A TIME_SHARE mode serializes tenants with a
+  device sync in between — the paper's baseline.
+
+Bounds are passed to kernels as **dynamic scalars** for BITWISE/CHECK (one
+shared binary for all tenants — the paper's two-extra-parameters design) and
+as static constants for MODULO (the magic-shift is structural; the paper
+likewise notes per-partition specialization does not scale, so MODULO pays a
+per-partition compile).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import Arena, ArenaSpec, make_flat_arena
+from repro.core.fence import FenceParams, FencePolicy
+from repro.core.interception import DevicePtr, GuardianClient
+from repro.core.partition import (
+    IntraPartitionAllocator,
+    Partition,
+    PartitionBoundsTable,
+    UnknownTenant,
+)
+from repro.core.sandbox import SandboxError, sandbox
+
+
+class GuardianViolation(Exception):
+    """An operation strayed outside the tenant's partition and was fenced at
+    the call level (transfers) or detected by CHECK mode (kernels)."""
+
+
+class SharingMode(enum.Enum):
+    TIME_SHARE = "time_share"   # paper baseline: one tenant at a time + sync
+    SPATIAL = "spatial"         # concurrent streams, round-robin issue
+
+
+@dataclasses.dataclass
+class LaunchStats:
+    """Table 5 analogue: cycles -> nanoseconds on the host."""
+
+    lookup_ns: List[int] = dataclasses.field(default_factory=list)
+    augment_ns: List[int] = dataclasses.field(default_factory=list)
+    dispatch_ns: List[int] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        def avg(xs):
+            return float(np.mean(xs)) if xs else 0.0
+        return {
+            "lookup_ns": avg(self.lookup_ns),
+            "augment_ns": avg(self.augment_ns),
+            "dispatch_ns": avg(self.dispatch_ns),
+        }
+
+
+@dataclasses.dataclass
+class _KernelEntry:
+    name: str
+    fn: Callable
+    arena_argnums: Tuple[int, ...]
+    native: Callable                  # raw, no fence
+    fenced_dyn: Callable              # dynamic (base, mask) operands
+    checked_dyn: Callable             # CHECK mode, dynamic bounds
+    modulo_static: Dict[Tuple[int, int], Callable] = dataclasses.field(
+        default_factory=dict)         # (base,size) -> callable
+    jit_cache: Dict[Tuple, Callable] = dataclasses.field(
+        default_factory=dict)         # (mode, static_positions) -> jitted
+
+
+def _specialized_jit(entry: _KernelEntry, mode: str, fn: Callable,
+                     call_args: Tuple) -> Callable:
+    """Jit with size-like (non-array) launch parameters marked static —
+    kernels take shapes as plain ints, like CUDA launches take dims.
+    Position 0 is always the arena buffer (dynamic)."""
+    static = tuple(i + 1 for i, a in enumerate(call_args)
+                   if not isinstance(a, (jax.Array, np.ndarray)))
+    key = (mode, static)
+    if key not in entry.jit_cache:
+        entry.jit_cache[key] = jax.jit(fn, static_argnums=static)
+    return entry.jit_cache[key]
+
+
+@dataclasses.dataclass
+class _QueuedOp:
+    tenant_id: str
+    kind: str                 # "launch" | "h2d" | "d2d"
+    payload: Tuple
+
+
+class GuardianManager:
+    """Sole owner of device arenas; executes validated calls for tenants."""
+
+    def __init__(
+        self,
+        total_slots: int = 1 << 20,
+        dtype=jnp.float32,
+        policy: FencePolicy = FencePolicy.BITWISE,
+        mode: SharingMode = SharingMode.SPATIAL,
+        standalone_fast_path: bool = True,
+        extra_arenas: Sequence[ArenaSpec] = (),
+    ):
+        self.policy = policy
+        self.mode = mode
+        self.standalone_fast_path = standalone_fast_path
+
+        # §4.2.1 — reserve all device memory up front.
+        self.arena = Arena(make_flat_arena(total_slots, dtype))
+        self.arenas: Dict[str, Arena] = {"device_dram": self.arena}
+        for spec in extra_arenas:
+            self.arenas[spec.name] = Arena(spec)
+
+        self.bounds = PartitionBoundsTable(total_slots)
+        self._suballoc: Dict[str, IntraPartitionAllocator] = {}
+        self._clients: Dict[str, GuardianClient] = {}
+
+        # §4.2.3 — pointerToSymbol: kernel name -> compiled twins.
+        self.pointer_to_symbol: Dict[str, _KernelEntry] = {}
+        # partition scalars pre-staged on device (the "augment" fast path:
+        # the two extra parameters are reused, not re-uploaded per launch)
+        self._part_scalars: Dict[str, Tuple[Any, Any, Any]] = {}
+
+        self._queues: "collections.OrderedDict[str, collections.deque]" = (
+            collections.OrderedDict())
+        self.launch_stats = LaunchStats()
+        self.violations: List[str] = []
+        self._export_tables: Dict[int, Dict[str, Any]] = {
+            # minimal cudaGetExportTable implementation (§4.1): enough
+            # entries for the simulated "closed-source" libraries to run.
+            7: {"contextLocalStorageInterface": lambda: None},
+            11: {"memcpyAsyncDispatch": lambda: None},
+        }
+
+    # ------------------------------------------------------------------ #
+    # Tenant lifecycle                                                   #
+    # ------------------------------------------------------------------ #
+    def register_tenant(self, tenant_id: str,
+                        requested_slots: int) -> GuardianClient:
+        """Tenants declare memory needs at init (§4.2.1: "normal in cloud
+        environments, where users buy instances with specific resources")."""
+        part = self.bounds.create(tenant_id, requested_slots)
+        self._suballoc[tenant_id] = IntraPartitionAllocator(part)
+        self._queues[tenant_id] = collections.deque()
+        client = GuardianClient(self, tenant_id)
+        self._clients[tenant_id] = client
+        return client
+
+    def remove_tenant(self, tenant_id: str) -> None:
+        part = self.bounds.lookup(tenant_id)
+        # Scrub before the slots can be re-issued to another tenant.
+        self.arena.zero_range(part.base, part.size)
+        self.bounds.destroy(tenant_id)
+        self._suballoc.pop(tenant_id, None)
+        self._queues.pop(tenant_id, None)
+        self._clients.pop(tenant_id, None)
+        self._part_scalars.pop(tenant_id, None)
+
+    def fence_params_for(self, tenant_id: str) -> FenceParams:
+        part = self.bounds.lookup(tenant_id)
+        return FenceParams.from_partition(part)
+
+    def _scalars_for(self, tenant_id: str, part: Partition):
+        """Device-staged (base, mask, size) int32 scalars per tenant."""
+        cached = self._part_scalars.get(tenant_id)
+        if cached is None or cached[3] != (part.base, part.size):
+            cached = (jnp.int32(part.base), jnp.int32(part.mask),
+                      jnp.int32(part.size), (part.base, part.size))
+            self._part_scalars[tenant_id] = cached
+        return cached[:3]
+
+    @property
+    def standalone(self) -> bool:
+        return len(self.bounds) <= 1
+
+    def _effective_policy(self) -> FencePolicy:
+        if (self.standalone and self.standalone_fast_path
+                and self.policy is not FencePolicy.CHECK):
+            return FencePolicy.NONE  # §4.2.3 native fast path
+        return self.policy
+
+    # ------------------------------------------------------------------ #
+    # Memory management (§4.2.1, §4.2.2)                                 #
+    # ------------------------------------------------------------------ #
+    def malloc(self, tenant_id: str, n_slots: int) -> DevicePtr:
+        sub = self._suballoc.get(tenant_id)
+        if sub is None:
+            raise UnknownTenant(tenant_id)
+        rel = sub.alloc(n_slots)
+        part = self.bounds.lookup(tenant_id)
+        return DevicePtr(tenant_id=tenant_id, addr=part.base + rel,
+                         length=n_slots)
+
+    def free(self, tenant_id: str, ptr: DevicePtr) -> None:
+        sub = self._suballoc.get(tenant_id)
+        if sub is None:
+            raise UnknownTenant(tenant_id)
+        part = self.bounds.lookup(tenant_id)
+        self._validate_range(tenant_id, ptr.addr, ptr.length, "cudaFree")
+        sub.free(ptr.addr - part.base)
+
+    def _validate_range(self, tenant_id: str, addr: int, length: int,
+                        api: str) -> Partition:
+        """§4.2.2: every host-initiated transfer is checked against the
+        partition bounds table.  Fail-closed on any mismatch."""
+        part = self.bounds.lookup(tenant_id)
+        if length < 0 or not part.contains(addr, addr + max(length, 0)):
+            msg = (f"{api}: tenant {tenant_id!r} range [{addr},"
+                   f"{addr + length}) outside partition "
+                   f"[{part.base},{part.end})")
+            self.violations.append(msg)
+            raise GuardianViolation(msg)
+        return part
+
+    def memcpy_h2d(self, tenant_id: str, ptr: DevicePtr,
+                   host: np.ndarray) -> None:
+        flat = np.asarray(host).reshape(-1).astype(
+            self.arena.spec.dtype)
+        self._validate_range(tenant_id, ptr.addr, flat.size, "cudaMemcpyH2D")
+        if self.mode is SharingMode.SPATIAL:
+            self._enqueue(tenant_id, "h2d", (ptr.addr, flat))
+        else:
+            self.arena.unsafe_write_range(ptr.addr, jnp.asarray(flat))
+
+    def memcpy_d2h(self, tenant_id: str, ptr: DevicePtr,
+                   n_slots: Optional[int] = None) -> np.ndarray:
+        n = ptr.length if n_slots is None else n_slots
+        self._validate_range(tenant_id, ptr.addr, n, "cudaMemcpyD2H")
+        self.run_queued()  # reads are synchronizing, like cudaMemcpy
+        return np.asarray(self.arena.unsafe_read_range(ptr.addr, n))
+
+    def memcpy_d2d(self, tenant_id: str, dst: DevicePtr, src: DevicePtr,
+                   n_slots: int) -> None:
+        # check destination AND source (§4.2.2: "we check the destination
+        # and/or the source pointers")
+        self._validate_range(tenant_id, src.addr, n_slots, "cudaMemcpyD2D")
+        self._validate_range(tenant_id, dst.addr, n_slots, "cudaMemcpyD2D")
+        if self.mode is SharingMode.SPATIAL:
+            self._enqueue(tenant_id, "d2d", (dst.addr, src.addr, n_slots))
+        else:
+            data = self.arena.unsafe_read_range(src.addr, n_slots)
+            self.arena.unsafe_write_range(dst.addr, data)
+
+    # ------------------------------------------------------------------ #
+    # Kernel registration & launch (§4.2.3, §4.3)                        #
+    # ------------------------------------------------------------------ #
+    def register_kernel(self, name: str, fn: Callable,
+                        arena_argnums: Sequence[int] = (0,)) -> None:
+        """Offline sandboxing + compile-at-init (§4.3, §4.4).
+
+        ``fn(arena, *args) -> (new_arena, out)`` — the functional-update
+        convention; ``out`` may be any pytree (use ``None`` for stores-only
+        kernels).  Registration *fails closed* if the sandboxer cannot
+        instrument the kernel.
+        """
+        if name in self.pointer_to_symbol:
+            return  # idempotent: many clients may load the same module
+
+        arena_argnums = tuple(arena_argnums)
+        sandboxed = sandbox(fn, arena_argnums=arena_argnums,
+                            policy=FencePolicy.BITWISE)
+        checked = sandbox(fn, arena_argnums=arena_argnums,
+                          policy=FencePolicy.CHECK)
+
+        def fenced_entry(arena, base, mask, *args):
+            # the two extra kernel parameters of Listing 1
+            fp = FenceParams(base=base, size=mask + 1)
+            out, ok = sandboxed(fp, arena, *args)
+            return out
+
+        def checked_entry(arena, base, size, *args):
+            fp = FenceParams(base=base, size=size)
+            return checked(fp, arena, *args)   # (out, ok)
+
+        entry = _KernelEntry(
+            name=name, fn=fn, arena_argnums=arena_argnums,
+            native=fn,
+            fenced_dyn=fenced_entry,
+            checked_dyn=checked_entry,
+        )
+        self.pointer_to_symbol[name] = entry
+
+    def _modulo_exec(self, entry: _KernelEntry, part: Partition) -> Callable:
+        key = (part.base, part.size)
+        if key not in entry.modulo_static:
+            fp = FenceParams(base=part.base, size=part.size)
+            sb = sandbox(entry.fn, arena_argnums=entry.arena_argnums,
+                         policy=FencePolicy.MODULO)
+
+            def modulo_entry(arena, *args, _sb=sb, _fp=fp):
+                out, ok = _sb(_fp, arena, *args)
+                return out
+
+            entry.modulo_static[key] = modulo_entry
+        return entry.modulo_static[key]
+
+    def launch_kernel(self, tenant_id: str, name: str,
+                      ptrs: Sequence[DevicePtr] = (),
+                      args: Sequence[Any] = (),
+                      enqueue: bool = False) -> Any:
+        # -- lookup (Table 5 "Lookup GPU kernel") ------------------------
+        t0 = time.perf_counter_ns()
+        entry = self.pointer_to_symbol.get(name)
+        if entry is None:
+            raise GuardianViolation(
+                f"unknown kernel {name!r}: symbol not in grdLib "
+                "(application would fail to start, §4.1)")
+        part = self.bounds.lookup(tenant_id)
+        t1 = time.perf_counter_ns()
+
+        # -- augment params (Table 5 "Augment kernel params") ------------
+        ptr_args = tuple(p.addr_device for p in ptrs)
+        policy = self._effective_policy()
+        if policy is FencePolicy.NONE:
+            call_args = (*ptr_args, *args)
+            fn = _specialized_jit(entry, "native", entry.native, call_args)
+        elif policy is FencePolicy.BITWISE:
+            base_s, mask_s, _ = self._scalars_for(tenant_id, part)
+            call_args = (base_s, mask_s, *ptr_args, *args)
+            fn = _specialized_jit(entry, "bitwise", entry.fenced_dyn,
+                                  call_args)
+        elif policy is FencePolicy.MODULO:
+            raw = self._modulo_exec(entry, part)
+            call_args = (*ptr_args, *args)
+            fn = _specialized_jit(entry, f"mod{part.base}.{part.size}",
+                                  raw, call_args)
+        elif policy is FencePolicy.CHECK:
+            base_s, _, size_s = self._scalars_for(tenant_id, part)
+            call_args = (base_s, size_s, *ptr_args, *args)
+            fn = _specialized_jit(entry, "check", entry.checked_dyn,
+                                  call_args)
+        else:  # pragma: no cover
+            raise ValueError(policy)
+        call = (fn, call_args)
+        t2 = time.perf_counter_ns()
+
+        self.launch_stats.lookup_ns.append(t1 - t0)
+        self.launch_stats.augment_ns.append(t2 - t1)
+
+        if enqueue or self.mode is SharingMode.SPATIAL:
+            self._enqueue(tenant_id, "launch", (name, policy, call))
+            return None
+        return self._execute_launch(tenant_id, name, policy, call)
+
+    def _execute_launch(self, tenant_id: str, name: str,
+                        policy: FencePolicy, call) -> Any:
+        fn, params = call
+        t0 = time.perf_counter_ns()
+        result = fn(self.arena.buf, *params)
+        self.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+        if policy is FencePolicy.CHECK:
+            (new_arena, out), ok = result
+            if not bool(ok):
+                msg = (f"kernel {name!r} of tenant {tenant_id!r} performed "
+                       "an out-of-bounds access (detected by CHECK)")
+                self.violations.append(msg)
+                raise GuardianViolation(msg)
+        else:
+            new_arena, out = result
+        self.arena.buf = new_arena
+        return out
+
+    # ------------------------------------------------------------------ #
+    # Spatial multiplexing (§4.2.4)                                      #
+    # ------------------------------------------------------------------ #
+    def _enqueue(self, tenant_id: str, kind: str, payload) -> None:
+        self._queues[tenant_id].append(_QueuedOp(tenant_id, kind, payload))
+
+    def _run_op(self, op: _QueuedOp) -> None:
+        if op.kind == "launch":
+            name, policy, call = op.payload
+            self._execute_launch(op.tenant_id, name, policy, call)
+        elif op.kind == "h2d":
+            addr, flat = op.payload
+            self.arena.unsafe_write_range(addr, jnp.asarray(flat))
+        elif op.kind == "d2d":
+            dst, src, n = op.payload
+            data = self.arena.unsafe_read_range(src, n)
+            self.arena.unsafe_write_range(dst, data)
+        else:  # pragma: no cover
+            raise ValueError(op.kind)
+
+    def run_queued(self) -> None:
+        """Drain queues per the sharing mode.
+
+        SPATIAL: round-robin one op per tenant per cycle ("selects GPU calls
+        from different applications in a round-robin fashion"); ops within a
+        tenant stay in-order, tenants interleave, JAX async dispatch overlaps
+        them on device.
+        TIME_SHARE: drain each tenant fully then block (context switch).
+        """
+        if self.mode is SharingMode.SPATIAL:
+            pending = True
+            while pending:
+                pending = False
+                for q in self._queues.values():
+                    if q:
+                        self._run_op(q.popleft())
+                        pending = pending or bool(q)
+        else:
+            for q in self._queues.values():
+                while q:
+                    self._run_op(q.popleft())
+                # context switch: full device sync between tenants
+                jax.block_until_ready(self.arena.buf)
+
+    def synchronize(self, tenant_id: Optional[str] = None) -> None:
+        self.run_queued()
+        jax.block_until_ready(self.arena.buf)
+
+    # ------------------------------------------------------------------ #
+    # Introspection                                                      #
+    # ------------------------------------------------------------------ #
+    def export_table(self, table_id: int) -> Dict[str, Any]:
+        if table_id not in self._export_tables:
+            raise GuardianViolation(
+                f"cudaGetExportTable: unknown table {table_id}")
+        return self._export_tables[table_id]
+
+    def memory_usage(self) -> Dict[str, Any]:
+        """§2.2 memory-footprint claim: one context/arena overall vs one per
+        client — report arena bytes + per-tenant live bytes."""
+        per_tenant = {
+            t: self._suballoc[t].live_bytes() for t in self.bounds.tenants()
+        }
+        return {
+            "arena_bytes": self.arena.nbytes,
+            "n_tenants": len(self.bounds),
+            "tenant_live_slots": per_tenant,
+            "free_slots": self.bounds.free_slots(),
+        }

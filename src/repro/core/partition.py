@@ -1,0 +1,251 @@
+"""Power-of-two arena partitioning — Guardian §4.2.1.
+
+Guardian reserves all device memory at startup and carves it into *contiguous,
+power-of-two sized, size-aligned* partitions, one per tenant.  Contiguity +
+pow2 alignment is what makes the bounds metadata two scalars (``base``,
+``mask = size - 1``) and the fence two bitwise instructions (§4.4).
+
+On TPU the arena is a *slot space*: slot 0..N-1 of a shared HBM tensor
+(KV pages, embedding rows, SSM state cells, MoE buffer rows).  A partition is
+a contiguous slot range.  The buddy allocator below maintains the paper's two
+invariants:
+
+  I1  size is a power of two,
+  I2  base is aligned to size  (``base % size == 0``),
+
+which together guarantee ``(x & mask) | base`` maps *any* integer into
+``[base, base + size)`` and is the identity on in-partition values.  These
+invariants are property-tested in ``tests/test_partition.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n <= 0:
+        raise ValueError(f"size must be positive, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """One tenant's contiguous slot range.  ``mask == size - 1``."""
+
+    tenant_id: str
+    base: int
+    size: int
+
+    def __post_init__(self):
+        if not is_pow2(self.size):
+            raise ValueError(f"partition size {self.size} not a power of two")
+        if self.base % self.size != 0:
+            raise ValueError(
+                f"partition base {self.base} not aligned to size {self.size}"
+            )
+
+    @property
+    def mask(self) -> int:
+        return self.size - 1
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+    def contains(self, lo: int, hi: Optional[int] = None) -> bool:
+        """Range check used for host-initiated transfers (§4.2.2)."""
+        hi = lo + 1 if hi is None else hi
+        return self.base <= lo and hi <= self.end
+
+    def bounds_row(self) -> Tuple[int, int, int]:
+        """(base, mask, size) — the row passed to kernels as scalar operands.
+
+        The paper stores these in two registers; we pass them as SMEM scalars.
+        """
+        return (self.base, self.mask, self.size)
+
+
+class OutOfArenaMemory(Exception):
+    pass
+
+
+class UnknownTenant(KeyError):
+    pass
+
+
+class BuddyAllocator:
+    """Classic buddy allocator over ``total`` slots (``total`` pow2).
+
+    Free lists per order; split on alloc, coalesce buddies on free.  All
+    blocks it hands out satisfy I1/I2 by construction.
+    """
+
+    def __init__(self, total: int):
+        if not is_pow2(total):
+            raise ValueError(f"arena total {total} must be a power of two")
+        self.total = total
+        self._max_order = total.bit_length() - 1
+        # order -> sorted list of free block bases
+        self._free: Dict[int, List[int]] = {o: [] for o in range(self._max_order + 1)}
+        self._free[self._max_order] = [0]
+        self._allocated: Dict[int, int] = {}  # base -> order
+
+    def _order_for(self, size: int) -> int:
+        return next_pow2(size).bit_length() - 1
+
+    def alloc(self, size: int) -> Tuple[int, int]:
+        """Returns (base, rounded_size).  Raises OutOfArenaMemory."""
+        order = self._order_for(size)
+        if order > self._max_order:
+            raise OutOfArenaMemory(
+                f"request {size} exceeds arena total {self.total}"
+            )
+        # Find the smallest order >= `order` with a free block.
+        o = order
+        while o <= self._max_order and not self._free[o]:
+            o += 1
+        if o > self._max_order:
+            raise OutOfArenaMemory(
+                f"no free block of {1 << order} slots (arena fragmented/full)"
+            )
+        base = self._free[o].pop(0)
+        # Split down to the requested order.
+        while o > order:
+            o -= 1
+            buddy = base + (1 << o)
+            self._free[o].append(buddy)
+            self._free[o].sort()
+        self._allocated[base] = order
+        return base, 1 << order
+
+    def free(self, base: int) -> None:
+        if base not in self._allocated:
+            raise KeyError(f"free of unallocated base {base}")
+        order = self._allocated.pop(base)
+        # Coalesce with buddy while possible.
+        while order < self._max_order:
+            buddy = base ^ (1 << order)
+            if buddy in self._free[order]:
+                self._free[order].remove(buddy)
+                base = min(base, buddy)
+                order += 1
+            else:
+                break
+        self._free[order].append(base)
+        self._free[order].sort()
+
+    def free_slots(self) -> int:
+        return sum(len(v) << o for o, v in self._free.items())
+
+
+class PartitionBoundsTable:
+    """Guardian's *partition bounds table* (§4.2.1).
+
+    Maps tenant -> Partition and exports the dense (base, mask, size) arrays
+    that kernels consume as scalar operands.  Thread-safe: the manager mutates
+    it from the control thread while launch paths read it.
+    """
+
+    def __init__(self, total_slots: int):
+        self.total_slots = total_slots
+        self._alloc = BuddyAllocator(total_slots)
+        self._parts: Dict[str, Partition] = {}
+        self._lock = threading.Lock()
+
+    def create(self, tenant_id: str, requested_slots: int) -> Partition:
+        with self._lock:
+            if tenant_id in self._parts:
+                raise ValueError(f"tenant {tenant_id!r} already has a partition")
+            base, size = self._alloc.alloc(requested_slots)
+            part = Partition(tenant_id=tenant_id, base=base, size=size)
+            self._parts[tenant_id] = part
+            return part
+
+    def destroy(self, tenant_id: str) -> None:
+        with self._lock:
+            part = self._parts.pop(tenant_id, None)
+            if part is None:
+                raise UnknownTenant(tenant_id)
+            self._alloc.free(part.base)
+
+    def lookup(self, tenant_id: str) -> Partition:
+        try:
+            return self._parts[tenant_id]
+        except KeyError:
+            raise UnknownTenant(tenant_id) from None
+
+    def tenants(self) -> List[str]:
+        return list(self._parts)
+
+    def __len__(self) -> int:
+        return len(self._parts)
+
+    def free_slots(self) -> int:
+        return self._alloc.free_slots()
+
+    def bounds_arrays(self) -> Dict[str, np.ndarray]:
+        """Dense arrays (one row per tenant, sorted by id) — for batched
+        multi-tenant kernels that fence per-row with a tenant-id lookup."""
+        ids = sorted(self._parts)
+        base = np.array([self._parts[t].base for t in ids], dtype=np.int32)
+        mask = np.array([self._parts[t].mask for t in ids], dtype=np.int32)
+        size = np.array([self._parts[t].size for t in ids], dtype=np.int32)
+        return {"tenant_ids": ids, "base": base, "mask": mask, "size": size}
+
+
+class IntraPartitionAllocator:
+    """First-fit free-list allocator *within* one partition.
+
+    Serves a tenant's malloc()/free() calls from its own partition
+    (§4.2.1: "allocation calls of each application are served from its
+    partition").  No cross-tenant metadata — everything here is in
+    partition-relative slot units.
+    """
+
+    def __init__(self, part: Partition):
+        self.part = part
+        self._free: List[Tuple[int, int]] = [(0, part.size)]  # (rel_base, len)
+        self._live: Dict[int, int] = {}  # rel_base -> len
+
+    def alloc(self, n: int) -> int:
+        if n <= 0:
+            raise ValueError("alloc size must be positive")
+        for i, (b, ln) in enumerate(self._free):
+            if ln >= n:
+                if ln == n:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (b + n, ln - n)
+                self._live[b] = n
+                return b
+        raise OutOfArenaMemory(
+            f"tenant {self.part.tenant_id!r}: no {n} contiguous free slots"
+        )
+
+    def free(self, rel_base: int) -> None:
+        n = self._live.pop(rel_base, None)
+        if n is None:
+            raise KeyError(f"free of unallocated offset {rel_base}")
+        self._free.append((rel_base, n))
+        self._free.sort()
+        # coalesce
+        merged: List[Tuple[int, int]] = []
+        for b, ln in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == b:
+                merged[-1] = (merged[-1][0], merged[-1][1] + ln)
+            else:
+                merged.append((b, ln))
+        self._free = merged
+
+    def live_bytes(self) -> int:
+        return sum(self._live.values())

@@ -1,0 +1,341 @@
+"""Jaxpr-level kernel sandboxing — the "PTX-patcher" analogue (Guardian §4.3).
+
+The paper instruments the *virtual assembly* (PTX) of every GPU kernel —
+including kernels inside closed-source libraries — inserting fence
+instructions before every load/store.  The JAX analogue of "a kernel you
+cannot modify at source level" is a **traced jaxpr**: third-party callables
+are opaque Python, but their jaxpr is always available (the same way PTX is
+always embedded for forward compatibility).
+
+``sandbox(fn, arena_argnums)`` walks the traced jaxpr of ``fn`` and rewrites
+every *data-dependent access into an arena-derived operand*:
+
+    gather / scatter(-add/-mul/-min/-max) ........ fence the index columns
+                                                    that address slot dim 0
+    dynamic_slice / dynamic_update_slice ......... fence + pin the dim-0 start
+
+Static accesses (``slice``, constant indices) are proven in-bounds by XLA at
+compile time — the exact analogue of the paper treating direct branches as
+safe while fencing register-addressed loads.  Indexing into *tenant-private*
+tensors cannot reach the arena (separate XLA buffers, clamped OOB), matching
+the paper's observation that host memory is safe via process isolation.
+
+Taint tracking mirrors "which PTX register holds a global pointer": an
+operand is fenced iff it is the arena argument or derived from it through
+layout-preserving ops (convert/reshape keeping dim 0/transpose keeping dim 0
+leading/copy).  Scatter outputs remain tainted (the arena flows through);
+gather outputs are *values*, not slot space, so taint stops there.
+
+Call primitives (``jit``/``pjit``, ``custom_jvp/vjp``, ``remat``,
+``closed_call``) are interpreted recursively, so fences land inside library
+wrappers — the paper's "implicit calls of cuBLAS" case.  ``scan/while/cond``
+inside tenant kernels are rejected with a clear error: at the jaxpr level
+their branch sets are static (the paper's safe direct branches), but their
+carried slot-spaces would need per-iteration fencing; tenants use the
+manager's guarded ops for those patterns instead (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Sequence, Set, Tuple
+
+import jax
+import jax.extend.core as jex_core
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.fence import FenceParams, FencePolicy, apply_fence
+
+# Primitives through which "this value IS the arena slot space" propagates.
+_TAINT_TRANSPARENT = {
+    "convert_element_type",
+    "copy",
+    "reshape",       # conservatively: only if dim0 preserved (checked below)
+    "transpose",     # only if dim0 stays leading
+    "stop_gradient",
+    "reduce_precision",
+}
+
+# Scatter-family primitives: operand 0 is the arena, operand 1 the indices.
+_SCATTER_PRIMS = {
+    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+    "scatter_add", "scatter_apply",
+}
+
+# Call-like primitives we interpret recursively (jaxpr param name varies).
+_CALL_PRIMS = {
+    "jit": "jaxpr",
+    "pjit": "jaxpr",
+    "closed_call": "call_jaxpr",
+    "custom_jvp_call": "call_jaxpr",
+    "custom_vjp_call": "call_jaxpr",
+    "custom_vjp_call_jaxpr": "fun_jaxpr",
+    "remat": "jaxpr",
+    "checkpoint": "jaxpr",
+}
+
+_UNSUPPORTED = {"scan", "while", "cond"}
+
+
+class SandboxError(Exception):
+    """Raised when a tenant kernel uses a construct the sandboxer cannot
+    prove safe (the manager refuses the kernel at registration time —
+    fail-closed, like grdManager refusing an unknown CUDA symbol)."""
+
+
+@dataclasses.dataclass
+class SandboxReport:
+    """What the patcher did — Table 3 analogue (#loads/#stores safeguarded)."""
+
+    fenced_gathers: int = 0
+    fenced_scatters: int = 0
+    fenced_dynamic_slices: int = 0
+    fenced_dynamic_updates: int = 0
+    total_eqns: int = 0
+
+    @property
+    def fenced_total(self) -> int:
+        return (self.fenced_gathers + self.fenced_scatters
+                + self.fenced_dynamic_slices + self.fenced_dynamic_updates)
+
+
+def _read(env: Dict[Any, Any], v) -> Any:
+    if isinstance(v, jex_core.Literal):
+        return v.val
+    return env[v]
+
+
+def _is_tainted(taint: Dict[Any, bool], v) -> bool:
+    if isinstance(v, jex_core.Literal):
+        return False
+    return taint.get(v, False)
+
+
+def _fence_index_columns(
+    indices: jax.Array,
+    cols: Sequence[int],
+    params: FenceParams,
+    policy: FencePolicy,
+    oks: List[jax.Array],
+) -> jax.Array:
+    """Fence the given trailing-dim columns of a gather/scatter index array."""
+    if indices.ndim == 0:
+        fenced, ok = apply_fence(policy, indices, params)
+        if ok is not None:
+            oks.append(jnp.all(ok))
+        return fenced.astype(indices.dtype)
+    out = indices
+    for c in cols:
+        col = indices[..., c]
+        fenced, ok = apply_fence(policy, col, params)
+        if ok is not None:
+            oks.append(jnp.all(ok))
+        out = out.at[..., c].set(fenced.astype(indices.dtype))
+    return out
+
+
+def _interpret(
+    closed: Any,  # ClosedJaxpr
+    args: Sequence[Any],
+    tainted_in: Sequence[bool],
+    params: FenceParams,
+    policy: FencePolicy,
+    report: SandboxReport,
+    oks: List[jax.Array],
+) -> Tuple[List[Any], List[bool]]:
+    jaxpr = closed.jaxpr
+    env: Dict[Any, Any] = {}
+    taint: Dict[Any, bool] = {}
+
+    for var, val in zip(jaxpr.constvars, closed.consts):
+        env[var] = val
+        taint[var] = False
+    assert len(jaxpr.invars) == len(args), (len(jaxpr.invars), len(args))
+    for var, val, t in zip(jaxpr.invars, args, tainted_in):
+        env[var] = val
+        taint[var] = t
+
+    for eqn in jaxpr.eqns:
+        report.total_eqns += 1
+        name = eqn.primitive.name
+        invals = [_read(env, v) for v in eqn.invars]
+        intaints = [_is_tainted(taint, v) for v in eqn.invars]
+
+        if name in _UNSUPPORTED and any(intaints):
+            raise SandboxError(
+                f"tenant kernel routes the shared arena through `{name}`; "
+                "use the manager's guarded ops for loop-carried arena state"
+            )
+
+        out_taint = False
+
+        if name in _CALL_PRIMS:
+            sub = eqn.params.get(_CALL_PRIMS[name])
+            if sub is None:  # fall back to any ClosedJaxpr-valued param
+                sub = next(v for v in eqn.params.values()
+                           if hasattr(v, "jaxpr"))
+            outvals, out_taints = _interpret(sub, invals, intaints, params,
+                                             policy, report, oks)
+            for var, val, t in zip(eqn.outvars, outvals, out_taints):
+                env[var] = val
+                taint[var] = t
+            continue
+
+        if name == "gather" and intaints[0]:
+            dnums = eqn.params["dimension_numbers"]
+            cols = [j for j, d in enumerate(dnums.start_index_map) if d == 0]
+            if cols:
+                invals = list(invals)
+                invals[1] = _fence_index_columns(
+                    jnp.asarray(invals[1]), cols, params, policy, oks)
+                report.fenced_gathers += 1
+            out_taint = False  # gathered *values*, not slot space
+
+        elif name in _SCATTER_PRIMS and intaints[0]:
+            dnums = eqn.params["dimension_numbers"]
+            cols = [j for j, d in
+                    enumerate(dnums.scatter_dims_to_operand_dims) if d == 0]
+            if cols:
+                invals = list(invals)
+                invals[1] = _fence_index_columns(
+                    jnp.asarray(invals[1]), cols, params, policy, oks)
+                report.fenced_scatters += 1
+            out_taint = True  # the arena flows through a scatter
+
+        elif name == "dynamic_slice" and intaints[0]:
+            sizes = eqn.params["slice_sizes"]
+            invals = list(invals)
+            start0, ok = apply_fence(policy, jnp.asarray(invals[1]), params)
+            if ok is not None:
+                oks.append(jnp.all(ok))
+            hi = jnp.maximum(
+                jnp.asarray(params.base + params.size - sizes[0], jnp.int32),
+                jnp.asarray(params.base, jnp.int32))
+            invals[1] = jnp.minimum(start0, hi).astype(
+                jnp.asarray(invals[1]).dtype)
+            report.fenced_dynamic_slices += 1
+            out_taint = False
+
+        elif name == "dynamic_update_slice" and intaints[0]:
+            invals = list(invals)
+            upd_len = jnp.shape(invals[1])[0] if jnp.ndim(invals[1]) else 1
+            start0, ok = apply_fence(policy, jnp.asarray(invals[2]), params)
+            if ok is not None:
+                oks.append(jnp.all(ok))
+            hi = jnp.maximum(
+                jnp.asarray(params.base + params.size - upd_len, jnp.int32),
+                jnp.asarray(params.base, jnp.int32))
+            invals[2] = jnp.minimum(start0, hi).astype(
+                jnp.asarray(invals[2]).dtype)
+            report.fenced_dynamic_updates += 1
+            out_taint = True
+
+        elif name in _TAINT_TRANSPARENT and intaints[0]:
+            if name == "reshape":
+                old = jnp.shape(invals[0])
+                new = eqn.params.get("new_sizes", None)
+                out_taint = bool(old and new and old[0] == new[0])
+            elif name == "transpose":
+                perm = eqn.params.get("permutation", ())
+                out_taint = bool(perm) and perm[0] == 0
+            else:
+                out_taint = True
+
+        outvals = eqn.primitive.bind(*invals, **eqn.params)
+        if not eqn.primitive.multiple_results:
+            outvals = [outvals]
+        for var, val in zip(eqn.outvars, outvals):
+            env[var] = val
+            taint[var] = out_taint
+
+    outs = [_read(env, v) for v in jaxpr.outvars]
+    out_taints = [_is_tainted(taint, v) for v in jaxpr.outvars]
+    return outs, out_taints
+
+
+def sandbox(
+    fn: Callable,
+    arena_argnums: Sequence[int] = (0,),
+    policy: FencePolicy = FencePolicy.BITWISE,
+) -> Callable:
+    """Instrument ``fn`` so every dynamic access to the arena args is fenced.
+
+    Returns ``sandboxed(fence_params, *args) -> (outputs, ok)`` where ``ok``
+    is a scalar bool: True unless the CHECK policy observed a violation
+    (fencing policies always return True — they contain, not detect).
+
+    The returned callable is trace-time instrumented: wrap it in ``jax.jit``
+    once and the fences compile into the kernel (the paper compiles the
+    sandboxed PTX at manager init, §4.4).
+    """
+    arena_set = frozenset(arena_argnums)
+
+    @functools.wraps(fn)
+    def sandboxed(fence_params: FenceParams, *args):
+        # size-like python scalars stay static (CUDA-launch-dim analogue);
+        # only arrays/tracers become jaxpr inputs.
+        dyn_pos = [i for i, a in enumerate(args)
+                   if isinstance(a, (jax.Array, np.ndarray))
+                   or isinstance(a, jax.core.Tracer)]
+        dyn_args = [args[p] for p in dyn_pos]
+
+        def fn_dyn(*dargs):
+            full = list(args)
+            for p, v in zip(dyn_pos, dargs):
+                full[p] = v
+            return fn(*full)
+
+        closed = jax.make_jaxpr(fn_dyn)(*dyn_args)
+        flat_args, _ = jax.tree_util.tree_flatten(dyn_args)
+        # map leaf taint: every leaf of an arena-argnum pytree is tainted
+        taints: List[bool] = []
+        for p, a in zip(dyn_pos, dyn_args):
+            leaves = jax.tree_util.tree_leaves(a)
+            taints.extend([p in arena_set] * len(leaves))
+        report = SandboxReport()
+        oks: List[jax.Array] = []
+        outs, _ = _interpret(closed, flat_args, taints, fence_params, policy,
+                             report, oks)
+        ok = jnp.all(jnp.stack(oks)) if oks else jnp.bool_(True)
+        out_tree = jax.tree_util.tree_structure(
+            jax.eval_shape(fn_dyn, *dyn_args)
+        )
+        return jax.tree_util.tree_unflatten(out_tree, outs), ok
+
+    return sandboxed
+
+
+def sandbox_report(
+    fn: Callable,
+    example_args: Sequence[Any],
+    arena_argnums: Sequence[int] = (0,),
+    policy: FencePolicy = FencePolicy.BITWISE,
+) -> SandboxReport:
+    """Dry-run the patcher and report how many accesses were safeguarded
+    (Table 3: "#total loads / #total stores ... identified and safeguarded")."""
+    example_args = tuple(example_args)
+    dyn_pos = [i for i, a in enumerate(example_args)
+               if isinstance(a, (jax.Array, np.ndarray))
+               or isinstance(a, jax.core.Tracer)]
+    dyn_args = [example_args[p] for p in dyn_pos]
+
+    def fn_dyn(*dargs):
+        full = list(example_args)
+        for p, v in zip(dyn_pos, dargs):
+            full[p] = v
+        return fn(*full)
+
+    closed = jax.make_jaxpr(fn_dyn)(*dyn_args)
+    flat_args, _ = jax.tree_util.tree_flatten(dyn_args)
+    taints: List[bool] = []
+    arena_set = frozenset(arena_argnums)
+    for p, a in zip(dyn_pos, dyn_args):
+        leaves = jax.tree_util.tree_leaves(a)
+        taints.extend([p in arena_set] * len(leaves))
+    report = SandboxReport()
+    oks: List[jax.Array] = []
+    dummy = FenceParams(base=0, size=1)
+    _interpret(closed, flat_args, taints, dummy, policy, report, oks)
+    return report

@@ -1,0 +1,20 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    constrain,
+    logical_sharding,
+    make_rules,
+    pp_cut_points,
+)
+from repro.distributed.compress import (
+    compress_roundtrip,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+    tree_compress_psum,
+)
+
+__all__ = [
+    "ShardingRules", "constrain", "logical_sharding", "make_rules",
+    "pp_cut_points", "compress_roundtrip", "dequantize_int8",
+    "init_error_feedback", "quantize_int8", "tree_compress_psum",
+]

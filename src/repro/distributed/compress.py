@@ -1,0 +1,97 @@
+"""Gradient compression for cross-pod reduction — int8 quantize + error
+feedback.
+
+On a 2-pod mesh the gradient all-reduce spans the data-center interconnect
+(DCI), which is ~10x slower than intra-pod ICI.  We compress the *pod-axis*
+contribution: per-tensor-block int8 quantization with error feedback
+(residual carried to the next step), which empirically preserves
+convergence for transformer LM training at 4x byte reduction.
+
+The intra-pod reduction stays full-precision (ICI is cheap); only the
+cross-pod psum sees int8.  Usage::
+
+    grads, err = compress_psum_pod(grads, err, axis_name="pod")
+
+inside a shard_map'd step, or via ``tree_compress_decompress`` for the
+jit-level path (quantize -> psum -> dequantize, letting GSPMD place the
+collective).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256  # quantization block (lanes) — one scale per block
+
+
+def _pad_to(x: jax.Array, mult: int) -> Tuple[jax.Array, int]:
+    n = x.size
+    rem = (-n) % mult
+    flat = x.reshape(-1)
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), x.dtype)])
+    return flat, n
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
+    """Blockwise symmetric int8: returns (q, scales, orig_size)."""
+    flat, n = _pad_to(x.astype(jnp.float32), _BLOCK)
+    blocks = flat.reshape(-1, _BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, n: int,
+                    shape, dtype) -> jax.Array:
+    x = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return x.reshape(shape).astype(dtype)
+
+
+def compress_roundtrip(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """quantize->dequantize; returns (approx, residual). Residual is the
+    error-feedback term added to the *next* step's gradient."""
+    q, s, n = quantize_int8(x)
+    approx = dequantize_int8(q, s, n, x.shape, x.dtype)
+    return approx, (x - approx).astype(x.dtype)
+
+
+def tree_compress_psum(grads, err, axis_name: str):
+    """Error-feedback int8 mean over ``axis_name`` (use inside shard_map).
+
+    The *wire payload* is the int8 codes + f32 block scales (≈4x fewer
+    bytes than an f32 all-reduce): quantize → all_gather(int8, scales)
+    → dequantize each peer's shard locally → mean.
+
+    g_eff = g + err;  q, s = Q(g_eff);
+    out = mean_over_axis(deQ(q, s));  err' = g_eff - deQ(q, s)
+    """
+    size = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g_eff = g + e.astype(g.dtype)
+        q, s, n = quantize_int8(g_eff)
+        # int8 codes + scales cross the link — not f32 tensors
+        q_all = jax.lax.all_gather(q, axis_name)       # (P, blocks, B)
+        s_all = jax.lax.all_gather(s, axis_name)
+        local = dequantize_int8(q, s, n, g_eff.shape, jnp.float32)
+        resid = (g_eff.astype(jnp.float32) - local).astype(g.dtype)
+        total = jnp.sum(
+            (q_all.astype(jnp.float32) * s_all), axis=0)
+        red = total.reshape(-1)[:n].reshape(g_eff.shape) / size
+        return red.astype(g.dtype), resid
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return red, new_err
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, g.dtype), grads)

@@ -1,0 +1,124 @@
+"""Sharding rules — DP / FSDP / TP / EP / SP mapping for every arch.
+
+Logical-axis based: every parameter and activation carries a tuple of
+*logical axis names*; :class:`ShardingRules` maps logical names to mesh axis
+names (or None = replicate).  ``pspec(rules, logical)`` produces the
+``PartitionSpec`` and ``NamedSharding``.
+
+Default production mapping (single pod, mesh ``(data=16, model=16)``):
+
+    batch        -> ("pod"?, "data")      DP over pod×data
+    vocab        -> "model"               TP embedding / lm-head
+    embed (d_model rows of weight mats) -> "data" when fsdp else None (FSDP)
+    heads        -> "model"               TP attention (padded if ∤)
+    kv_heads     -> "model"
+    ffn          -> "model"               TP MLP (column/row parallel)
+    expert       -> "model"               EP: experts over model axis
+    seq          -> None (activations) — SP optionally maps it to "model"
+                    for 32k prefill (sequence parallelism)
+    pages        -> "data"                paged-KV pool sharded over hosts
+    state        -> "data"                SSM state cells per data shard
+
+PP note: the ``pod`` axis is reserved as the pipeline axis for >2-pod
+deployments; cut points are between equal-depth layer groups (scan unroll
+boundaries).  For the assigned shapes scan+FSDP fits every cell, so PP
+stays off (documented in DESIGN.md §Distribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis name -> mesh axis (str | tuple | None)."""
+
+    rules: Tuple[Tuple[str, object], ...]
+
+    def lookup(self, logical: str):
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...]) -> P:
+        return P(*(self.lookup(a) if a is not None else None
+                   for a in logical_axes))
+
+    def sharding(self, mesh: Mesh,
+                 logical_axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes))
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True,
+               seq_parallel: bool = False) -> ShardingRules:
+    """Build the production rule-set for the given mesh.
+
+    ``data_axes`` folds the optional ``pod`` axis into data parallelism so
+    the same rules serve the single-pod (16,16) and multi-pod (2,16,16)
+    meshes.  ``fsdp`` additionally shards the d_model ("embed") dimension of
+    weights over the data axes — parameters are then fully sharded over all
+    chips (ZeRO-3); GSPMD inserts the per-layer all-gathers.
+    """
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    data_axes = ("pod", "data") if has_pod else ("data",)
+    batch = data_axes if len(data_axes) > 1 else data_axes[0]
+    rules = [
+        ("batch", batch),
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("ffn", "model"),
+        ("expert", "model"),
+        ("embed", batch if fsdp else None),
+        ("embed_nofsdp", None),
+        ("head_dim", None),
+        ("state", None),
+        ("seq", "model" if seq_parallel else None),
+        ("kv_seq", None),
+        ("pages", batch),
+        ("page", None),
+        ("conv", None),
+    ]
+    return ShardingRules(rules=tuple(rules))
+
+
+def logical_sharding(mesh: Mesh, rules: ShardingRules, tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.sharding(mesh, axes), tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def constrain(x: jax.Array, rules: ShardingRules,
+              logical_axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, rules.spec(logical_axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel cut points (documented, off by default — see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def pp_cut_points(n_layers: int, n_stages: int) -> Tuple[int, ...]:
+    """Equal-depth layer boundaries where the scan would be split if the
+    ``pod`` axis were used for pipeline parallelism."""
+    per = n_layers // n_stages
+    rem = n_layers % n_stages
+    cuts, acc = [], 0
+    for s in range(n_stages - 1):
+        acc += per + (1 if s < rem else 0)
+        cuts.append(acc)
+    return tuple(cuts)

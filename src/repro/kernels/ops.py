@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively (``interpret=False``); on CPU (this
+container, and the test suite) they run in interpret mode, which executes
+the kernel body in Python — bit-compatible semantics, validated against
+``ref.py`` in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fenced_gather import fenced_gather as _gather
+from repro.kernels.fenced_paged_attention import (
+    fenced_paged_attention as _paged,
+)
+from repro.kernels.fenced_scatter import fenced_scatter as _scatter
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_dispatch import moe_histogram as _hist
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                    fence_base, fence_mask):
+    return _paged(q, k_pages, v_pages, page_table, seq_lens,
+                  fence_base, fence_mask, interpret=not _on_tpu())
+
+
+def gather_rows(table, idx, fence_base, fence_mask):
+    return _gather(table, idx, fence_base, fence_mask,
+                   interpret=not _on_tpu())
+
+
+def scatter_pages(pool, pages, page_ids, fence_base, fence_mask):
+    return _scatter(pool, pages, page_ids, fence_base, fence_mask,
+                    interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal=True, q_blk=128, kv_blk=128):
+    return _flash(q, k, v, causal=causal, q_blk=q_blk, kv_blk=kv_blk,
+                  interpret=not _on_tpu())
+
+
+def moe_histogram(expert_ids, num_experts, fence_base, fence_mask):
+    return _hist(expert_ids, num_experts, fence_base, fence_mask,
+                 interpret=not _on_tpu())

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function implements the exact semantics of its kernel — including
+the Guardian fence — with plain jax.numpy, so tests can
+``assert_allclose`` kernel output against it across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fence_ref(idx, base, mask):
+    return jnp.bitwise_or(jnp.bitwise_and(idx, mask), base)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                        fence_base, fence_mask):
+    """q (B,H,D); pools (P,page,KH,D) -> (B,H,D).  float32 math."""
+    B, H, D = q.shape
+    P_total, page, KH, _ = k_pages.shape
+    G = H // KH
+    max_pages = page_table.shape[1]
+    phys = fence_ref(page_table, fence_base[:, None], fence_mask[:, None])
+    k = k_pages[phys]                    # (B, max_pages, page, KH, D)
+    v = v_pages[phys]
+    S = max_pages * page
+    k = k.reshape(B, S, KH, D).astype(jnp.float32)
+    v = v.reshape(B, S, KH, D).astype(jnp.float32)
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    mask = pos[None, :] < seq_lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def gather_rows_ref(table, idx, fence_base, fence_mask):
+    """Fenced embedding-row gather: table (V, D), idx (N,) -> (N, D)."""
+    fenced = fence_ref(idx.astype(jnp.int32), fence_base, fence_mask)
+    return jnp.take(table, fenced, axis=0)
+
+
+def scatter_pages_ref(pool, pages, page_ids, fence_base, fence_mask):
+    """Fenced page write: pool (P,page,KH,D); pages (N,page,KH,D);
+    page_ids (N,) -> updated pool."""
+    fenced = fence_ref(page_ids.astype(jnp.int32), fence_base, fence_mask)
+    return pool.at[fenced].set(pages.astype(pool.dtype))
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q (B,S,H,D), k/v (B,S,KH,D) -> (B,S,H,D).  float32 math."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        pos = jnp.arange(S)
+        mask = pos[None, :] <= pos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def moe_histogram_ref(expert_ids, num_experts, fence_base, fence_mask):
+    """Fenced expert histogram: ids (T,K) -> counts (num_experts,)."""
+    fenced = fence_ref(expert_ids.astype(jnp.int32), fence_base,
+                       fence_mask)
+    return jnp.zeros((num_experts,), jnp.int32).at[fenced.reshape(-1)].add(
+        1, mode="drop")

@@ -1,0 +1,356 @@
+"""Step builders — train / prefill / decode as pjit-ready callables with
+full sharding trees.
+
+``build_step(cfg, shape, mesh, ...)`` returns a :class:`StepBundle`:
+
+    fn              the python callable (pure)
+    in_specs        pytree of ShapeDtypeStructs (the dry-run inputs)
+    in_shardings    matching NamedShardings
+    out_shardings   NamedShardings (or None -> let GSPMD choose)
+    donate_argnums  buffers that alias in-place (params/opt/cache)
+
+Used by dryrun.py (lower+compile with abstract inputs), train.py and
+serve.py (real execution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.fence import FenceParams, FencePolicy
+from repro.distributed.sharding import ShardingRules, make_rules
+from repro.models import kvcache as KV
+from repro.models.api import ModelAPI, get_model
+from repro.models.encdec import EncDecCache
+from repro.models.guard import GuardSpec
+from repro.models.hybrid import HybridCache
+from repro.optim import adamw, apply_updates, cosine
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_specs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    rules: ShardingRules
+    api: ModelAPI
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def _shard_tree(mesh: Mesh, rules: ShardingRules, axes_tree,
+                shape_tree=None):
+    """Logical axes -> NamedShardings.  When ``shape_tree`` is given,
+    dimensions whose size is not divisible by the mapped mesh-axis size
+    are replicated instead (input shardings, unlike constraints, require
+    exact divisibility)."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: rules.sharding(mesh, axes), axes_tree,
+            is_leaf=_is_axes)
+
+    def one(axes, shaped):
+        dims = tuple(shaped.shape)
+        checked = []
+        for i, logical in enumerate(axes):
+            mesh_axis = rules.lookup(logical) if logical else None
+            if mesh_axis is not None and i < len(dims) and \
+                    dims[i] % _axis_size(mesh, mesh_axis) != 0:
+                mesh_axis = None
+            checked.append(mesh_axis)
+        return NamedSharding(mesh, P(*checked))
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=_is_axes)
+
+
+def _batch_axes(specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def make_guard(cfg: ModelConfig, shape: ShapeConfig,
+               policy: FencePolicy = FencePolicy.BITWISE,
+               enabled: bool = True) -> Optional[GuardSpec]:
+    """Default single-tenant-owns-everything guard (fences still compiled
+    in — the overhead-measurement configuration).  ``enabled=False`` is the
+    paper's standalone fast path (no fence instructions emitted)."""
+    if not enabled:
+        return None
+    import math
+
+    def pow2(n):
+        return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
+
+    slots = pow2(shape.global_batch)
+    pages = pow2(max(shape.seq_len // KV.PAGE_SIZE, 1))
+    vocab = pow2(cfg.vocab)
+    expert = pow2(cfg.moe.num_experts) if cfg.moe else 0
+
+    def fp(n):
+        return FenceParams(base=0, size=n) if n else None
+
+    return GuardSpec(policy=policy, vocab=fp(vocab), kv=fp(slots),
+                     state=fp(slots), expert=fp(expert), page=fp(pages))
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding-axes trees (structure-matched to the cache pytrees)
+# ---------------------------------------------------------------------------
+
+def _kv_pool_axes(mesh: Mesh, n_kv_heads: int):
+    """(L, slots, P, page, KH, D) sharding for the KV pool.
+
+    KH shards over the model axis when divisible; otherwise the model
+    axis falls back to head_dim (all assigned archs have head_dim
+    divisible by 16) so the pool is never replicated across TP ranks."""
+    model = mesh.shape.get("model", 1)
+    if n_kv_heads % model == 0:
+        return (None, "pages", None, None, "kv_heads", None)
+    return (None, "pages", None, None, None, "heads")
+
+
+def _paged_axes(mesh, cache_shape: KV.PagedKVCache,
+                n_kv_heads: int) -> KV.PagedKVCache:
+    kv = _kv_pool_axes(mesh, n_kv_heads)
+    return KV.PagedKVCache(k=kv, v=kv, page_table=("batch", None),
+                           slot_ids=("batch",), seq_lens=("batch",))
+
+
+def _state_axes(cache_shape: KV.StateCache) -> KV.StateCache:
+    pools = {name: (None, "pages") + (None,) * (len(arr.shape) - 2)
+             for name, arr in cache_shape.pools.items()}
+    return KV.StateCache(pools=pools, slot_ids=("batch",),
+                         seq_lens=("batch",))
+
+
+def cache_axes(mesh, cfg, cache_shape):
+    if isinstance(cache_shape, KV.PagedKVCache):
+        return _paged_axes(mesh, cache_shape, cfg.n_kv_heads)
+    if isinstance(cache_shape, KV.StateCache):
+        return _state_axes(cache_shape)
+    if isinstance(cache_shape, HybridCache):
+        return HybridCache(
+            kv=_paged_axes(mesh, cache_shape.kv, cfg.n_kv_heads),
+            state=_state_axes(cache_shape.state))
+    if isinstance(cache_shape, EncDecCache):
+        model = mesh.shape.get("model", 1)
+        if cfg.n_kv_heads % model == 0:
+            cross = (None, "pages", None, "kv_heads", None)
+        else:
+            cross = (None, "pages", None, None, "heads")
+        return EncDecCache(
+            kv=_paged_axes(mesh, cache_shape.kv, cfg.n_kv_heads),
+            cross_k=cross, cross_v=cross, src_lens=("batch",))
+    raise TypeError(type(cache_shape))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     fsdp: bool = True, guard_enabled: bool = True,
+                     policy: FencePolicy = FencePolicy.BITWISE,
+                     remat: bool = True,
+                     peak_lr: float = 3e-4,
+                     moe_dispatch: str = "scatter",
+                     remat_policy: str = "nothing") -> StepBundle:
+    api = get_model(cfg)
+    rules = make_rules(mesh, fsdp=fsdp)
+    guard = make_guard(cfg, shape, policy, guard_enabled)
+    opt = adamw(cosine(peak_lr, 2_000, 100_000))
+    extra = {"dispatch": moe_dispatch,
+             "remat_policy": remat_policy} if cfg.moe else {}
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            return api.loss(p, batch, guard=guard, rules=rules,
+                            remat=remat, **extra)
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    # abstract trees
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    batch_specs = api.batch_specs(shape)
+
+    p_axes = api.param_logical_axes()
+    p_shard = _shard_tree(mesh, rules, p_axes, params_shape)
+    # optimizer state: m/v/vr/vc inherit param sharding; scalars replicated
+    rep = NamedSharding(mesh, P())
+
+    def opt_shardings(opt_tree):
+        def walk(sub, ps):
+            if isinstance(sub, dict) and ("m" in sub or "v" in sub):
+                out = {}
+                for k, v in sub.items():
+                    if k == "step":
+                        out[k] = rep
+                    else:
+                        out[k] = jax.tree.map(lambda a, s: s, v, ps) \
+                            if _same_structure(v, ps) else jax.tree.map(
+                                lambda a: rep, v)
+                return out
+            return jax.tree.map(lambda a: rep, sub)
+        return walk(opt_tree, p_shard)
+
+    def _same_structure(a, b):
+        try:
+            jax.tree.map(lambda x, y: None, a, b)
+            return True
+        except ValueError:
+            return False
+
+    o_shard = opt_shardings(opt_shape)
+    b_shard = _shard_tree(mesh, rules, _batch_axes(batch_specs),
+                          batch_specs)
+
+    return StepBundle(
+        fn=train_step,
+        in_specs=(params_shape, opt_shape, batch_specs),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard,
+                       {"loss": NamedSharding(mesh, P())}),
+        donate_argnums=(0, 1),
+        rules=rules,
+        api=api,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+_KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32,
+              "f8": jnp.float8_e4m3fn}
+
+
+def _cache_shape_for(api: ModelAPI, cfg: ModelConfig, shape: ShapeConfig,
+                     kv_dtype: str = "bf16"):
+    fam = cfg.family
+    if fam == "ssm":
+        return jax.eval_shape(
+            functools.partial(api.init_cache, shape.global_batch))
+    dt = _KV_DTYPES[kv_dtype]
+    if fam == "encdec":
+        return jax.eval_shape(functools.partial(
+            api.init_cache, shape.global_batch, shape.seq_len, dtype=dt))
+    return jax.eval_shape(functools.partial(
+        api.init_cache, shape.global_batch, shape.seq_len, dtype=dt))
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                       guard_enabled: bool = True,
+                       policy: FencePolicy = FencePolicy.BITWISE,
+                       kv_dtype: str = "bf16") -> StepBundle:
+    api = get_model(cfg)
+    rules = make_rules(mesh, fsdp=False)   # serving: weights TP-only
+    guard = make_guard(cfg, shape, policy, guard_enabled)
+
+    def prefill_step(params, cache, batch):
+        cache, logits = api.prefill(params, cache, batch, guard=guard,
+                                    rules=rules)
+        return cache, logits
+
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    cache_shape = _cache_shape_for(api, cfg, shape, kv_dtype)
+    batch_specs = api.batch_specs(shape)
+
+    p_shard = _shard_tree(mesh, rules, api.param_logical_axes(),
+                          params_shape)
+    c_shard = _shard_tree(mesh, rules, cache_axes(mesh, cfg, cache_shape),
+                          cache_shape)
+    b_shard = _shard_tree(mesh, rules, _batch_axes(batch_specs),
+                          batch_specs)
+    logits_shard = _shard_tree(mesh, rules, ("batch", "vocab"),
+                               jax.ShapeDtypeStruct(
+                                   (shape.global_batch, cfg.vocab),
+                                   jnp.float32))
+
+    return StepBundle(
+        fn=prefill_step,
+        in_specs=(params_shape, cache_shape, batch_specs),
+        in_shardings=(p_shard, c_shard, b_shard),
+        out_shardings=(c_shard, logits_shard),
+        donate_argnums=(1,),
+        rules=rules,
+        api=api,
+    )
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                      guard_enabled: bool = True,
+                      policy: FencePolicy = FencePolicy.BITWISE,
+                      kv_dtype: str = "bf16") -> StepBundle:
+    api = get_model(cfg)
+    rules = make_rules(mesh, fsdp=False)
+    guard = make_guard(cfg, shape, policy, guard_enabled)
+
+    def decode_step(params, cache, tokens):
+        cache, logits = api.decode(params, cache, tokens, guard=guard,
+                                   rules=rules)
+        return cache, logits
+
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    cache_shape = _cache_shape_for(api, cfg, shape, kv_dtype)
+    tokens_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+    p_shard = _shard_tree(mesh, rules, api.param_logical_axes(),
+                          params_shape)
+    c_shard = _shard_tree(mesh, rules, cache_axes(mesh, cfg, cache_shape),
+                          cache_shape)
+    t_shard = _shard_tree(mesh, rules, ("batch",), tokens_spec)
+    logits_shard = _shard_tree(mesh, rules, ("batch", "vocab"),
+                               jax.ShapeDtypeStruct(
+                                   (shape.global_batch, cfg.vocab),
+                                   jnp.float32))
+
+    return StepBundle(
+        fn=decode_step,
+        in_specs=(params_shape, cache_shape, tokens_spec),
+        in_shardings=(p_shard, c_shard, t_shard),
+        out_shardings=(c_shard, logits_shard),
+        donate_argnums=(1,),
+        rules=rules,
+        api=api,
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kw)
+    kw.pop("moe_dispatch", None)
+    kw.pop("remat_policy", None)
+    if shape.kind == "train":
+        kw.pop("kv_dtype", None)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, **kw)
+    return build_decode_step(cfg, shape, mesh, **kw)

@@ -1,0 +1,4 @@
+from repro.models.api import ModelAPI, get_model
+from repro.models.guard import GuardSpec, fence, full_guard
+
+__all__ = ["ModelAPI", "get_model", "GuardSpec", "fence", "full_guard"]

@@ -1,0 +1,70 @@
+"""GuardSpec — how Guardian fencing threads through model data paths.
+
+The paper fences every *dynamically computed address* in GPU kernels.  In
+the model stack the dynamically computed addresses are:
+
+    vocab    token ids            -> embedding-row gather
+    kv       sequence-slot ids +  -> paged-KV pool reads/writes
+             page ids
+    state    state-slot ids       -> SSM/recurrent state pool reads/writes
+    expert   expert ids           -> MoE dispatch offsets
+
+A :class:`GuardSpec` carries one :class:`FenceParams` per index space plus
+the :class:`FencePolicy`; ``fence(spec, which, idx)`` applies the configured
+fence.  ``spec=None`` (or a missing space) is the paper's *standalone
+fast-path*: the index passes through untouched and the fence instructions
+are never emitted into the compiled step — bit-identical to a native build.
+
+This gives each tenant's model step the same guarantee as a sandboxed PTX
+kernel: no matter how corrupted the scheduler state, page tables, or router
+outputs are, every arena access lands inside the tenant's own partition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core.fence import FenceParams, FencePolicy, apply_fence
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    policy: FencePolicy = FencePolicy.BITWISE
+    vocab: Optional[FenceParams] = None
+    kv: Optional[FenceParams] = None
+    state: Optional[FenceParams] = None
+    expert: Optional[FenceParams] = None
+    page: Optional[FenceParams] = None   # logical->physical page ids in slab
+
+    def params_for(self, which: str) -> Optional[FenceParams]:
+        return getattr(self, which)
+
+
+def fence(spec: Optional[GuardSpec], which: str, idx: jax.Array) -> jax.Array:
+    """Fence ``idx`` into the partition for index-space ``which``.
+
+    No-op (native fast path) when spec is None or the space is unguarded.
+    CHECK policy degrades to clamping here (the `ok` predicate is surfaced
+    through the manager API, not the model API)."""
+    if spec is None:
+        return idx
+    params = spec.params_for(which)
+    if params is None:
+        return idx
+    fenced, _ok = apply_fence(spec.policy, idx, params)
+    return fenced.astype(idx.dtype)
+
+
+def full_guard(policy: FencePolicy = FencePolicy.BITWISE, *,
+               vocab_slots: int = 0, kv_slots: int = 0,
+               state_slots: int = 0, expert_slots: int = 0,
+               page_slots: int = 0, base: int = 0) -> GuardSpec:
+    """Convenience: guard every space with a [base, base+n) partition."""
+    def p(n):
+        return FenceParams(base=base, size=n) if n else None
+    return GuardSpec(policy=policy, vocab=p(vocab_slots), kv=p(kv_slots),
+                     state=p(state_slots), expert=p(expert_slots),
+                     page=p(page_slots))

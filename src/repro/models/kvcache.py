@@ -1,0 +1,293 @@
+"""KV / state caches for serving — slab-paged pools with Guardian fencing.
+
+Two levels of pooling (see DESIGN.md §Hardware adaptation):
+
+1. **Slab-paged pool** (this module, used by the sharded serve steps):
+   the pool is ``(L, slots, pages_per_slot, page, KH, D)``; a *slot* is a
+   pow2-partitionable sequence slot (tenants own contiguous pow2 slot
+   ranges), and pages within a slot's slab are indirected through a
+   per-slot page table.  Two data-dependent index spaces → two fences:
+
+       slot ids  — fenced with the tenant's (base, mask)  [space "kv"]
+       page ids  — fenced into the slab [0, pages_per_slot) [space "page"]
+
+   Both batch and slot axes shard over the data axes, so every gather is
+   shard-local under GSPMD (no cross-host page traffic).
+
+2. **Global paged pool** (the Pallas kernel `kernels/paged_attention`):
+   a single flat page pool with per-sequence page lists, fenced in the
+   scalar-prefetch — the closest TPU analogue of the paper's PTX fence.
+   Used on real TPU via ops.py; validated in interpret mode in tests.
+
+SSM/recurrent state uses the same slot discipline: ``(L, slots, ...state)``
+with fenced slot ids (space "state").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.guard import GuardSpec, fence
+
+PAGE_SIZE = 64
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Slab-paged KV pool (pytree).  k/v: (L, slots, P, page, KH, D)."""
+
+    k: jax.Array
+    v: jax.Array
+    page_table: jax.Array     # (B, P) int32: logical page -> physical page
+    slot_ids: jax.Array       # (B,) int32: request -> pool slot
+    seq_lens: jax.Array       # (B,) int32: tokens currently cached
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[3]
+
+    @property
+    def max_len(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                  *, slots: Optional[int] = None, page_size: int = PAGE_SIZE,
+                  dtype=jnp.bfloat16, n_layers: Optional[int] = None
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract shapes for the cache (dry-run / eval_shape safe)."""
+    L = n_layers if n_layers is not None else cfg.decoder_layers
+    slots = slots or _pow2_at_least(batch)
+    pages = max(max_len // page_size, 1)
+    kv_shape = (L, slots, pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv_shape, dtype),
+        "v": jax.ShapeDtypeStruct(kv_shape, dtype),
+        "page_table": jax.ShapeDtypeStruct((batch, pages), jnp.int32),
+        "slot_ids": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "seq_lens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def kv_cache_axes() -> Dict[str, Tuple]:
+    """Logical sharding axes matching kv_cache_spec order."""
+    kv = (None, "pages", None, None, "kv_heads", None)
+    return {"k": kv, "v": kv, "page_table": ("batch", None),
+            "slot_ids": ("batch",), "seq_lens": ("batch",)}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  slots: Optional[int] = None, page_size: int = PAGE_SIZE,
+                  dtype=jnp.bfloat16, n_layers: Optional[int] = None
+                  ) -> PagedKVCache:
+    spec = kv_cache_spec(cfg, batch, max_len, slots=slots,
+                         page_size=page_size, dtype=dtype, n_layers=n_layers)
+    pages = spec["page_table"].shape[1]
+    return PagedKVCache(
+        k=jnp.zeros(spec["k"].shape, dtype),
+        v=jnp.zeros(spec["v"].shape, dtype),
+        # identity mapping by default (fresh slabs)
+        page_table=jnp.broadcast_to(
+            jnp.arange(pages, dtype=jnp.int32)[None, :], (batch, pages)
+        ).copy(),
+        slot_ids=jnp.arange(batch, dtype=jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fenced read / write paths
+# ---------------------------------------------------------------------------
+
+def gather_layer_kv(cache: PagedKVCache, layer: jax.Array,
+                    guard: Optional[GuardSpec] = None,
+                    rules=None) -> Tuple[jax.Array, jax.Array]:
+    """Read the full (paged) KV history for every request at one layer.
+
+    Returns k, v: (B, S_max, KH, D) where S_max = pages*page.  Invalid tail
+    positions are masked by the caller via ``seq_lens``.
+    """
+    from repro.distributed.sharding import constrain
+    slots = fence(guard, "kv", cache.slot_ids)            # (B,)
+    pages = fence(guard, "page", cache.page_table)        # (B,P)
+    k_l = jax.lax.dynamic_index_in_dim(cache.k, layer, axis=0,
+                                       keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(cache.v, layer, axis=0,
+                                       keepdims=False)
+    # slot gather: (B, P, page, KH, D).  NOTE (§Perf H3 iter2, refuted):
+    # pinning this gather's output to batch sharding does NOT stop the
+    # partitioner from replicating the pool slice (the replication happens
+    # inside the gather lowering) and costs an extra copy — measured 20-25%
+    # regression on decode cells, so no constraint here.  The real fix is
+    # shard-local pools (documented in EXPERIMENTS.md §Perf H3).
+    k_s = jnp.take(k_l, slots, axis=0)
+    v_s = jnp.take(v_l, slots, axis=0)
+    # page indirection within each request's slab
+    k_p = jnp.take_along_axis(
+        k_s, pages[:, :, None, None, None], axis=1)
+    v_p = jnp.take_along_axis(
+        v_s, pages[:, :, None, None, None], axis=1)
+    B, P, page, KH, D = k_p.shape
+    return (k_p.reshape(B, P * page, KH, D),
+            v_p.reshape(B, P * page, KH, D))
+
+
+def append_token_kv(cache: PagedKVCache, layer: jax.Array,
+                    k_new: jax.Array, v_new: jax.Array,
+                    guard: Optional[GuardSpec] = None) -> PagedKVCache:
+    """Write one new token's K,V per request at ``layer`` (decode step).
+
+    k_new/v_new: (B, 1, KH, D).  The write position is data-dependent
+    (seq_lens) — slot, page and in-page offsets are all fenced.
+    """
+    B = k_new.shape[0]
+    page_size = cache.page_size
+    pos = cache.seq_lens                                   # (B,)
+    logical_page = pos // page_size
+    offset = pos % page_size
+    slots = fence(guard, "kv", cache.slot_ids)
+    phys = jnp.take_along_axis(cache.page_table,
+                               logical_page[:, None], axis=1)[:, 0]
+    phys = fence(guard, "page", phys)
+    idx_l = jnp.broadcast_to(jnp.asarray(layer, jnp.int32), (B,))
+    scat = jnp.stack([idx_l, slots, phys, offset], axis=1)  # (B,4)
+    k = cache.k.at[scat[:, 0], scat[:, 1], scat[:, 2], scat[:, 3]].set(
+        k_new[:, 0], mode="promise_in_bounds")
+    v = cache.v.at[scat[:, 0], scat[:, 1], scat[:, 2], scat[:, 3]].set(
+        v_new[:, 0], mode="promise_in_bounds")
+    return dataclasses.replace(cache, k=k, v=v)
+
+
+def write_prefill_kv(cache: PagedKVCache, layer: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array,
+                     guard: Optional[GuardSpec] = None,
+                     mode: str = "permute") -> PagedKVCache:
+    """Write a full prefill's K,V (B, S, KH, D) into the slabs at ``layer``.
+
+    S is padded to a page multiple.  Pages go through the (fenced) page
+    table; slots through the (fenced) slot ids.
+
+    Two formulations (§Perf hillclimb H2):
+
+    * ``scatter``  — direct 4D scatter ``pool[l, slot, phys, off] = kv``.
+      Semantically obvious, but the layer-indexed scatter is opaque to the
+      SPMD partitioner: it replicates the full (slots, P, page, KH, D)
+      pool slice per device (observed: 21.5 GB f32 all-gathers per layer).
+    * ``permute`` — collective-free: (1) tiny int32 scatter builds the
+      inverse page permutation per slab, (2) a batch-aligned
+      take_along_axis materializes each request's slab (local), (3) a
+      one-hot einsum places slabs into slot rows (SPMD-friendly
+      contraction), (4) dynamic_update_slice writes the layer slice
+      (unsharded dim — local).  Fences are applied to the same indices,
+      so the isolation guarantee is unchanged.
+    """
+    B, S, KH, D = k_new.shape
+    page_size = cache.page_size
+    pad = (-S) % page_size
+    if pad:
+        k_new = jnp.pad(k_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_new = jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    n_pages = S // page_size
+    slots = fence(guard, "kv", cache.slot_ids)                    # (B,)
+    pages = fence(guard, "page", cache.page_table[:, :n_pages])   # (B,n)
+    k_pg = k_new.reshape(B, n_pages, page_size, KH, D)
+    v_pg = v_new.reshape(B, n_pages, page_size, KH, D)
+
+    if mode == "scatter":
+        bb = jnp.broadcast_to(slots[:, None], (B, n_pages))
+        ll = jnp.broadcast_to(jnp.asarray(layer, jnp.int32), (B, n_pages))
+        k = cache.k.at[ll, bb, pages].set(k_pg, mode="promise_in_bounds")
+        v = cache.v.at[ll, bb, pages].set(v_pg, mode="promise_in_bounds")
+        return dataclasses.replace(cache, k=k, v=v)
+
+    P_slab = cache.pages_per_slot
+    S_slots = cache.k.shape[1]
+    # (1) inverse page permutation + write mask — tiny int32 scatters
+    bidx = jnp.broadcast_to(
+        jnp.arange(B, dtype=jnp.int32)[:, None], (B, n_pages))
+    logical = jnp.broadcast_to(
+        jnp.arange(n_pages, dtype=jnp.int32)[None, :], (B, n_pages))
+    inv = jnp.zeros((B, P_slab), jnp.int32).at[bidx, pages].set(
+        logical, mode="drop")
+    wrote = jnp.zeros((B, P_slab), bool).at[bidx, pages].set(
+        True, mode="drop")
+
+    def place(pool, new_pg):
+        # (2) per-request slab via batch-aligned gather (local)
+        slab_new = jnp.take_along_axis(
+            new_pg, inv[:, :, None, None, None], axis=1)
+        # keep old contents where this prefill wrote nothing
+        old = jnp.take(jax.lax.dynamic_index_in_dim(
+            pool, layer, axis=0, keepdims=False), slots, axis=0)
+        slab = jnp.where(wrote[:, :, None, None, None],
+                         slab_new.astype(pool.dtype), old)
+        # (3) slot placement as a one-hot contraction (SPMD-friendly)
+        oh = jax.nn.one_hot(slots, S_slots, dtype=pool.dtype)    # (B,S_sl)
+        # rows not owned by any request keep their old value
+        owned = jnp.einsum("bs,b...->s...", oh, jnp.ones(
+            (B, 1, 1, 1, 1), pool.dtype))                        # (S_sl,1..)
+        placed = jnp.einsum("bs,bpqkd->spqkd", oh, slab)
+        pool_l = jax.lax.dynamic_index_in_dim(pool, layer, axis=0,
+                                              keepdims=False)
+        new_l = jnp.where(owned > 0, placed, pool_l)
+        # (4) layer write on the unsharded axis (local)
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, new_l[None], layer, axis=0)
+
+    k = place(cache.k, k_pg)
+    v = place(cache.v, v_pg)
+    return dataclasses.replace(cache, k=k, v=v)
+
+
+def advance(cache: PagedKVCache, n: int = 1) -> PagedKVCache:
+    return dataclasses.replace(cache, seq_lens=cache.seq_lens + n)
+
+
+# ---------------------------------------------------------------------------
+# SSM / recurrent state pool
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StateCache:
+    """Recurrent state pool (pytree).
+
+    ``pools`` maps state name -> (L_kind, slots, *state_shape) arrays;
+    slot ids are fenced with the tenant's partition (space "state").
+    """
+
+    pools: Dict[str, jax.Array]
+    slot_ids: jax.Array        # (B,)
+    seq_lens: jax.Array        # (B,)
+
+    def read(self, name: str, layer: jax.Array,
+             guard: Optional[GuardSpec] = None) -> jax.Array:
+        slots = fence(guard, "state", self.slot_ids)
+        pool_l = jax.lax.dynamic_index_in_dim(
+            self.pools[name], layer, axis=0, keepdims=False)
+        return jnp.take(pool_l, slots, axis=0)
+
+    def write(self, name: str, layer: jax.Array, value: jax.Array,
+              guard: Optional[GuardSpec] = None) -> "StateCache":
+        slots = fence(guard, "state", self.slot_ids)
+        B = value.shape[0]
+        ll = jnp.broadcast_to(jnp.asarray(layer, jnp.int32), (B,))
+        pools = dict(self.pools)
+        pools[name] = pools[name].at[ll, slots].set(
+            value, mode="promise_in_bounds")
+        return dataclasses.replace(self, pools=pools)

@@ -1,0 +1,172 @@
+"""Mamba2 block (SSD) — the zamba2-7b backbone layer.
+
+Block: in_proj -> [z | x | B | C | dt], causal conv1d over (x,B,C),
+SiLU, chunked SSD scan, D skip, gated RMSNorm, out_proj.
+
+Serving state per (layer, request): the SSM state (H, N, P) plus the conv
+tail (conv_width-1, conv_dim) — both live in the Guardian-partitioned
+state pool (fenced slot ids, space "state").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.ssd import ssd_chunked, ssd_step
+
+Params = Dict[str, Any]
+
+P_HEAD = 64  # SSD head size (Mamba2 default)
+
+
+def dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = max(d_in // P_HEAD, 1)
+    n = s.state_dim
+    conv_dim = d_in + 2 * n * 1  # single B/C group
+    return {"d_in": d_in, "heads": heads, "n": n, "conv_dim": conv_dim,
+            "p": d_in // heads}
+
+
+def block_init(key, cfg: ModelConfig) -> Params:
+    dm = dims(cfg)
+    d, d_in, heads, n = cfg.d_model, dm["d_in"], dm["heads"], dm["n"]
+    conv_dim = dm["conv_dim"]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = L.dtype_of(cfg)
+    proj_out = 2 * d_in + 2 * n + heads  # z | x | B | C | dt
+    return {
+        "in_proj": L.dense_init(k1, d, proj_out, dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm.conv_width, conv_dim),
+                                     jnp.float32)
+                   / math.sqrt(cfg.ssm.conv_width)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads).astype(jnp.float32)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.dense_init(k3, d_in, d, dt,
+                                 scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def block_axes(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": ("embed", "ffn"),
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "norm_g": ("ffn",),
+        "out_proj": ("ffn", "embed"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    dm = dims(cfg)
+    d_in, n, heads = dm["d_in"], dm["n"], dm["heads"]
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + dm["conv_dim"]]
+    dt_raw = proj[..., d_in + dm["conv_dim"]:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xbc (B,S,C), w (K,C).  ``tail`` is the
+    previous (K-1, C) inputs (decode); returns (out, new_tail)."""
+    K = w.shape[0]
+    B, S, C = xbc.shape
+    if tail is None:
+        tail_in = jnp.zeros((B, K - 1, C), xbc.dtype)
+    else:
+        tail_in = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([tail_in, xbc], axis=1)      # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_tail = xp[:, S:]                              # last K-1 inputs
+    return out.astype(xbc.dtype), new_tail
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, g: jax.Array) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return L.rmsnorm(y, g)
+
+
+def block_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                h0: Optional[jax.Array] = None,
+                conv_tail: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence SSD block.  x (B,S,d) -> (y (B,S,d), h_final,
+    conv_tail)."""
+    dm = dims(cfg)
+    heads, n, pdim = dm["heads"], dm["n"], dm["p"]
+    B, S, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs = xbc[..., :dm["d_in"]].reshape(B, S, heads, pdim)
+    b_in = xbc[..., dm["d_in"]:dm["d_in"] + n]         # (B,S,N)
+    c_in = xbc[..., dm["d_in"] + n:]                   # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                           # (H,)
+    log_decay = dt * a                                  # (B,S,H)
+    u = xs.astype(jnp.float32) * dt[..., None]          # dt-scaled input
+    bb = jnp.broadcast_to(b_in[:, :, None, :], (B, S, heads, n))
+    cc = jnp.broadcast_to(c_in[:, :, None, :], (B, S, heads, n))
+    y, h_final = ssd_chunked(u, log_decay, bb, cc, h0=h0,
+                             chunk=cfg.ssm.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, dm["d_in"]).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_g"])
+    return y @ p["out_proj"], h_final, new_tail
+
+
+def block_step(cfg: ModelConfig, p: Params, x: jax.Array,
+               h: jax.Array, conv_tail: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode step.  x (B,1,d), h (B,H,N,P),
+    conv_tail (B,K-1,conv_dim)."""
+    dm = dims(cfg)
+    heads, n, pdim = dm["heads"], dm["n"], dm["p"]
+    B = x.shape[0]
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs = xbc[:, 0, :dm["d_in"]].reshape(B, heads, pdim)
+    b_in = xbc[:, 0, dm["d_in"]:dm["d_in"] + n]
+    c_in = xbc[:, 0, dm["d_in"] + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    log_decay = dt * a                                  # (B,H)
+    u = xs.astype(jnp.float32) * dt[..., None]
+    bb = jnp.broadcast_to(b_in[:, None, :], (B, heads, n))
+    cc = jnp.broadcast_to(c_in[:, None, :], (B, heads, n))
+    y, h_new = ssd_step(u, log_decay, bb, cc, h)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, dm["d_in"]).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_g"])
+    return y @ p["out_proj"], h_new, new_tail
+
+
+def state_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Per-request state entry shapes for the Guardian state pool."""
+    dm = dims(cfg)
+    return {
+        "ssm": (dm["heads"], dm["n"], dm["p"]),
+        "conv": (cfg.ssm.conv_width - 1, dm["conv_dim"]),
+    }

@@ -1,0 +1,359 @@
+"""MoE decoder LM — grok-1-314b (8e top-2) / qwen3-moe-30b-a3b (128e top-8).
+
+Expert parallelism: expert tensors carry an ``expert`` logical axis mapped
+to the mesh ``model`` axis; dispatch uses the capacity-based one-hot einsum
+formulation so GSPMD inserts the all-to-alls.  The **router's expert ids are
+data-dependent** — the Guardian "expert" fence is applied to them before
+they form dispatch offsets, so a corrupted/adversarial router can never
+address another tenant's expert-buffer rows (the MoE analogue of the
+paper's fenced ld/st).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as L
+from repro.models import kvcache as KV
+from repro.models import transformer as TF
+from repro.models.guard import GuardSpec, fence
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Expert MLP bank + router
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    out_std = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    dt = L.dtype_of(cfg)
+    p: Params = {
+        "router": (jax.random.normal(kr, (d, e), jnp.float32) * std
+                   ).astype(jnp.float32),
+        "wu": (jax.random.normal(ku, (e, d, f), jnp.float32) * std
+               ).astype(dt),
+        "wd": (jax.random.normal(kd, (e, f, d), jnp.float32) * out_std
+               ).astype(dt),
+    }
+    if cfg.act == "silu":
+        p["wg"] = (jax.random.normal(kg, (e, d, f), jnp.float32) * std
+                   ).astype(dt)
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "router": (None, None),
+        "wu": ("expert", "embed", None),
+        "wd": ("expert", None, "embed"),
+    }
+    if cfg.act == "silu":
+        p["wg"] = ("expert", "embed", None)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+              guard: Optional[GuardSpec] = None,
+              rules: Optional[ShardingRules] = None,
+              dispatch: str = "scatter",
+              capacity_factor: float = 2.0) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    Capacity-based dispatch: top-k expert choice per token, tokens routed
+    into per-expert buffers of capacity C = ceil(2*K*T/E); overflow drops
+    (standard).  All shapes static => dry-run friendly.
+
+    Two dispatch implementations (§Perf hillclimb H1):
+
+    * ``einsum``  — Mesh-TF one-hot dispatch tensors (T,E,C).  Simple, but
+      the dispatch/combine einsums cost O(T·E·C·d) FLOPs — they dominate
+      the step for fine-grained MoE (qwen3: 128e top-8).
+    * ``scatter`` — fenced destination indices ``dest = e·C + pos`` with a
+      scatter into the (E·C, d) buffer and a gather back: O(T·K·d) data
+      movement, zero dispatch FLOPs.  The fence on ``dest`` is exactly the
+      paper's store fence (a corrupted route wraps inside the tenant's
+      expert-buffer partition).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (T,K)
+    # Guardian: expert ids are data-dependent addresses into the expert
+    # bank — fence them into the tenant's expert partition.
+    expert_ids = fence(guard, "expert", expert_ids.astype(jnp.int32))
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(int(capacity_factor * K * T / E), 8)
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)   # (T,K,E)
+    pos_in_e = (jnp.cumsum(onehot.reshape(T * K, E), axis=0) - 1.0
+                ).reshape(T, K, E)                              # rank
+    pos = jnp.sum(pos_in_e * onehot, axis=-1).astype(jnp.int32)  # (T,K)
+    keep = (pos < capacity)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    if dispatch == "einsum":
+        # dispatch tensor (T, E, C) — one-hot on (expert, slot)
+        slot_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                                 capacity, dtype=xf.dtype)      # (T,K,C)
+        disp = jnp.einsum("tke,tkc->tec", onehot.astype(xf.dtype),
+                          slot_oh)
+        xin = jnp.einsum("td,tec->ecd", xf, disp)               # (E,C,d)
+    else:
+        # fenced scatter dispatch: dest in [0, E*C) by construction
+        # (expert_ids fenced + pos < capacity); dropped rows -> E*C.
+        # Sharding: src rows are token-major (data axes); buf rows are
+        # expert-major (model axis) — the scatter across them is the
+        # dispatch all-to-all.  Without these constraints GSPMD
+        # replicates the (E*C, d) buffer on every chip (§Perf H1 iter2).
+        dest = (expert_ids * capacity + jnp.minimum(
+            pos, capacity - 1)).reshape(T * K)                  # (T*K,)
+        dest = jnp.where(keep.reshape(T * K), dest, E * capacity)
+        src = jnp.broadcast_to(xf[:, None, :], (T, K, d)).reshape(
+            T * K, d)
+        if rules is not None:
+            src = constrain(src, rules, ("batch", None))
+        buf = jnp.zeros((E * capacity + 1, d), xf.dtype)
+        if rules is not None:
+            buf = constrain(buf, rules, ("expert", None))
+        buf = buf.at[dest].set(src, mode="drop")
+        if rules is not None:
+            buf = constrain(buf, rules, ("expert", None))
+        xin = buf[:E * capacity].reshape(E, capacity, d)
+    if rules is not None:
+        xin = constrain(xin, rules, ("expert", None, None))
+
+    if cfg.act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", xin, p["wu"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, p["wu"]))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wd"])               # (E,C,d)
+    if rules is not None:
+        out_e = constrain(out_e, rules, ("expert", None, None))
+
+    if dispatch == "einsum":
+        combine = jnp.einsum("tec,tke,tk->tec", disp,
+                             onehot.astype(xf.dtype),
+                             gate_vals.astype(xf.dtype))
+        out = jnp.einsum("tec,ecd->td", combine, out_e)
+    else:
+        flat = out_e.reshape(E * capacity, d)
+        if rules is not None:
+            flat = constrain(flat, rules, ("expert", None))
+        y_tk = jnp.take(flat, jnp.minimum(dest, E * capacity - 1),
+                        axis=0).reshape(T, K, d)
+        if rules is not None:
+            y_tk = constrain(y_tk, rules, ("batch", None, None))
+        w = (gate_vals * keep.astype(gate_vals.dtype)).astype(xf.dtype)
+        out = jnp.einsum("tkd,tk->td", y_tk, w)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Model (attention blocks reuse the dense transformer pieces)
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.attention_init(k1, cfg),
+        "moe": moe_init(k2, cfg),
+        "norm1": L.norm_init(cfg),
+        "norm2": L.norm_init(cfg),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    k_emb, k_layers = jax.random.split(rng)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": L.embedding_init(k_emb, cfg),
+        "layers": stacked,
+        "norm_f": L.norm_init(cfg),
+    }
+
+
+def param_logical_axes(cfg: ModelConfig) -> Params:
+    def stack(tree):
+        return jax.tree.map(lambda axes: (None, *axes), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embedding_axes(cfg),
+        "layers": stack({
+            "attn": L.attention_axes(cfg),
+            "moe": moe_axes(cfg),
+            "norm1": L.norm_axes(cfg),
+            "norm2": L.norm_axes(cfg),
+        }),
+        "norm_f": L.norm_axes(cfg),
+    }
+
+
+def _layer(cfg, rules, guard, p, x, positions, aux_acc, dispatch="scatter"):
+    q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+    q, k = L.positions_rope(cfg, q, k, positions)
+    o = L.chunked_attention(q, k, v, causal=True, window=cfg.attn_window, rules=rules)
+    x = x + L.out_proj(cfg, p["attn"], o)
+    h, aux = moe_apply(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x),
+                       guard, rules, dispatch)
+    x = x + h
+    if rules is not None:
+        x = constrain(x, rules, ("batch", "seq", None))
+    return x, aux_acc + aux
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions: Optional[jax.Array] = None, *,
+            guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = False,
+            dispatch: str = "scatter",
+            remat_policy: str = "nothing") -> Tuple[jax.Array, jax.Array]:
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def body(carry, p):
+        x, aux = carry
+        x, aux = _layer(cfg, rules, guard, p, x, positions, aux,
+                        dispatch)
+        return (x, aux), None
+
+    step = body
+    if remat:
+        pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+               if remat_policy == "dots"
+               else jax.checkpoint_policies.nothing_saveable)
+        step = jax.checkpoint(body, policy=pol)
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)),
+                               params["layers"])
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = True, aux_weight: float = 0.01,
+            dispatch: str = "scatter",
+            remat_policy: str = "nothing") -> jax.Array:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(cfg, params, inputs, guard=guard, rules=rules,
+                          remat=remat, dispatch=dispatch,
+                          remat_policy=remat_policy)
+    return (L.softmax_cross_entropy(logits, labels, batch.get("mask"))
+            + aux_weight * aux)
+
+
+# ---------------------------------------------------------------------------
+# Serving — same cache discipline as the dense model
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+            tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            positions: Optional[jax.Array] = None,
+            dispatch: str = "scatter",
+            ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def body(carry, inp):
+        x, kc, vc = carry
+        p, lidx = inp
+        q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+        q, k = L.positions_rope(cfg, q, k, positions)
+        tmp = dataclasses.replace(cache, k=kc, v=vc)
+        tmp = KV.write_prefill_kv(tmp, lidx, k.astype(kc.dtype),
+                                  v.astype(vc.dtype), guard)
+        o = L.chunked_attention(q, k, v, causal=True,
+                                window=cfg.attn_window, rules=rules)
+        x = x + L.out_proj(cfg, p["attn"], o)
+        h, _ = moe_apply(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x),
+                         guard, rules, dispatch)
+        x = x + h
+        if rules is not None:
+            x = constrain(x, rules, ("batch", "seq", None))
+        return (x, tmp.k, tmp.v), None
+
+    lidxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, kc, vc), _ = jax.lax.scan(body, (x, cache.k, cache.v),
+                                  (params["layers"], lidxs))
+    cache = dataclasses.replace(cache, k=kc, v=vc,
+                                seq_lens=cache.seq_lens + S)
+    x = L.apply_norm(cfg, params["norm_f"], x[:, -1:])
+    return cache, L.lm_logits(cfg, params["embed"], x)[:, 0]
+
+
+def decode(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+           tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+           rules: Optional[ShardingRules] = None,
+           positions: Optional[jax.Array] = None,
+           dispatch: str = "scatter"
+           ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    B = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens[:, None], guard)
+    if positions is None:
+        positions = cache.seq_lens[:, None]
+    elif positions.ndim == 1:
+        positions = positions[:, None]
+
+    def body(carry, inp):
+        x, kc, vc = carry
+        p, lidx = inp
+        q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+        q, k = L.positions_rope(cfg, q, k, positions)
+        tmp = dataclasses.replace(cache, k=kc, v=vc)
+        tmp = KV.append_token_kv(tmp, lidx, k.astype(kc.dtype),
+                                 v.astype(vc.dtype), guard)
+        k_hist, v_hist = KV.gather_layer_kv(tmp, lidx, guard, rules)
+        o = L.decode_attention(q, k_hist.astype(q.dtype),
+                               v_hist.astype(q.dtype),
+                               cache.seq_lens + 1,
+                               window=cfg.attn_window)
+        x = x + L.out_proj(cfg, p["attn"], o)
+        h, _ = moe_apply(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x),
+                         guard, rules, dispatch)
+        x = x + h
+        return (x, tmp.k, tmp.v), None
+
+    lidxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, kc, vc), _ = jax.lax.scan(body, (x, cache.k, cache.v),
+                                  (params["layers"], lidxs))
+    cache = dataclasses.replace(cache, k=kc, v=vc,
+                                seq_lens=cache.seq_lens + 1)
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    return cache, L.lm_logits(cfg, params["embed"], x)[:, 0]

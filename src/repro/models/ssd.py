@@ -1,0 +1,127 @@
+"""Chunked SSD (state-space dual) scan — the Mamba2 primitive, shared by
+the zamba2 Mamba2 blocks and the xLSTM mLSTM blocks (which are the same
+recurrence with scalar gates).
+
+Recurrence (per batch, head):
+
+    h_t = exp(a_t) * h_{t-1} + b_t ⊗ u_t          h: (N, P) state
+    y_t = c_t · h_t                                y: (P,)
+
+with a_t scalar log-decay, b_t,c_t: (N,), u_t: (P,).  The chunked algorithm
+(Mamba2 §6) splits S into chunks of length Q: intra-chunk contributions via
+a (Q,Q) masked decay matrix, inter-chunk via a short scan over chunk states
+— O(S·Q) work instead of O(S²), parallel over (batch, heads, chunks).
+
+Everything is f32 internally (decays are exp-of-sums; bf16 under/overflows).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) per-step log decays -> (..., Q, Q) lower-tri matrix
+    L[t, s] = sum_{s < r <= t} a[r]   (t >= s), -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    u: jax.Array,        # (B, S, H, P) inputs (already dt-scaled)
+    a: jax.Array,        # (B, S, H) log decays (dt * A, or log f)
+    b: jax.Array,        # (B, S, H, N) input maps (dt folded upstream)
+    c: jax.Array,        # (B, S, H, N) output maps
+    h0: Optional[jax.Array] = None,   # (B, H, N, P) initial state
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    B, S, H, P = u.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    u = u.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    a = a.reshape(B, nc, chunk, H).astype(jnp.float32)
+    b = b.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+    c = c.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+
+    a_hq = jnp.moveaxis(a, -1, -2)                    # (B,nc,H,Q)
+    L = jnp.exp(segsum(a_hq))                         # (B,nc,H,Q,Q)
+
+    # intra-chunk: y[t] = sum_{s<=t} (c_t·b_s) L[t,s] u_s
+    y_intra = jnp.einsum("bcqhn,bcshn,bchqs,bcshp->bcqhp", c, b, L, u)
+
+    # chunk states: h_c = sum_s exp(A_end - A_s) b_s ⊗ u_s
+    cs = jnp.cumsum(a_hq, axis=-1)                    # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)         # (B,nc,H,Q)
+    d2e = jnp.moveaxis(decay_to_end, -1, -2)          # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchnp", b, d2e, u)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cs[..., -1])                # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h_prev, inp):
+        dec, st = inp                                  # (B,H), (B,H,N,P)
+        h_new = dec[..., None, None] * h_prev + st
+        return h_new, h_prev                           # emit state BEFORE
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)            # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)                  # (nc,B,H,N,P)
+    h_final, prev_states = jax.lax.scan(step, h0, (dec_t, st_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B,nc,H,N,P)
+
+    # inter-chunk: y[t] += (c_t · H_{c-1}) * exp(A_t)
+    state_decay_in = jnp.exp(jnp.moveaxis(cs, -1, -2))  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                         c, state_decay_in, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def ssd_step(
+    u: jax.Array,        # (B, H, P)
+    a: jax.Array,        # (B, H) log decay
+    b: jax.Array,        # (B, H, N)
+    c: jax.Array,        # (B, H, N)
+    h: jax.Array,        # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step (decode).  Returns (y (B,H,P), h')."""
+    h = h.astype(jnp.float32)
+    h_new = (jnp.exp(a.astype(jnp.float32))[..., None, None] * h
+             + jnp.einsum("bhn,bhp->bhnp", b.astype(jnp.float32),
+                          u.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhnp->bhp", c.astype(jnp.float32), h_new)
+    return y, h_new
+
+
+def ssd_reference(u, a, b, c, h0=None):
+    """O(S) sequential oracle for tests: identical semantics to
+    ssd_chunked, computed step by step."""
+    B, S, H, P = u.shape
+    N = b.shape[-1]
+    h = (jnp.zeros((B, H, N, P), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        y, h = ssd_step(u[:, t], a[:, t], b[:, t], c[:, t], h)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h

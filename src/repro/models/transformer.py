@@ -1,0 +1,224 @@
+"""Dense GQA decoder LM — llama3-405b / qwen1.5-32b / minicpm-2b /
+stablelm-3b family (and the text backbone of qwen2-vl).
+
+Layout: scan-over-layers with stacked params (compile time O(1) in depth),
+chunked flash-style attention, optional sliding window, paged-slab KV cache
+for serving, Guardian fencing on every data-dependent index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as L
+from repro.models.guard import GuardSpec
+from repro.models import kvcache as KV
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.attention_init(k1, cfg),
+        "mlp": L.mlp_init(k2, cfg),
+        "norm1": L.norm_init(cfg),
+        "norm2": L.norm_init(cfg),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    k_emb, k_layers, k_out = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.embedding_init(k_emb, cfg),
+        "layers": stacked,
+        "norm_f": L.norm_init(cfg),
+    }
+
+
+def param_logical_axes(cfg: ModelConfig) -> Params:
+    def stack(tree):
+        return jax.tree.map(lambda axes: (None, *axes), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embedding_axes(cfg),
+        "layers": stack({
+            "attn": L.attention_axes(cfg),
+            "mlp": L.mlp_axes(cfg),
+            "norm1": L.norm_axes(cfg),
+            "norm2": L.norm_axes(cfg),
+        }),
+        "norm_f": L.norm_axes(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _attn_train(cfg: ModelConfig, p: Params, x, positions,
+                rules: Optional[ShardingRules]):
+    q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+    q, k = L.positions_rope(cfg, q, k, positions)
+    o = L.chunked_attention(q, k, v, causal=True, window=cfg.attn_window, rules=rules)
+    return L.out_proj(cfg, p["attn"], o)
+
+
+def _mlp(cfg: ModelConfig, p: Params, x,
+         rules: Optional[ShardingRules]):
+    h = L.mlp_apply(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    return h
+
+
+def make_layer_fn(cfg: ModelConfig, rules: Optional[ShardingRules],
+                  remat: bool = False):
+    def layer(x, p, positions):
+        x = x + _attn_train(cfg, p, x, positions, rules)
+        x = x + _mlp(cfg, p, x, rules)
+        if rules is not None:
+            x = constrain(x, rules, ("batch", "seq", None))
+        return x
+    if remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    return layer
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring) — no cache
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions: Optional[jax.Array] = None, *,
+            guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = False,
+            inputs_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B,S) -> logits (B,S,V).  ``inputs_embeds`` overrides the
+    token embedding (VLM patches path)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    layer = make_layer_fn(cfg, rules, remat)
+
+    def body(x, p):
+        return layer(x, p, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    if rules is not None:
+        logits = constrain(logits, rules, ("batch", "seq", "vocab"))
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = True) -> jax.Array:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs, guard=guard, rules=rules,
+                     remat=remat)
+    return L.softmax_cross_entropy(logits, labels, batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving — prefill + decode over the paged-slab cache
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+            tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            positions: Optional[jax.Array] = None,
+            inputs_embeds: Optional[jax.Array] = None
+            ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    """Process the prompt, fill the KV slabs, return last-position logits."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def body(carry, inp):
+        x, kc, vc = carry
+        p, lidx = inp
+        q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+        q, k = L.positions_rope(cfg, q, k, positions)
+        tmp = dataclasses.replace(cache, k=kc, v=vc)
+        tmp = KV.write_prefill_kv(tmp, lidx, k.astype(kc.dtype),
+                                  v.astype(vc.dtype), guard)
+        o = L.chunked_attention(q, k, v, causal=True,
+                                window=cfg.attn_window, rules=rules)
+        x = x + L.out_proj(cfg, p["attn"], o)
+        x = x + _mlp(cfg, p, x, rules)
+        if rules is not None:
+            x = constrain(x, rules, ("batch", "seq", None))
+        return (x, tmp.k, tmp.v), None
+
+    lidxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, kc, vc), _ = jax.lax.scan(body, (x, cache.k, cache.v),
+                                  (params["layers"], lidxs))
+    cache = dataclasses.replace(cache, k=kc, v=vc,
+                                seq_lens=cache.seq_lens + S)
+    x = L.apply_norm(cfg, params["norm_f"], x[:, -1:])
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return cache, logits[:, 0]
+
+
+def decode(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+           tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+           rules: Optional[ShardingRules] = None,
+           positions: Optional[jax.Array] = None
+           ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    """One decode step: tokens (B,) -> logits (B,V); appends to cache."""
+    B = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens[:, None], guard)
+    if positions is None:
+        positions = cache.seq_lens[:, None]
+    elif positions.ndim == 1:
+        positions = positions[:, None]
+
+    def body(carry, inp):
+        x, kc, vc = carry
+        p, lidx = inp
+        q, k, v = L.qkv_proj(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x))
+        q, k = L.positions_rope(cfg, q, k, positions)
+        tmp = dataclasses.replace(cache, k=kc, v=vc)
+        tmp = KV.append_token_kv(tmp, lidx, k.astype(kc.dtype),
+                                 v.astype(vc.dtype), guard)
+        k_hist, v_hist = KV.gather_layer_kv(tmp, lidx, guard, rules)
+        o = L.decode_attention(q, k_hist.astype(q.dtype),
+                               v_hist.astype(q.dtype),
+                               cache.seq_lens + 1,
+                               window=cfg.attn_window)
+        x = x + L.out_proj(cfg, p["attn"], o)
+        x = x + _mlp(cfg, p, x, rules)
+        return (x, tmp.k, tmp.v), None
+
+    lidxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, kc, vc), _ = jax.lax.scan(body, (x, cache.k, cache.v),
+                                  (params["layers"], lidxs))
+    cache = dataclasses.replace(cache, k=kc, v=vc,
+                                seq_lens=cache.seq_lens + 1)
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return cache, logits[:, 0]

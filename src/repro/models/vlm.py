@@ -1,0 +1,93 @@
+"""qwen2-vl-2b backbone — dense decoder with M-RoPE and a stubbed vision
+frontend (assignment: ``input_specs()`` provides precomputed patch
+embeddings; the ViT tower is out of scope).
+
+Multimodal fusion: patch embeddings replace the token embeddings at the
+image positions (first ``n_patches`` slots of the sequence by convention);
+M-RoPE 3-component position ids (temporal/height/width) arrive with the
+batch.  Everything else delegates to the dense transformer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models import kvcache as KV
+from repro.models import transformer as TF
+from repro.models.guard import GuardSpec
+
+Params = Dict[str, Any]
+
+init = TF.init
+param_logical_axes = TF.param_logical_axes
+
+
+def fuse_inputs(params: Params, tokens: jax.Array, patches: jax.Array,
+                guard: Optional[GuardSpec] = None) -> jax.Array:
+    """Token embeddings with the first n_patches positions replaced by the
+    (precomputed) patch embeddings."""
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    n_patch = patches.shape[1]
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :, None]
+    pad = x.shape[1] - n_patch
+    patches_full = jnp.pad(
+        patches.astype(x.dtype), ((0, 0), (0, pad), (0, 0)))
+    return jnp.where(pos < n_patch, patches_full, x)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            patches: jax.Array, positions3: jax.Array, *,
+            guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = False) -> jax.Array:
+    x = fuse_inputs(params, tokens, patches, guard)
+    return TF.forward(cfg, params, tokens, positions3, guard=guard,
+                      rules=rules, remat=remat, inputs_embeds=x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = True) -> jax.Array:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs, batch["patches"],
+                     batch["positions"], guard=guard, rules=rules,
+                     remat=remat)
+    # loss only on text positions (patch slots are inputs, not targets)
+    n_patch = batch["patches"].shape[1]
+    text_mask = (jnp.arange(labels.shape[1], dtype=jnp.int32)[None, :]
+                 >= n_patch - 1).astype(jnp.float32)
+    mask = batch.get("mask")
+    mask = text_mask if mask is None else mask * text_mask
+    return L.softmax_cross_entropy(logits, labels, mask)
+
+
+def prefill(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+            tokens: jax.Array, patches: jax.Array, positions3: jax.Array,
+            *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None
+            ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    x = fuse_inputs(params, tokens, patches, guard)
+    return TF.prefill(cfg, params, cache, tokens, guard=guard, rules=rules,
+                      positions=positions3, inputs_embeds=x)
+
+
+def decode(cfg: ModelConfig, params: Params, cache: KV.PagedKVCache,
+           tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+           rules: Optional[ShardingRules] = None,
+           positions: Optional[jax.Array] = None
+           ) -> Tuple[KV.PagedKVCache, jax.Array]:
+    # text-only decode: M-RoPE components all equal the text position
+    if positions is None:
+        positions = cache.seq_lens[:, None]
+    if positions.ndim == 2:
+        positions = jnp.repeat(positions[..., None], 3, axis=-1)
+    return TF.decode(cfg, params, cache, tokens, guard=guard, rules=rules,
+                     positions=positions)

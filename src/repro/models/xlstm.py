@@ -1,0 +1,370 @@
+"""xLSTM — alternating mLSTM / sLSTM blocks (xlstm-350m).
+
+* **mLSTM** (even layers): matrix memory C_t = f_t C_{t-1} + i_t v_t k_tᵀ,
+  read y_t = (q_t·C_t) / max(|q_t·n_t|, 1).  Parallelizable — implemented
+  chunkwise on top of the shared SSD machinery (same recurrence with
+  scalar gates).  Simplification vs the paper: sigmoid input gate instead
+  of the stabilized exp gate (recorded in DESIGN.md §Changed-assumptions).
+* **sLSTM** (odd layers): scalar memory with recurrent gate connections —
+  strictly sequential, lax.scan over time with exp-gate stabilization.
+
+Attention-free ⇒ KV fencing n/a; the Guardian-guarded resource is the
+recurrent **state pool** (fenced slot ids, space "state").  Pure recurrent
+state ⇒ long_500k runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as L
+from repro.models import kvcache as KV
+from repro.models.guard import GuardSpec
+from repro.models.ssd import ssd_chunked, ssd_step
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d, H, D = cfg.d_model, cfg.n_heads, cfg.head_dim
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    dt = L.dtype_of(cfg)
+    return {
+        "wq": L.dense_init(k1, d, H * D, dt),
+        "wk": L.dense_init(k2, d, H * D, dt),
+        "wv": L.dense_init(k3, d, H * D, dt),
+        "w_if": L.dense_init(k4, d, 2 * H, dt),   # input & forget gates
+        "wo_gate": L.dense_init(k5, d, H * D, dt),
+        "wo": L.dense_init(k6, H * D, d, dt,
+                           scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "norm": L.norm_init(cfg),
+    }
+
+
+def mlstm_axes(cfg: ModelConfig) -> Params:
+    return {
+        "wq": ("embed", "heads"), "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"), "w_if": ("embed", None),
+        "wo_gate": ("embed", "heads"), "wo": ("heads", "embed"),
+        "norm": L.norm_axes(cfg),
+    }
+
+
+def _mlstm_gates(p, xn):
+    gates = xn @ p["w_if"]
+    H2 = gates.shape[-1] // 2
+    i_raw, f_raw = gates[..., :H2], gates[..., H2:]
+    i_gate = jax.nn.sigmoid(i_raw.astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    return i_gate, log_f
+
+
+def _mlstm_qkv(cfg, p, xn):
+    B, S, _ = xn.shape
+    H, D = cfg.n_heads, cfg.head_dim
+    q = (xn @ p["wq"]).reshape(B, S, H, D)
+    k = (xn @ p["wk"]).reshape(B, S, H, D) / math.sqrt(D)
+    v = (xn @ p["wv"]).reshape(B, S, H, D)
+    return q, k, v
+
+
+def mlstm_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                h0: Optional[jax.Array] = None,
+                n0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,S,d) -> (y, h_final (B,H,D,D), n_final (B,H,D,1))."""
+    B, S, _ = x.shape
+    H, D = cfg.n_heads, cfg.head_dim
+    xn = L.apply_norm(cfg, p["norm"], x)
+    q, k, v = _mlstm_qkv(cfg, p, xn)
+    i_gate, log_f = _mlstm_gates(p, xn)                  # (B,S,H)
+    b = k.astype(jnp.float32) * i_gate[..., None]        # i-scaled keys
+    y_num, h_f = ssd_chunked(v.astype(jnp.float32), log_f, b,
+                             q.astype(jnp.float32), h0=h0,
+                             chunk=cfg.ssm.chunk if cfg.ssm else 64)
+    ones = jnp.ones((B, S, H, 1), jnp.float32)
+    y_den, n_f = ssd_chunked(ones, log_f, b, q.astype(jnp.float32),
+                             h0=n0, chunk=cfg.ssm.chunk if cfg.ssm else 64)
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)
+    o_gate = jax.nn.sigmoid((xn @ p["wo_gate"]).astype(jnp.float32))
+    y = (y.reshape(B, S, H * D) * o_gate).astype(x.dtype)
+    return y @ p["wo"], h_f, n_f
+
+
+def mlstm_step(cfg: ModelConfig, p: Params, x: jax.Array,
+               h: jax.Array, n: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,1,d); h (B,H,D,D); n (B,H,D,1)."""
+    B = x.shape[0]
+    H, D = cfg.n_heads, cfg.head_dim
+    xn = L.apply_norm(cfg, p["norm"], x)
+    q, k, v = _mlstm_qkv(cfg, p, xn)
+    i_gate, log_f = _mlstm_gates(p, xn)
+    b = (k[:, 0].astype(jnp.float32) * i_gate[:, 0, :, None])
+    y_num, h_new = ssd_step(v[:, 0].astype(jnp.float32), log_f[:, 0],
+                            b, q[:, 0].astype(jnp.float32), h)
+    ones = jnp.ones((B, H, 1), jnp.float32)
+    y_den, n_new = ssd_step(ones, log_f[:, 0], b,
+                            q[:, 0].astype(jnp.float32), n)
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)
+    o_gate = jax.nn.sigmoid((xn @ p["wo_gate"]).astype(jnp.float32))
+    y = (y.reshape(B, 1, H * D) * o_gate).astype(x.dtype)
+    return y @ p["wo"], h_new, n_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block — sequential scalar memory with recurrent connections
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = L.dtype_of(cfg)
+    return {
+        "w_in": L.dense_init(k1, d, 4 * d, dt),   # z,i,f,o pre-activations
+        "r": (jax.random.normal(k2, (H, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)).astype(dt),        # block-diag recurrent
+        "wo": L.dense_init(k3, d, d, dt,
+                           scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "norm": L.norm_init(cfg),
+    }
+
+
+def slstm_axes(cfg: ModelConfig) -> Params:
+    return {"w_in": ("embed", None), "r": (None, None, None),
+            "wo": ("embed", "embed_nofsdp"), "norm": L.norm_axes(cfg)}
+
+
+def _slstm_cell(cfg, p, pre, state):
+    """One time step.  pre: (B, 4d) input pre-activations.
+    state = (c, n, h, m): c,n,h (B,d); m (B,H)."""
+    H = cfg.n_heads
+    B = pre.shape[0]
+    d = pre.shape[-1] // 4
+    hd = d // H
+    c, n, h, m = state
+    rec = jnp.einsum("bhx,hxy->bhy",
+                     h.reshape(B, H, hd).astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    zifo = pre.astype(jnp.float32) + rec
+    z_r, i_r, f_r, o_r = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    i_h = i_r.reshape(B, H, hd)
+    f_h = f_r.reshape(B, H, hd)
+    # exp gates with max-state stabilization (per head: use head max)
+    i_s = jnp.max(i_h, axis=-1)
+    f_s = jnp.max(f_h, axis=-1)
+    m_new = jnp.maximum(f_s + m, i_s)                       # (B,H)
+    i_gate = jnp.exp(i_h - m_new[..., None]).reshape(B, d)
+    f_gate = jnp.exp(f_h + (m - m_new)[..., None]).reshape(B, d)
+    c_new = f_gate * c + i_gate * z
+    n_new = f_gate * n + i_gate
+    h_new = o * (c_new / jnp.maximum(jnp.abs(n_new), 1e-6))
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                state0=None) -> Tuple[jax.Array, Tuple]:
+    B, S, d = x.shape
+    xn = L.apply_norm(cfg, p["norm"], x)
+    pre = xn @ p["w_in"]                                    # (B,S,4d)
+    if state0 is None:
+        state0 = slstm_zero_state(cfg, B)
+
+    def step(st, pre_t):
+        st = _slstm_cell(cfg, p, pre_t, st)
+        return st, st[2]
+
+    state, hs = jax.lax.scan(step, state0, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,S,d)
+    return y @ p["wo"], state
+
+
+def slstm_zero_state(cfg: ModelConfig, B: int):
+    d, H = cfg.d_model, cfg.n_heads
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z, z, z, jnp.full((B, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Full model — pairs of (mLSTM, sLSTM) blocks scanned
+# ---------------------------------------------------------------------------
+
+def init(rng, cfg: ModelConfig) -> Params:
+    n_pairs = cfg.n_layers // 2
+    k_emb, k_m, k_s = jax.random.split(rng, 3)
+    m_stack = jax.vmap(lambda k: mlstm_init(k, cfg))(
+        jax.random.split(k_m, n_pairs))
+    s_stack = jax.vmap(lambda k: slstm_init(k, cfg))(
+        jax.random.split(k_s, n_pairs))
+    return {
+        "embed": L.embedding_init(k_emb, cfg),
+        "mlstm": m_stack,
+        "slstm": s_stack,
+        "norm_f": L.norm_init(cfg),
+    }
+
+
+def param_logical_axes(cfg: ModelConfig) -> Params:
+    def stack(tree):
+        return jax.tree.map(lambda axes: (None, *axes), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embedding_axes(cfg),
+        "mlstm": stack(mlstm_axes(cfg)),
+        "slstm": stack(slstm_axes(cfg)),
+        "norm_f": L.norm_axes(cfg),
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions: Optional[jax.Array] = None, *,
+            guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = False) -> jax.Array:
+    x = L.embed_tokens(params["embed"], tokens, guard)
+
+    def pair(x, ps):
+        pm, psl = ps
+        y, _, _ = mlstm_apply(cfg, pm, x)
+        x = x + y
+        y, _ = slstm_apply(cfg, psl, x)
+        x = x + y
+        if rules is not None:
+            x = constrain(x, rules, ("batch", "seq", None))
+        return x, None
+
+    body = pair
+    if remat:
+        body = jax.checkpoint(
+            pair, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    return L.lm_logits(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: bool = True) -> jax.Array:
+    tokens = batch["tokens"]
+    logits = forward(cfg, params, tokens[:, :-1], guard=guard,
+                     rules=rules, remat=remat)
+    return L.softmax_cross_entropy(logits, tokens[:, 1:],
+                                   batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving — recurrent state pool only (no KV)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+               slots=None) -> KV.StateCache:
+    n_pairs = cfg.n_layers // 2
+    H, D, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    if slots is None:
+        slots = max(1 << (batch - 1).bit_length(), 1) if batch > 1 else 1
+    pools = {
+        "mlstm_h": jnp.zeros((n_pairs, slots, H, D, D), jnp.float32),
+        "mlstm_n": jnp.zeros((n_pairs, slots, H, D, 1), jnp.float32),
+        "slstm_c": jnp.zeros((n_pairs, slots, d), jnp.float32),
+        "slstm_n": jnp.zeros((n_pairs, slots, d), jnp.float32),
+        "slstm_h": jnp.zeros((n_pairs, slots, d), jnp.float32),
+        "slstm_m": jnp.full((n_pairs, slots, H), -1e30, jnp.float32),
+    }
+    return KV.StateCache(pools=pools,
+                         slot_ids=jnp.arange(batch, dtype=jnp.int32),
+                         seq_lens=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(cfg: ModelConfig, params: Params, cache: KV.StateCache,
+            tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+            rules: Optional[ShardingRules] = None,
+            positions: Optional[jax.Array] = None
+            ) -> Tuple[KV.StateCache, jax.Array]:
+    """Process the prompt full-sequence, capture per-layer final recurrent
+    states into the (fenced) state pool, return last-position logits."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, guard)
+    n_pairs = cfg.n_layers // 2
+
+    def pair(carry, inp):
+        x, cache = carry
+        li, pm, psl = inp
+        y, h_f, n_f = mlstm_apply(cfg, pm, x)
+        cache = cache.write("mlstm_h", li, h_f, guard)
+        cache = cache.write("mlstm_n", li, n_f, guard)
+        x = x + y
+        y, st = slstm_apply(cfg, psl, x)
+        cache = cache.write("slstm_c", li, st[0], guard)
+        cache = cache.write("slstm_n", li, st[1], guard)
+        cache = cache.write("slstm_h", li, st[2], guard)
+        cache = cache.write("slstm_m", li, st[3], guard)
+        x = x + y
+        if rules is not None:
+            x = constrain(x, rules, ("batch", "seq", None))
+        return (x, cache), None
+
+    (x, cache), _ = jax.lax.scan(
+        pair, (x, cache),
+        (jnp.arange(n_pairs, dtype=jnp.int32),
+         params["mlstm"], params["slstm"]))
+    cache = dataclasses.replace(cache, seq_lens=cache.seq_lens + S)
+    x = L.apply_norm(cfg, params["norm_f"], x[:, -1:])
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return cache, logits[:, 0]
+
+
+def decode(cfg: ModelConfig, params: Params, cache: KV.StateCache,
+           tokens: jax.Array, *, guard: Optional[GuardSpec] = None,
+           rules: Optional[ShardingRules] = None,
+           positions: Optional[jax.Array] = None
+           ) -> Tuple[KV.StateCache, jax.Array]:
+    x = L.embed_tokens(params["embed"], tokens[:, None], guard)
+    n_pairs = cfg.n_layers // 2
+
+    def pair(carry, inp):
+        x, cache = carry
+        li, pm, psl = inp
+        h = cache.read("mlstm_h", li, guard)
+        n = cache.read("mlstm_n", li, guard)
+        y, h, n = mlstm_step(cfg, pm, x, h, n)
+        cache = cache.write("mlstm_h", li, h, guard)
+        cache = cache.write("mlstm_n", li, n, guard)
+        x = x + y
+        st = (cache.read("slstm_c", li, guard),
+              cache.read("slstm_n", li, guard),
+              cache.read("slstm_h", li, guard),
+              cache.read("slstm_m", li, guard))
+        xn = L.apply_norm(cfg, psl["norm"], x)
+        pre = (xn @ psl["w_in"])[:, 0]
+        st = _slstm_cell(cfg, psl, pre, st)
+        cache = cache.write("slstm_c", li, st[0], guard)
+        cache = cache.write("slstm_n", li, st[1], guard)
+        cache = cache.write("slstm_h", li, st[2], guard)
+        cache = cache.write("slstm_m", li, st[3], guard)
+        y = (st[2].astype(x.dtype)[:, None, :]) @ psl["wo"]
+        x = x + y
+        return (x, cache), None
+
+    (x, cache), _ = jax.lax.scan(
+        pair, (x, cache),
+        (jnp.arange(n_pairs, dtype=jnp.int32),
+         params["mlstm"], params["slstm"]))
+    cache = dataclasses.replace(cache, seq_lens=cache.seq_lens + 1)
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return cache, logits[:, 0]

@@ -1,0 +1,159 @@
+"""Optimizers — AdamW and Adafactor, self-contained (no optax), pytree
+native, sharding-transparent (state inherits param sharding => ZeRO comes
+free from the FSDP param rules).
+
+API (optax-like):
+
+    opt = adamw(schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(schedule: Callable[[jax.Array], jax.Array], *,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = schedule(step)
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m_new / b1t
+            vh = v_new / b2t
+            u = -lr * (mh / (jnp.sqrt(vh) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u, m_new, v_new
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in
+                zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree.unflatten(tree, [o[0] for o in outs])
+        new_state = {
+            "step": step,
+            "m": jax.tree.unflatten(tree, [o[1] for o in outs]),
+            "v": jax.tree.unflatten(tree, [o[2] for o in outs]),
+        }
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — O(n+m) state for (n,m) weights)
+# ---------------------------------------------------------------------------
+
+def adafactor(schedule: Callable[[jax.Array], jax.Array], *,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]),
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), eps) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                v_new = {"vr": vr, "vc": vc}
+            else:
+                v_new_ = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v_new_ + eps)
+                v_new = {"v": v_new_}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            u = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return u, v_new
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_v = state["v"]
+        flat_vl = jax.tree.leaves(
+            flat_v, is_leaf=lambda x: isinstance(x, dict) and (
+                "v" in x or "vr" in x))
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_vl, flat_p)]
+        updates = jax.tree.unflatten(tree, [o[0] for o in outs])
+        v_tree = jax.tree.unflatten(tree, [o[1] for o in outs])
+        return updates, {"step": step, "v": v_tree}
+
+    return Optimizer(init=init, update=update)

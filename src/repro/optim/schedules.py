@@ -1,0 +1,38 @@
+"""LR schedules — cosine and WSD (warmup-stable-decay, minicpm-2b)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (
+            1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return f
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (minicpm): linear warmup, flat plateau,
+    exponential-ish (here: linear in log space) decay tail."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.exp(prog * math.log(final_frac))
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak_lr, dec))
+    return f
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)

@@ -1,0 +1,102 @@
+"""Property tests for the three bounds modes (Guardian §4.4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fence import (
+    FenceParams,
+    FencePolicy,
+    apply_fence,
+    fence_bitwise,
+    fence_check,
+    fence_modulo,
+    fence_modulo_magic,
+    magic_constants,
+)
+
+pow2_sizes = st.sampled_from([1, 2, 4, 8, 64, 1024, 1 << 20])
+
+
+@given(pow2_sizes, st.integers(min_value=0, max_value=63),
+       st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1),
+                min_size=1, max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_bitwise_containment_and_identity(size, base_mult, idxs):
+    base = base_mult * size            # size-aligned (invariant I2)
+    if base + size > 2**31 - 1:
+        return
+    out = np.asarray(fence_bitwise(jnp.asarray(idxs, jnp.int32),
+                                   base, size - 1))
+    assert ((out >= base) & (out < base + size)).all()
+    inside = [i for i in idxs if base <= i < base + size]
+    out_in = np.asarray(fence_bitwise(jnp.asarray(inside, jnp.int32),
+                                      base, size - 1)) if inside else []
+    assert list(out_in) == inside
+
+
+@given(st.integers(min_value=1, max_value=2**20))
+@settings(max_examples=200, deadline=None)
+def test_magic_constants_division(d):
+    m, s = magic_constants(d)
+    for n in [0, 1, d - 1, d, d + 1, 12345, 2**30, 2**31 - 1]:
+        assert (n * m) >> s == n // d, (n, d)
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=0, max_value=1000),
+       st.lists(st.integers(min_value=0, max_value=2**31 - 1),
+                min_size=1, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_modulo_magic_matches_plain(size, base, idxs):
+    idx = jnp.asarray(idxs, jnp.int32)
+    m, s = magic_constants(size)
+    a = np.asarray(fence_modulo(idx, base, size))
+    b = np.asarray(fence_modulo_magic(idx, base, size, m, s))
+    np.testing.assert_array_equal(a, b)
+    assert ((b >= base) & (b < base + size)).all()
+
+
+def test_check_detects():
+    idx = jnp.asarray([5, 10, 15, 16, -1], jnp.int32)
+    safe, ok = fence_check(idx, base=5, size=11)
+    np.testing.assert_array_equal(np.asarray(ok),
+                                  [True, True, True, False, False])
+    assert (np.asarray(safe)[~np.asarray(ok)] == 5).all()
+
+
+def test_apply_fence_dispatch():
+    idx = jnp.asarray([100], jnp.int32)
+    p = FenceParams(base=0, size=64)
+    out, ok = apply_fence(FencePolicy.NONE, idx, p)
+    assert int(out[0]) == 100 and ok is None
+    out, ok = apply_fence(FencePolicy.BITWISE, idx, p)
+    assert int(out[0]) == 100 & 63 and ok is None
+    out, ok = apply_fence(FencePolicy.MODULO, idx, p)
+    assert int(out[0]) == 100 % 64
+    out, ok = apply_fence(FencePolicy.CHECK, idx, p)
+    assert not bool(ok[0]) and int(out[0]) == 0
+
+
+def test_fence_params_traced_vs_static():
+    p = FenceParams(base=jnp.int32(64), size=jnp.int32(64))
+    assert not p.is_static
+    with pytest.raises(ValueError):
+        _ = p.magic   # modulo needs concrete size
+    q = FenceParams(base=64, size=64)
+    assert q.is_static and q.mask == 63
+
+
+@given(st.integers(min_value=0, max_value=3),
+       st.lists(st.integers(min_value=-100, max_value=100), min_size=4,
+                max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_per_row_fencing(row, idxs):
+    """Batched serving: per-row (base, mask) arrays fence elementwise."""
+    base = jnp.asarray([0, 16, 32, 48], jnp.int32)
+    mask = jnp.asarray([15, 15, 15, 15], jnp.int32)
+    idx = jnp.asarray(idxs, jnp.int32)
+    out = np.asarray(fence_bitwise(idx, base, mask))
+    for r in range(4):
+        assert 16 * r <= out[r] < 16 * (r + 1)

@@ -1,0 +1,149 @@
+"""Layer-level tests: flash attention vs naive ref across masks, RoPE /
+M-RoPE, norms, cross-entropy."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def ref_attn(q, k, v, causal=True, window=0, q_offset=0, kv_len=None):
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_len)
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D)
+
+
+@pytest.mark.parametrize("window", [0, 13])
+@pytest.mark.parametrize("S,qc,kc", [(64, 16, 16), (100, 32, 16),
+                                     (128, 128, 128)])
+def test_chunked_attention_fwd(window, S, qc, kc):
+    rng = jax.random.PRNGKey(S + window)
+    ks = jax.random.split(rng, 3)
+    B, H, KH, D = 2, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    o1 = L.chunked_attention(q, k, v, causal=True, window=window,
+                             q_chunk=qc, kv_chunk=kc)
+    o2 = ref_attn(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_chunked_attention_grads():
+    rng = jax.random.PRNGKey(7)
+    ks = jax.random.split(rng, 3)
+    B, S, H, KH, D = 2, 96, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+
+    def f1(q, k, v):
+        return jnp.sum(jnp.sin(L.chunked_attention(
+            q, k, v, causal=True, q_chunk=32, kv_chunk=32)))
+
+    def f2(q, k, v):
+        return jnp.sum(jnp.sin(ref_attn(q, k, v, causal=True)))
+
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5)
+
+
+def test_decode_attention_matches_ref():
+    rng = jax.random.PRNGKey(3)
+    ks = jax.random.split(rng, 3)
+    B, S, H, KH, D = 3, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    kv_len = jnp.asarray([10, 33, 64], jnp.int32)
+    o1 = L.decode_attention(q, k, v, kv_len)
+    for b in range(B):
+        o2 = ref_attn(q[b:b + 1], k[b:b + 1], v[b:b + 1], causal=False,
+                      kv_len=int(kv_len[b]))
+        np.testing.assert_allclose(np.asarray(o1[b]), np.asarray(o2[0]),
+                                   atol=2e-5)
+
+
+def test_rope_properties():
+    """RoPE preserves norms and is relative: scores depend only on the
+    position difference."""
+    rng = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 8, 1, 32
+    x = jax.random.normal(rng, (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), atol=1e-4)
+    # relative property: <R(p)q, R(p+d)k> == <R(0)q, R(d)k>
+    q = jax.random.normal(rng, (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    for p, d in [(0, 3), (5, 3), (11, 3)]:
+        qp = L.apply_rope(q, jnp.full((1, 1), p, jnp.int32), 1e4)
+        kp = L.apply_rope(k, jnp.full((1, 1), p + d, jnp.int32), 1e4)
+        got = float(jnp.sum(qp * kp))
+        q0 = L.apply_rope(q, jnp.zeros((1, 1), jnp.int32), 1e4)
+        kd = L.apply_rope(k, jnp.full((1, 1), d, jnp.int32), 1e4)
+        want = float(jnp.sum(q0 * kd))
+        assert abs(got - want) < 1e-4
+
+
+def test_mrope_equals_rope_when_positions_equal():
+    rng = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 8, 2, 32
+    x = jax.random.normal(rng, (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    pos3 = jnp.repeat(pos[..., None], 3, axis=-1)
+    y1 = L.apply_rope(x, pos, 1e4)
+    y2 = L.apply_mrope(x, pos3, 1e4, L.mrope_sections(D))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_norms():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 3 + 1
+    y = L.rmsnorm(x, jnp.ones(16))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+    z = L.layernorm(x, jnp.ones(16), jnp.zeros(16))
+    np.testing.assert_allclose(np.mean(np.asarray(z), -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.std(np.asarray(z), -1), 1.0, atol=1e-2)
+
+
+def test_cross_entropy_matches_manual():
+    rng = jax.random.PRNGKey(0)
+    logits = jax.random.normal(rng, (2, 5, 11))
+    labels = jax.random.randint(rng, (2, 5), 0, 11)
+    got = float(L.softmax_cross_entropy(logits, labels))
+    p = jax.nn.log_softmax(logits, -1)
+    want = -float(jnp.mean(jnp.take_along_axis(
+        p, labels[..., None], axis=-1)))
+    assert abs(got - want) < 1e-5
+    # masked variant
+    mask = jnp.asarray([[1, 1, 0, 0, 0], [1, 0, 0, 0, 0]], jnp.float32)
+    got_m = float(L.softmax_cross_entropy(logits, labels, mask))
+    rows = -np.asarray(jnp.take_along_axis(p, labels[..., None], -1))[..., 0]
+    want_m = (rows * np.asarray(mask)).sum() / 3
+    assert abs(got_m - want_m) < 1e-5

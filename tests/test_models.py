@@ -1,0 +1,248 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency +
+SSD chunked-vs-sequential equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.models import get_model
+from repro.models import transformer as TF
+from repro.models.ssd import ssd_chunked, ssd_reference
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B, S, rng=RNG):
+    if cfg.family == "encdec":
+        return {"src": jnp.ones((B, 16, cfg.d_model), jnp.float32),
+                "tgt": jax.random.randint(rng, (B, S + 1), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        return {"tokens": jax.random.randint(rng, (B, S + 1), 0,
+                                             cfg.vocab),
+                "patches": jnp.ones((B, 8, cfg.d_model), jnp.float32),
+                "positions": jnp.tile(
+                    jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                    (B, 1, 3))}
+    return {"tokens": jax.random.randint(rng, (B, S + 1), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward/train step on CPU, shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss(p, batch, remat=False))(params)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(not bool(jnp.any(jnp.isnan(g))) for g in flat)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_serve_step(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B, S = 2, 32
+    if cfg.family == "ssm":
+        cache = api.init_cache(B)
+    elif cfg.family == "encdec":
+        cache = api.init_cache(B, 64, src_len=16)
+    else:
+        cache = api.init_cache(B, 64)
+    batch = make_batch(cfg, B, S)
+    batch.pop("positions", None)
+    if "tokens" in batch:
+        batch["tokens"] = batch["tokens"][:, :S]
+    if "tgt" in batch:
+        batch["tgt"] = batch["tgt"][:, :S]
+    if cfg.family == "vlm":
+        batch["positions"] = jnp.tile(
+            jnp.arange(S, dtype=jnp.int32)[None, :, None], (2, 1, 3))
+    cache, logits = api.prefill(params, cache, batch)
+    assert logits.shape == (B, cfg.vocab)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    cache, logits = api.decode(params, cache, nxt)
+    assert logits.shape == (B, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "qwen1.5-32b",
+                                  "grok-1-314b"])
+def test_decode_matches_forward(arch):
+    """prefill + decode == full forward, position by position (f32)."""
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B, S = 2, 48
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    if cfg.family == "moe":
+        from repro.models import moe as MOE
+        full, _ = MOE.forward(cfg, params, toks)
+    else:
+        full = TF.forward(cfg, params, toks)
+    cache = api.init_cache(B, 128, dtype=jnp.float32)
+    cache, lg = api.prefill(params, cache, {"tokens": toks[:, :S - 3]})
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, S - 4]), atol=2e-4)
+    for t in range(S - 3, S):
+        cache, lg = api.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t]), atol=2e-4)
+
+
+def test_hybrid_decode_matches_forward():
+    cfg = get_config("zamba2-7b").reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    from repro.models import hybrid as HY
+    B, S = 2, 40
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    full = HY.forward(cfg, params, toks)
+    cache = api.init_cache(B, 64, dtype=jnp.float32)
+    cache, lg = api.prefill(params, cache, {"tokens": toks[:, :S - 2]})
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, S - 3]), atol=3e-4)
+    for t in range(S - 2, S):
+        cache, lg = api.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t]), atol=3e-4)
+
+
+def test_xlstm_decode_matches_forward():
+    cfg = get_config("xlstm-350m").reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    from repro.models import xlstm as XL
+    B, S = 2, 24
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    full = XL.forward(cfg, params, toks)
+    cache = api.init_cache(B)
+    cache, lg = api.prefill(params, cache, {"tokens": toks[:, :S - 2]})
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, S - 3]), atol=3e-4)
+    for t in range(S - 2, S):
+        cache, lg = api.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t]), atol=3e-4)
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (37, 8), (64, 64),
+                                     (100, 16)])
+def test_ssd_chunked_matches_reference(S, chunk):
+    rng = jax.random.PRNGKey(S)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    B, H, P, N = 2, 3, 8, 5
+    u = jax.random.normal(k1, (B, S, H, P))
+    a = -jnp.abs(jax.random.normal(k2, (B, S, H))) * 0.2
+    b = jax.random.normal(k3, (B, S, H, N))
+    c = jax.random.normal(k4, (B, S, H, N))
+    h0 = jax.random.normal(rng, (B, H, N, P)) * 0.1
+    y1, hf1 = ssd_chunked(u, a, b, c, h0=h0, chunk=chunk)
+    y2, hf2 = ssd_reference(u, a, b, c, h0=h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf1), np.asarray(hf2),
+                               atol=2e-4)
+
+
+def test_guarded_model_isolation():
+    """Tenant guard: adversarial slot ids in the cache wrap into the
+    tenant's own slot partition — neighbour slots never written."""
+    from repro.core.fence import FenceParams, FencePolicy
+    from repro.models.guard import GuardSpec
+    cfg = get_config("llama3-405b").reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B = 2
+    cache = api.init_cache(2, 64, dtype=jnp.float32, slots=8)
+    # tenant owns slots [0, 2); forge slot ids pointing at slot 5
+    cache = dataclasses.replace(
+        cache, slot_ids=jnp.asarray([5, 6], jnp.int32))
+    guard = GuardSpec(policy=FencePolicy.BITWISE,
+                      kv=FenceParams(base=0, size=2),
+                      page=FenceParams(base=0, size=1),
+                      vocab=FenceParams(base=0, size=256))
+    toks = jax.random.randint(RNG, (B, 32), 0, cfg.vocab)
+    cache2, _ = api.prefill(params, cache, {"tokens": toks}, guard=guard)
+    # slots >= 2 remain untouched (all zeros)
+    assert (np.asarray(cache2.k[:, 2:]) == 0).all()
+    assert (np.asarray(cache2.k[:, :2]) != 0).any()
+
+
+def test_shape_applicability_rules():
+    assert not shape_applicable(get_config("llama3-405b"),
+                                SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("zamba2-7b"),
+                            SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("xlstm-350m"),
+                            SHAPES["long_500k"])[0]
+    for arch in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(arch), SHAPES[s])[0]
+
+
+def test_param_counts_sane():
+    # analytic counts should be within ~25% of the published sizes
+    expect = {"llama3-405b": 405e9, "qwen1.5-32b": 32e9,
+              "minicpm-2b": 2.4e9, "stablelm-3b": 2.8e9,
+              "grok-1-314b": 314e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n < got < 1.35 * n, (arch, got, n)
+
+
+def test_encdec_decode_matches_train_forward():
+    """seamless: prefill + decode logits == teacher-forced decoder logits."""
+    from repro.models import encdec as ED
+    cfg = get_config("seamless-m4t-medium").reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B, S_src, S = 2, 16, 32
+    src = jax.random.normal(RNG, (B, S_src, cfg.d_model))
+    tgt = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    memory = ED.encode(cfg, params, src)
+    full = ED.decode_train(cfg, params, tgt, memory)
+    cache = api.init_cache(B, 64, src_len=S_src, dtype=jnp.float32)
+    cache, lg = api.prefill(params, cache,
+                            {"src": src, "tgt": tgt[:, :S - 2]})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S - 3]),
+                               atol=3e-4)
+    for t in range(S - 2, S):
+        cache, lg = api.decode(params, cache, tgt[:, t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t]), atol=3e-4)
+
+
+def test_vlm_decode_matches_forward():
+    """qwen2-vl: patched prefill + text decode == full M-RoPE forward."""
+    from repro.models import vlm as VLM
+    cfg = get_config("qwen2-vl-2b").reduced()
+    api = get_model(cfg)
+    params = api.init(RNG)
+    B, S, NP = 2, 40, 8
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    patches = jax.random.normal(RNG, (B, NP, cfg.d_model)) * 0.02
+    pos3 = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                    (B, 1, 3))
+    full = VLM.forward(cfg, params, toks, patches, pos3)
+    cache = api.init_cache(B, 64, dtype=jnp.float32)
+    Sp = S - 2
+    cache, lg = api.prefill(params, cache,
+                            {"tokens": toks[:, :Sp],
+                             "patches": patches,
+                             "positions": pos3[:, :Sp]})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, Sp - 1]),
+                               atol=3e-4)
+    for t in range(Sp, S):
+        cache, lg = api.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, t]), atol=3e-4)

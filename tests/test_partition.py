@@ -1,0 +1,124 @@
+"""Property tests for the pow2 buddy allocator + partition bounds table
+(Guardian §4.2.1 invariants I1/I2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    BuddyAllocator,
+    IntraPartitionAllocator,
+    OutOfArenaMemory,
+    Partition,
+    PartitionBoundsTable,
+    UnknownTenant,
+    is_pow2,
+    next_pow2,
+)
+
+
+def test_next_pow2():
+    assert next_pow2(1) == 1
+    assert next_pow2(2) == 2
+    assert next_pow2(3) == 4
+    assert next_pow2(1023) == 1024
+    with pytest.raises(ValueError):
+        next_pow2(0)
+
+
+@given(st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_buddy_invariants(sizes):
+    """Every allocated block is pow2-sized and size-aligned (I1 + I2)."""
+    alloc = BuddyAllocator(1024)
+    blocks = []
+    for s in sizes:
+        try:
+            base, size = alloc.alloc(s)
+        except OutOfArenaMemory:
+            continue
+        assert is_pow2(size) and size >= s          # I1
+        assert base % size == 0                     # I2
+        blocks.append((base, size))
+    # no overlaps
+    spans = sorted(blocks)
+    for (b1, s1), (b2, _s2) in zip(spans, spans[1:]):
+        assert b1 + s1 <= b2
+
+
+@given(st.lists(st.integers(min_value=1, max_value=128), min_size=1,
+                max_size=30), st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_buddy_free_coalesces(sizes, rnd):
+    """Alloc-all / free-all returns the arena to one maximal block."""
+    alloc = BuddyAllocator(2048)
+    bases = []
+    for s in sizes:
+        try:
+            base, _ = alloc.alloc(s)
+            bases.append(base)
+        except OutOfArenaMemory:
+            break
+    rnd.shuffle(bases)
+    for b in bases:
+        alloc.free(b)
+    assert alloc.free_slots() == 2048
+    # after full coalescing a max-size alloc succeeds
+    base, size = alloc.alloc(2048)
+    assert (base, size) == (0, 2048)
+
+
+def test_partition_validation():
+    with pytest.raises(ValueError):
+        Partition("t", base=0, size=3)       # not pow2
+    with pytest.raises(ValueError):
+        Partition("t", base=4, size=8)       # misaligned
+    p = Partition("t", base=8, size=8)
+    assert p.mask == 7 and p.end == 16
+    assert p.contains(8) and p.contains(15) and not p.contains(16)
+    assert p.contains(8, 16) and not p.contains(8, 17)
+
+
+def test_bounds_table_lifecycle():
+    tbl = PartitionBoundsTable(256)
+    a = tbl.create("a", 60)     # -> 64
+    b = tbl.create("b", 64)
+    assert a.size == 64 and b.size == 64
+    assert a.base != b.base
+    with pytest.raises(ValueError):
+        tbl.create("a", 8)      # duplicate tenant
+    assert set(tbl.tenants()) == {"a", "b"}
+    tbl.destroy("a")
+    with pytest.raises(UnknownTenant):
+        tbl.lookup("a")
+    arrays = tbl.bounds_arrays()
+    assert arrays["tenant_ids"] == ["b"]
+    assert arrays["mask"][0] == b.size - 1
+
+
+def test_intra_partition_allocator():
+    part = Partition("t", base=64, size=64)
+    sub = IntraPartitionAllocator(part)
+    x = sub.alloc(10)
+    y = sub.alloc(20)
+    assert x != y
+    sub.free(x)
+    sub.free(y)
+    assert sub.alloc(64) == 0   # fully coalesced
+    with pytest.raises(OutOfArenaMemory):
+        sub.alloc(1)
+
+
+@given(st.integers(min_value=1, max_value=512))
+@settings(max_examples=50, deadline=None)
+def test_mask_wraps_into_partition(size_req):
+    """The exported (base, mask) satisfy the paper's wrap guarantee for
+    every possible int32 index."""
+    tbl = PartitionBoundsTable(1024)
+    part = tbl.create("t", size_req)
+    for idx in (-5, 0, 1, part.base, part.end, part.end + 1, 2**31 - 1):
+        fenced = (idx & part.mask) | part.base
+        assert part.base <= fenced < part.end
+    # identity inside
+    for idx in (part.base, part.base + part.size // 2, part.end - 1):
+        assert ((idx & part.mask) | part.base) == idx

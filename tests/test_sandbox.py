@@ -1,0 +1,129 @@
+"""Jaxpr sandboxer ("PTX-patcher") tests — Guardian §4.3."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fence import FenceParams, FencePolicy
+from repro.core.sandbox import SandboxError, sandbox, sandbox_report
+
+
+def _params(base=64, size=64):
+    return FenceParams(base=base, size=size)
+
+
+def test_gather_is_fenced():
+    def kernel(arena, ptr):
+        idx = ptr + jnp.arange(8, dtype=jnp.int32)
+        return arena, jnp.take(arena, idx, axis=0)
+
+    arena = jnp.arange(256.0)
+    sb = sandbox(kernel, arena_argnums=(0,))
+    # in-partition: identical to native
+    (a1, out), ok = sb(_params(), arena, jnp.int32(64))
+    np.testing.assert_array_equal(out, np.arange(64.0, 72.0))
+    # out-of-partition: wrapped inside [64, 128)
+    (_, out2), _ = sb(_params(), arena, jnp.int32(200))
+    assert ((np.asarray(out2) >= 64) & (np.asarray(out2) < 128)).all()
+
+
+def test_scatter_is_fenced():
+    def kernel(arena, ptr):
+        idx = ptr + jnp.arange(4, dtype=jnp.int32)
+        return arena.at[idx].set(-1.0), None
+
+    arena = jnp.zeros(256)
+    sb = sandbox(kernel, arena_argnums=(0,))
+    (a1, _), _ = sb(_params(), arena, jnp.int32(250))  # would hit [250,254)
+    touched = np.nonzero(np.asarray(a1) == -1.0)[0]
+    assert ((touched >= 64) & (touched < 128)).all()
+
+
+def test_dynamic_slice_is_fenced_and_pinned():
+    def kernel(arena, start):
+        return arena, jax.lax.dynamic_slice_in_dim(arena, start, 16)
+
+    arena = jnp.arange(256.0)
+    sb = sandbox(kernel, arena_argnums=(0,))
+    (_, out), _ = sb(_params(), arena, jnp.int32(500))
+    vals = np.asarray(out)
+    assert vals.min() >= 64 and vals.max() < 128
+
+
+def test_double_indirection_fenced():
+    """Indices loaded from the arena itself (the paper's hardest case)."""
+    def kernel(arena, cols_ptr, x_ptr):
+        cols = jnp.take(arena, cols_ptr + jnp.arange(4, dtype=jnp.int32),
+                        axis=0).astype(jnp.int32)
+        return arena, jnp.take(arena, x_ptr + cols, axis=0)
+
+    arena = jnp.arange(256.0).at[64:68].set(200.0)  # poisoned indices
+    sb = sandbox(kernel, arena_argnums=(0,))
+    (_, out), _ = sb(_params(), arena, jnp.int32(64), jnp.int32(0))
+    assert ((np.asarray(out) >= 64) & (np.asarray(out) < 128)).all()
+
+
+def test_check_policy_reports():
+    def kernel(arena, ptr):
+        return arena, jnp.take(arena, ptr + jnp.arange(4, dtype=jnp.int32),
+                               axis=0)
+
+    arena = jnp.arange(256.0)
+    sb = sandbox(kernel, arena_argnums=(0,), policy=FencePolicy.CHECK)
+    _, ok = sb(_params(), arena, jnp.int32(64))
+    assert bool(ok)
+    _, ok = sb(_params(), arena, jnp.int32(200))
+    assert not bool(ok)
+
+
+def test_report_counts():
+    def kernel(arena, ptr):
+        idx = ptr + jnp.arange(4, dtype=jnp.int32)
+        vals = jnp.take(arena, idx, axis=0)
+        arena = arena.at[idx].set(vals * 2)
+        sl = jax.lax.dynamic_slice_in_dim(arena, ptr, 4)
+        return arena, sl
+
+    rep = sandbox_report(kernel, (jnp.zeros(64), jnp.int32(0)))
+    assert rep.fenced_gathers == 1
+    assert rep.fenced_scatters == 1
+    assert rep.fenced_dynamic_slices == 1
+    assert rep.fenced_total == 3
+
+
+def test_private_tensors_not_fenced():
+    """Indexing tenant-private tensors is untouched (XLA-safe already)."""
+    def kernel(arena, private, ptr):
+        return arena, jnp.take(private, ptr, axis=0)
+
+    rep = sandbox_report(kernel,
+                         (jnp.zeros(64), jnp.zeros(16), jnp.int32(0)))
+    assert rep.fenced_total == 0
+
+
+def test_loop_carried_arena_rejected():
+    def kernel(arena, n):
+        def body(a, _):
+            return a, None
+        a, _ = jax.lax.scan(body, arena, jnp.arange(4))
+        return a, None
+
+    sb = sandbox(kernel, arena_argnums=(0,))
+    with pytest.raises(SandboxError):
+        sb(_params(), jnp.zeros(64), jnp.int32(0))
+
+
+def test_nested_call_instrumented():
+    """Fences land inside jitted library wrappers (implicit-call case)."""
+    @jax.jit
+    def inner(arena, idx):
+        return jnp.take(arena, idx, axis=0)
+
+    def kernel(arena, ptr):
+        return arena, inner(arena, ptr + jnp.arange(4, dtype=jnp.int32))
+
+    arena = jnp.arange(256.0)
+    sb = sandbox(kernel, arena_argnums=(0,))
+    (_, out), _ = sb(_params(), arena, jnp.int32(200))
+    assert ((np.asarray(out) >= 64) & (np.asarray(out) < 128)).all()
