@@ -29,6 +29,8 @@ SUITES = {
                "implicit library calls (Table 6)"),
     "mem": ("benchmarks.manager_memory",
             "context-memory footprint (§2.2)"),
+    "sched": ("benchmarks.scheduler_throughput",
+              "batched launch scheduler vs round-robin drain (§4.2.4)"),
     "compress": ("benchmarks.compression",
                  "cross-pod int8 gradient compression (beyond-paper)"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),

@@ -1,0 +1,91 @@
+"""Batched multi-tenant launch scheduler vs round-robin drain.
+
+The paper's grdManager multiplexes billions of launches from concurrent
+tenants (§4.2.3–§4.2.4); the scheduler coalesces compatible cross-tenant
+launches into one fused device step (per-row dynamic (base, mask) rows —
+one compiled binary for any tenant set).  This benchmark measures
+launches/sec of the fused drain vs the per-launch round-robin drain at
+2/4/8 simulated tenants, on whatever backend is present (CPU works).
+
+    PYTHONPATH=src python -m benchmarks.scheduler_throughput
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FencePolicy, GuardianManager
+
+TOTAL_SLOTS = 1 << 18   # fixed device arena, carved among the tenants
+N_ROUNDS = 30           # launches per tenant per timed repetition
+REPS = 5
+
+
+def _kernel(arena, ptr, n):
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals * 1.0001 + 1.0), None
+
+
+def _setup(n_tenants: int, batched: bool):
+    mgr = GuardianManager(total_slots=TOTAL_SLOTS,
+                          policy=FencePolicy.BITWISE,
+                          batch_launches=batched)
+    clients, ptrs = [], []
+    for i in range(n_tenants):
+        c = mgr.register_tenant(f"t{i}", TOTAL_SLOTS // (2 * n_tenants))
+        c.module_load("work", _kernel)
+        p = c.malloc(16)
+        c.memcpy_h2d(p, np.zeros(16, np.float32))
+        clients.append(c)
+        ptrs.append(p)
+    mgr.synchronize()
+    return mgr, clients, ptrs
+
+
+def _drain_rate(mgr, clients, ptrs, rounds: int) -> float:
+    """Enqueue rounds×tenants launches, drain, return launches/sec."""
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("work", ptrs=[p], args=(16,))
+    mgr.run_queued()
+    jax.block_until_ready(mgr.arena.buf)
+    dt = time.perf_counter() - t0
+    return rounds * len(clients) / dt
+
+
+def main(out: List[str]):
+    for n_tenants in (2, 4, 8):
+        setups = {b: _setup(n_tenants, b) for b in (False, True)}
+        for b, (mgr, clients, ptrs) in setups.items():
+            _drain_rate(mgr, clients, ptrs, 4)          # warmup + compile
+        samples = {False: [], True: []}
+        for _ in range(REPS):                           # alternate modes so
+            for b, (mgr, clients, ptrs) in setups.items():   # drift hits both
+                samples[b].append(
+                    _drain_rate(mgr, clients, ptrs, N_ROUNDS))
+        rates = {b: float(np.median(v)) for b, v in samples.items()}
+        width = setups[True][0].scheduler.stats.summary()["mean_batch_width"]
+        win = rates[True] / rates[False]
+        out.append(f"sched.roundrobin.{n_tenants}t,"
+                   f"{1e6 / rates[False]:.2f},"
+                   f"launches_per_s={rates[False]:.0f}")
+        out.append(f"sched.batched.{n_tenants}t,"
+                   f"{1e6 / rates[True]:.2f},"
+                   f"launches_per_s={rates[True]:.0f}"
+                   f";mean_width={width:.1f};speedup={win:.2f}x")
+        for line in out[-2:]:
+            print(line)
+    print("batched scheduler speedup vs round-robin drain "
+          "(same kernels, same tenants; fused steps carry per-row "
+          "(base, mask) rows — one binary, no per-tenant recompiles)")
+
+
+if __name__ == "__main__":
+    main([])

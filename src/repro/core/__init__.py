@@ -7,6 +7,8 @@ Layering (bottom-up):
     arena       — shared device arenas (flat DRAM model + structured pools)
     sandbox     — jaxpr-level kernel instrumentor (the "PTX-patcher")
     interception— GuardianClient ("grdLib"): device-API shadowing + traces
+    scheduler   — BatchedLaunchScheduler: coalesces compatible cross-tenant
+                  launches into fused device steps (per-row fence tables)
     manager     — GuardianManager ("grdManager"): sole device owner,
                   validated calls, round-robin spatial multiplexing
     libsim      — simulated closed-source accelerated libraries (Table 6)
@@ -16,6 +18,7 @@ from repro.core.arena import Arena, ArenaSpec, make_flat_arena
 from repro.core.fence import (
     FenceParams,
     FencePolicy,
+    FenceTable,
     apply_fence,
     fence_bitwise,
     fence_check,
@@ -24,6 +27,12 @@ from repro.core.fence import (
     guarded_take,
     guarded_update,
     magic_constants,
+    require_pow2_sizes,
+)
+from repro.core.scheduler import (
+    BatchedLaunchScheduler,
+    LaunchRequest,
+    SchedulerStats,
 )
 from repro.core.interception import CallTrace, DevicePtr, GuardianClient
 from repro.core.manager import (
@@ -42,9 +51,11 @@ from repro.core.sandbox import SandboxError, sandbox, sandbox_report
 
 __all__ = [
     "Arena", "ArenaSpec", "make_flat_arena",
-    "FenceParams", "FencePolicy", "apply_fence", "fence_bitwise",
-    "fence_check", "fence_modulo", "fence_modulo_magic", "guarded_take",
-    "guarded_update", "magic_constants",
+    "FenceParams", "FencePolicy", "FenceTable", "apply_fence",
+    "fence_bitwise", "fence_check", "fence_modulo", "fence_modulo_magic",
+    "guarded_take", "guarded_update", "magic_constants",
+    "require_pow2_sizes",
+    "BatchedLaunchScheduler", "LaunchRequest", "SchedulerStats",
     "CallTrace", "DevicePtr", "GuardianClient",
     "GuardianManager", "GuardianViolation", "SharingMode",
     "BuddyAllocator", "OutOfArenaMemory", "Partition",

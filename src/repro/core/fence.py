@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -145,11 +145,22 @@ class FenceParams:
 
     @property
     def mask(self):
+        """``size - 1`` — only a valid bitwise fence mask for pow2 sizes.
+
+        Static sizes are checked here.  **Traced sizes cannot be checked at
+        trace time**: ``size - 1`` is returned unconditionally, and the
+        wrap guarantee of BITWISE silently breaks if the traced value is
+        not a power of two.  The contract is therefore that every caller
+        building traced params from host-known sizes validates them first
+        with :func:`require_pow2_sizes` — the manager, the serve engine and
+        :class:`FenceTable` all do (partitions from the buddy allocator are
+        pow2 by construction; this guards hand-built params).
+        """
         if isinstance(self.size, int):
             if not is_pow2(self.size):
                 raise ValueError("mask only defined for pow2 partitions")
             return self.size - 1
-        return self.size - 1  # traced: manager guarantees pow2 (allocator I1)
+        return self.size - 1  # traced: caller validated via require_pow2_sizes
 
     @property
     def magic(self) -> Tuple[int, int]:
@@ -167,6 +178,81 @@ class FenceParams:
     def contains(self, lo: int, hi: Optional[int] = None) -> bool:
         hi = lo + 1 if hi is None else hi
         return self.base <= lo and hi <= self.base + self.size
+
+
+def require_pow2_sizes(sizes) -> None:
+    """Host-side guard for building *traced* fence params (see
+    :attr:`FenceParams.mask`): every size must be a positive power of two.
+
+    Accepts a scalar or any array-like of host-known ints.  Raises
+    ``ValueError`` listing the offending sizes; a traced (abstract) input is
+    a programming error and also raises.
+    """
+    arr = np.asarray(sizes)
+    if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"require_pow2_sizes needs host-known integer sizes, got "
+            f"dtype {arr.dtype}: validate before staging to device")
+    flat = arr.reshape(-1).astype(np.int64)
+    bad = flat[(flat <= 0) | ((flat & (flat - 1)) != 0)]
+    if bad.size:
+        raise ValueError(
+            f"partition sizes must be positive powers of two for bitwise "
+            f"fencing (invariant I1); offenders: {sorted(set(bad.tolist()))}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FenceTable:
+    """Stacked per-tenant fence rows — the batched form of
+    :class:`FenceParams` (one ``(base, mask)`` int32 row per tenant).
+
+    This is what the batched multi-tenant scheduler passes to a fused
+    device step: a single ``(T, 2)`` int32 table of dynamic scalars, so one
+    compiled binary serves any set of tenants (the paper's "two extra
+    kernel parameters", vectorized across tenants — no per-tenant
+    recompiles).  Row ``r`` fences row ``r`` of the fused batch; a
+    tenant-id *column* can gather per-element params for row-mixed batches
+    (the serving engine's per-row guard).
+    """
+
+    rows: jax.Array            # (T, 2) int32: rows[r] = (base, mask)
+
+    @classmethod
+    def from_partitions(cls, parts: Sequence[Partition]) -> "FenceTable":
+        if not parts:
+            raise ValueError("FenceTable needs at least one partition")
+        require_pow2_sizes([p.size for p in parts])
+        arr = np.array([[p.base, p.mask] for p in parts], dtype=np.int32)
+        return cls(rows=jnp.asarray(arr))
+
+    @classmethod
+    def from_bounds(cls, base, size) -> "FenceTable":
+        """Build from host (base, size) arrays, validating pow2 sizes."""
+        base = np.asarray(base, np.int32).reshape(-1)
+        size = np.asarray(size, np.int64).reshape(-1)
+        require_pow2_sizes(size)
+        arr = np.stack([base, (size - 1).astype(np.int32)], axis=1)
+        return cls(rows=jnp.asarray(arr.astype(np.int32)))
+
+    def __len__(self) -> int:
+        return int(self.rows.shape[0])
+
+    def row_params(self, row) -> FenceParams:
+        """Traced FenceParams for one table row (fused-step row ``r``)."""
+        return FenceParams(base=self.rows[row, 0],
+                           size=self.rows[row, 1] + 1)
+
+    def gather(self, tenant_col: jax.Array) -> FenceParams:
+        """Per-element FenceParams for a tenant-id column.
+
+        ``tenant_col[i]`` selects the table row fencing element ``i``; the
+        returned params hold ``(N,)`` base/size arrays that broadcast
+        elementwise through the fences (batched serving, §4.2.4).
+        """
+        col = jnp.asarray(tenant_col, jnp.int32)
+        base = jnp.take(self.rows[:, 0], col, axis=0)
+        mask = jnp.take(self.rows[:, 1], col, axis=0)
+        return FenceParams(base=base, size=mask + 1)
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,13 @@ Responsibilities (paper section in parentheses):
   unless the tenant runs **standalone**, in which case the native kernel is
   issued (zero-overhead fast path).
 * **Spatial multiplexing** (§4.2.4): per-tenant queues drained round-robin;
-  JAX's async dispatch plays the role of CUDA streams (ops from different
-  tenants overlap on device).  A TIME_SHARE mode serializes tenants with a
-  device sync in between — the paper's baseline.
+  the head op of each tenant is selected per cycle, and the selected
+  *launches* are handed to the :class:`BatchedLaunchScheduler`, which
+  coalesces compatible cross-tenant launches into one fused device step
+  per cycle (per-row (base, mask) scalars from a FenceTable — one compiled
+  binary for any tenant set).  A TIME_SHARE mode serializes tenants with a
+  device sync in between — the paper's baseline.  ``batch_launches=False``
+  restores the per-launch round-robin drain (the benchmark baseline).
 
 Bounds are passed to kernels as **dynamic scalars** for BITWISE/CHECK (one
 shared binary for all tenants — the paper's two-extra-parameters design) and
@@ -42,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import Arena, ArenaSpec, make_flat_arena
-from repro.core.fence import FenceParams, FencePolicy
+from repro.core.fence import FenceParams, FencePolicy, require_pow2_sizes
 from repro.core.interception import DevicePtr, GuardianClient
 from repro.core.partition import (
     IntraPartitionAllocator,
@@ -51,6 +55,7 @@ from repro.core.partition import (
     UnknownTenant,
 )
 from repro.core.sandbox import SandboxError, sandbox
+from repro.core.scheduler import BatchedLaunchScheduler, LaunchRequest
 
 
 class GuardianViolation(Exception):
@@ -126,10 +131,14 @@ class GuardianManager:
         mode: SharingMode = SharingMode.SPATIAL,
         standalone_fast_path: bool = True,
         extra_arenas: Sequence[ArenaSpec] = (),
+        batch_launches: bool = True,
+        max_fuse: int = 8,
     ):
         self.policy = policy
         self.mode = mode
         self.standalone_fast_path = standalone_fast_path
+        self.batch_launches = batch_launches
+        self.scheduler = BatchedLaunchScheduler(self, max_fuse=max_fuse)
 
         # §4.2.1 — reserve all device memory up front.
         self.arena = Arena(make_flat_arena(total_slots, dtype))
@@ -187,9 +196,13 @@ class GuardianManager:
         return FenceParams.from_partition(part)
 
     def _scalars_for(self, tenant_id: str, part: Partition):
-        """Device-staged (base, mask, size) int32 scalars per tenant."""
+        """Device-staged (base, mask, size) int32 scalars per tenant.
+
+        Validates pow2 *before* staging: a traced FenceParams.mask cannot
+        check its size at trace time (see fence.require_pow2_sizes)."""
         cached = self._part_scalars.get(tenant_id)
         if cached is None or cached[3] != (part.base, part.size):
+            require_pow2_sizes(part.size)
             cached = (jnp.int32(part.base), jnp.int32(part.mask),
                       jnp.int32(part.size), (part.base, part.size))
             self._part_scalars[tenant_id] = cached
@@ -333,52 +346,57 @@ class GuardianManager:
                 "(application would fail to start, §4.1)")
         part = self.bounds.lookup(tenant_id)
         t1 = time.perf_counter_ns()
+        self.launch_stats.lookup_ns.append(t1 - t0)
+
+        ptr_args = tuple(p.addr_device for p in ptrs)
+        req = LaunchRequest(tenant_id=tenant_id, name=name,
+                            policy=self._effective_policy(), entry=entry,
+                            part=part, call_args=(*ptr_args, *args))
+        if enqueue or self.mode is SharingMode.SPATIAL:
+            self._enqueue(tenant_id, "launch", (req,))
+            return None
+        return self._execute_request(req)
+
+    def _execute_request(self, req: LaunchRequest) -> Any:
+        """Per-launch (unbatched) dispatch of one augmented request —
+        the standalone fast path, TIME_SHARE, MODULO/CHECK, and width-1
+        scheduler batches all land here."""
+        entry, part, policy = req.entry, req.part, req.policy
 
         # -- augment params (Table 5 "Augment kernel params") ------------
-        ptr_args = tuple(p.addr_device for p in ptrs)
-        policy = self._effective_policy()
+        t1 = time.perf_counter_ns()
         if policy is FencePolicy.NONE:
-            call_args = (*ptr_args, *args)
+            call_args = req.call_args
             fn = _specialized_jit(entry, "native", entry.native, call_args)
         elif policy is FencePolicy.BITWISE:
-            base_s, mask_s, _ = self._scalars_for(tenant_id, part)
-            call_args = (base_s, mask_s, *ptr_args, *args)
+            base_s, mask_s, _ = self._scalars_for(req.tenant_id, part)
+            call_args = (base_s, mask_s, *req.call_args)
             fn = _specialized_jit(entry, "bitwise", entry.fenced_dyn,
                                   call_args)
         elif policy is FencePolicy.MODULO:
             raw = self._modulo_exec(entry, part)
-            call_args = (*ptr_args, *args)
+            call_args = req.call_args
             fn = _specialized_jit(entry, f"mod{part.base}.{part.size}",
                                   raw, call_args)
         elif policy is FencePolicy.CHECK:
-            base_s, _, size_s = self._scalars_for(tenant_id, part)
-            call_args = (base_s, size_s, *ptr_args, *args)
+            base_s, _, size_s = self._scalars_for(req.tenant_id, part)
+            call_args = (base_s, size_s, *req.call_args)
             fn = _specialized_jit(entry, "check", entry.checked_dyn,
                                   call_args)
         else:  # pragma: no cover
             raise ValueError(policy)
-        call = (fn, call_args)
         t2 = time.perf_counter_ns()
-
-        self.launch_stats.lookup_ns.append(t1 - t0)
         self.launch_stats.augment_ns.append(t2 - t1)
 
-        if enqueue or self.mode is SharingMode.SPATIAL:
-            self._enqueue(tenant_id, "launch", (name, policy, call))
-            return None
-        return self._execute_launch(tenant_id, name, policy, call)
-
-    def _execute_launch(self, tenant_id: str, name: str,
-                        policy: FencePolicy, call) -> Any:
-        fn, params = call
-        t0 = time.perf_counter_ns()
-        result = fn(self.arena.buf, *params)
-        self.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+        # -- dispatch ----------------------------------------------------
+        result = fn(self.arena.buf, *call_args)
+        self.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t2)
         if policy is FencePolicy.CHECK:
             (new_arena, out), ok = result
             if not bool(ok):
-                msg = (f"kernel {name!r} of tenant {tenant_id!r} performed "
-                       "an out-of-bounds access (detected by CHECK)")
+                msg = (f"kernel {req.name!r} of tenant {req.tenant_id!r} "
+                       "performed an out-of-bounds access (detected by "
+                       "CHECK)")
                 self.violations.append(msg)
                 raise GuardianViolation(msg)
         else:
@@ -394,8 +412,16 @@ class GuardianManager:
 
     def _run_op(self, op: _QueuedOp) -> None:
         if op.kind == "launch":
-            name, policy, call = op.payload
-            self._execute_launch(op.tenant_id, name, policy, call)
+            (req,) = op.payload
+            # the tenant set may have changed since enqueue — a stale NONE
+            # (native) policy must not run against a now-shared arena
+            req.repolicy(self._effective_policy())
+            if self.batch_launches and self.mode is SharingMode.SPATIAL:
+                # selection: the fused execution happens at the cycle-end
+                # scheduler flush, preserving round-robin selection order
+                self.scheduler.submit(req)
+            else:
+                self._execute_request(req)
         elif op.kind == "h2d":
             addr, flat = op.payload
             self.arena.unsafe_write_range(addr, jnp.asarray(flat))
@@ -411,8 +437,10 @@ class GuardianManager:
 
         SPATIAL: round-robin one op per tenant per cycle ("selects GPU calls
         from different applications in a round-robin fashion"); ops within a
-        tenant stay in-order, tenants interleave, JAX async dispatch overlaps
-        them on device.
+        tenant stay in-order, tenants interleave.  The launches selected in
+        a cycle are submitted to the batched scheduler and flushed at the
+        end of the cycle — compatible launches from different tenants fuse
+        into one device step (one binary, per-row dynamic bounds).
         TIME_SHARE: drain each tenant fully then block (context switch).
         """
         if self.mode is SharingMode.SPATIAL:
@@ -423,6 +451,7 @@ class GuardianManager:
                     if q:
                         self._run_op(q.popleft())
                         pending = pending or bool(q)
+                self.scheduler.flush()
         else:
             for q in self._queues.values():
                 while q:

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _fence(idx, base, mask):
     return jax.lax.bitwise_or(jax.lax.bitwise_and(idx, mask), base)
@@ -47,7 +49,7 @@ def fenced_gather(table, idx, fence_base, fence_mask, *, interpret=True):
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )

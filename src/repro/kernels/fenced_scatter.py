@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _fence(idx, base, mask):
     return jax.lax.bitwise_or(jax.lax.bitwise_and(idx, mask), base)
@@ -53,7 +55,7 @@ def fenced_scatter(pool, pages, page_ids, fence_base, fence_mask, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         input_output_aliases={4: 0},   # pool aliases the output
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -99,7 +101,7 @@ def flash_attention(q, k, v, *, causal=True, q_blk=128, kv_blk=128,
             pltpu.VMEM((q_blk, D), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

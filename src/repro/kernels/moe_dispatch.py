@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(base_ref, mask_ref, ids_ref, o_ref, *, num_experts, blk):
     t = pl.program_id(0)
@@ -54,7 +56,7 @@ def moe_histogram(expert_ids, num_experts, fence_base, fence_mask, *,
             out_specs=pl.BlockSpec((1, num_experts), lambda t, b, m: (0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((1, num_experts), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )

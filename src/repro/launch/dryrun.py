@@ -82,6 +82,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):  # jax<=0.4.x: one dict per program
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo = compiled.as_text()
     costs = analyze_hlo(hlo)
 

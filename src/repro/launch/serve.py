@@ -4,8 +4,11 @@ shared LM server.
 One model, one KV pool, many mutually-untrusting tenants.  The pool's
 sequence-slot space is carved into contiguous pow2 partitions (buddy
 allocator) — one per tenant.  Every batched step carries **per-row fence
-parameters**: row b of the batch belongs to tenant t(b), so the slot index
-of row b is fenced with t(b)'s (base, mask).  Even a corrupted scheduler
+parameters**: a :class:`~repro.core.fence.FenceTable` holds one
+``(base, mask)`` int32 row per tenant, and each prefill/decode step gathers
+the rows for its batch through a tenant-id column — row b of the batch
+belongs to tenant t(b), so the slot index of row b is fenced with t(b)'s
+(base, mask).  Even a corrupted scheduler
 or a forged slot id can only wrap inside the owning tenant's slots — the
 serving-plane equivalent of the paper's sandboxed kernels.
 
@@ -25,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ShapeConfig, get_config
-from repro.core.fence import FenceParams, FencePolicy
+from repro.core.fence import FenceParams, FencePolicy, FenceTable
 from repro.core.partition import PartitionBoundsTable
 from repro.models import get_model
 from repro.models.guard import GuardSpec
@@ -69,6 +72,9 @@ class ServeEngine:
         slots = self._pool_slots()
         self.bounds = PartitionBoundsTable(slots)
         self._scratch = self.bounds.create("__scratch", slots // 2)
+        self._ftable: Optional[FenceTable] = None
+        self._ftable_key: Tuple = ()
+        self._ftable_row: Dict[str, int] = {}
         self._tenant_of_slot: Dict[int, str] = {}
         self._requests: List[Request] = []
         self._rid = 0
@@ -103,16 +109,33 @@ class ServeEngine:
         return rid
 
     # ------------------------------------------------------------------ #
+    def _fence_table(self) -> Tuple[FenceTable, Dict[str, int]]:
+        """Stacked (T, 2) fence rows for all registered tenants (incl. the
+        scratch partition), rebuilt only when the tenant set changes.  The
+        table validates pow2 sizes on the host before staging — a traced
+        FenceParams.mask cannot (fence.require_pow2_sizes contract)."""
+        ids = tuple(sorted(self.bounds.tenants()))
+        parts = [self.bounds.lookup(t) for t in ids]
+        # key includes the bounds: a tenant destroyed and re-registered
+        # under the same name may get a different partition
+        key = tuple((t, p.base, p.size) for t, p in zip(ids, parts))
+        if self._ftable is None or self._ftable_key != key:
+            self._ftable = FenceTable.from_partitions(parts)
+            self._ftable_key = key
+            self._ftable_row = {t: i for i, t in enumerate(ids)}
+        return self._ftable, self._ftable_row
+
     def _guard_for_rows(self, rows: List[Request]) -> Optional[GuardSpec]:
         if not self.guard_enabled:
             return None
-        base = np.full((self.max_batch,), self._scratch.base, np.int32)
-        size = np.full((self.max_batch,), self._scratch.size, np.int32)
+        table, row_of = self._fence_table()
+        # tenant-id column: batch row b -> fence-table row of its tenant
+        # (idle rows park in the engine's scratch partition)
+        cols = np.full((self.max_batch,), row_of["__scratch"], np.int32)
         for i, r in enumerate(rows):
-            if r is None:
-                continue
-            part = self.bounds.lookup(r.tenant)
-            base[i], size[i] = part.base, part.size
+            if r is not None:
+                cols[i] = row_of[r.tenant]
+        slot_params = table.gather(jnp.asarray(cols))
         pages = self.cache.kv.pages_per_slot if hasattr(self.cache, "kv") \
             else (self.cache.pages_per_slot if hasattr(self.cache, "k")
                   else 1)
@@ -122,9 +145,8 @@ class ServeEngine:
         return GuardSpec(
             policy=self.policy,
             vocab=FenceParams(base=0, size=pow2(self.cfg.vocab)),
-            kv=FenceParams(base=jnp.asarray(base), size=jnp.asarray(size)),
-            state=FenceParams(base=jnp.asarray(base),
-                              size=jnp.asarray(size)),
+            kv=slot_params,
+            state=slot_params,
             expert=(FenceParams(base=0, size=pow2(
                 self.cfg.moe.num_experts)) if self.cfg.moe else None),
             page=FenceParams(base=0, size=pow2(max(pages, 1))),

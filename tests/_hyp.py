@@ -1,0 +1,60 @@
+"""Optional-``hypothesis`` shim for the property-test modules.
+
+The tier-1 suite must collect and run on a bare interpreter (jax + numpy +
+pytest only).  ``hypothesis`` is a dev-extra (see requirements-dev.txt):
+when it is importable the property tests run as real property tests; when
+it is absent they are collected and *skipped* cleanly, and the
+deterministic seeded-sweep mirrors in each test module keep the same
+invariants covered.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis missing
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(
+        reason="hypothesis not installed (optional dev dependency; "
+               "deterministic sweep mirrors still run)")
+
+    class _DummyStrategy:
+        """Stands in for a strategy object; only needs to exist at import."""
+
+        def __repr__(self):
+            return "<dummy strategy (hypothesis not installed)>"
+
+    class _Strategies:
+        """``st.<anything>(...)`` -> dummy strategy, evaluated at import."""
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return _DummyStrategy()
+
+            return make
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

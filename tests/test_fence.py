@@ -1,22 +1,31 @@
-"""Property tests for the three bounds modes (Guardian §4.4)."""
+"""Property tests for the three bounds modes (Guardian §4.4).
+
+Hypothesis-based property tests skip cleanly when hypothesis is absent
+(optional dev dependency); each property has a deterministic seeded-sweep
+mirror below that always runs.
+"""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.fence import (
     FenceParams,
     FencePolicy,
+    FenceTable,
     apply_fence,
     fence_bitwise,
     fence_check,
     fence_modulo,
     fence_modulo_magic,
     magic_constants,
+    require_pow2_sizes,
 )
+from repro.core.partition import Partition
 
-pow2_sizes = st.sampled_from([1, 2, 4, 8, 64, 1024, 1 << 20])
+POW2_SIZES = [1, 2, 4, 8, 64, 1024, 1 << 20]
+pow2_sizes = st.sampled_from(POW2_SIZES)
 
 
 @given(pow2_sizes, st.integers(min_value=0, max_value=63),
@@ -100,3 +109,128 @@ def test_per_row_fencing(row, idxs):
     out = np.asarray(fence_bitwise(idx, base, mask))
     for r in range(4):
         assert 16 * r <= out[r] < 16 * (r + 1)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seeded-sweep mirrors of the hypothesis properties above.
+# These always run (the property tests skip when hypothesis is absent).
+# ---------------------------------------------------------------------------
+
+
+def test_bitwise_containment_and_identity_sweep():
+    rng = np.random.default_rng(0)
+    for size in POW2_SIZES:
+        for base_mult in (0, 1, 7, 63):
+            base = base_mult * size             # size-aligned (invariant I2)
+            if base + size > 2**31 - 1:
+                continue
+            idxs = rng.integers(-(2**31), 2**31 - 1, size=64,
+                                dtype=np.int64).astype(np.int32)
+            out = np.asarray(fence_bitwise(jnp.asarray(idxs), base,
+                                           size - 1))
+            assert ((out >= base) & (out < base + size)).all()
+            inside = base + rng.integers(0, size, size=16).astype(np.int32)
+            out_in = np.asarray(fence_bitwise(jnp.asarray(inside), base,
+                                              size - 1))
+            np.testing.assert_array_equal(out_in, inside)
+
+
+def test_magic_constants_division_sweep():
+    rng = np.random.default_rng(1)
+    divisors = sorted({1, 2, 3, 5, 7, 64, 100, 255, 256, 1 << 19,
+                       (1 << 20) - 1, 1 << 20,
+                       *rng.integers(1, 1 << 20, size=200).tolist()})
+    for d in divisors:
+        m, s = magic_constants(d)
+        for n in [0, 1, d - 1, d, d + 1, 12345, 2**30, 2**31 - 1]:
+            assert (n * m) >> s == n // d, (n, d)
+
+
+def test_modulo_magic_matches_plain_sweep():
+    """Bit-identity of the reciprocal form vs the plain remainder form."""
+    rng = np.random.default_rng(2)
+    sizes = sorted({1, 2, 3, 5, 17, 64, 100, 1000, 4096,
+                    *rng.integers(1, 4096, size=40).tolist()})
+    for size in sizes:
+        base = int(rng.integers(0, 1000))
+        idx = jnp.asarray(rng.integers(0, 2**31 - 1, size=32,
+                                       dtype=np.int64).astype(np.int32))
+        m, s = magic_constants(size)
+        a = np.asarray(fence_modulo(idx, base, size))
+        b = np.asarray(fence_modulo_magic(idx, base, size, m, s))
+        np.testing.assert_array_equal(a, b)
+        assert ((b >= base) & (b < base + size)).all()
+
+
+def test_per_row_fencing_sweep():
+    rng = np.random.default_rng(3)
+    base = jnp.asarray([0, 16, 32, 48], jnp.int32)
+    mask = jnp.asarray([15, 15, 15, 15], jnp.int32)
+    for _ in range(25):
+        idx = jnp.asarray(rng.integers(-100, 100, size=4).astype(np.int32))
+        out = np.asarray(fence_bitwise(idx, base, mask))
+        for r in range(4):
+            assert 16 * r <= out[r] < 16 * (r + 1)
+
+
+# ---------------------------------------------------------------------------
+# Traced-params contract + FenceTable (batched rows)
+# ---------------------------------------------------------------------------
+
+
+def test_traced_mask_contract_requires_host_validation():
+    """A *traced* non-pow2 size cannot be rejected at trace time — mask
+    silently computes size-1 (wrap guarantee broken).  The contract is that
+    callers validate host-known sizes with require_pow2_sizes first."""
+    # static non-pow2: rejected eagerly
+    with pytest.raises(ValueError):
+        _ = FenceParams(base=0, size=48).mask
+    # traced non-pow2: NOT rejected (documented limitation)...
+    p = FenceParams(base=jnp.int32(0), size=jnp.int32(48))
+    assert int(p.mask) == 47
+    # ...so the host-side validator is the enforcement point:
+    with pytest.raises(ValueError):
+        require_pow2_sizes(48)
+    with pytest.raises(ValueError):
+        require_pow2_sizes([64, 48, 16])
+    with pytest.raises(ValueError):
+        require_pow2_sizes(0)
+    require_pow2_sizes([1, 2, 64, 1 << 20])   # all pow2: fine
+    # non-integer / traced inputs are a programming error
+    with pytest.raises(ValueError):
+        require_pow2_sizes(np.asarray([64.0]))
+
+
+def test_fence_table_rows_and_gather():
+    parts = [Partition("a", base=0, size=16),
+             Partition("b", base=16, size=16),
+             Partition("c", base=64, size=64)]
+    tbl = FenceTable.from_partitions(parts)
+    assert len(tbl) == 3
+    assert tbl.rows.shape == (3, 2)
+    np.testing.assert_array_equal(np.asarray(tbl.rows),
+                                  [[0, 15], [16, 15], [64, 63]])
+    # row_params: traced per-row FenceParams
+    rp = tbl.row_params(2)
+    fenced = np.asarray(fence_bitwise(jnp.asarray([999], jnp.int32),
+                                      rp.base, rp.mask))
+    assert 64 <= fenced[0] < 128
+    # gather by tenant-id column: elementwise fencing per owner
+    col = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    params = tbl.gather(col)
+    idx = jnp.asarray([9999, -3, 70, 17], jnp.int32)
+    out = np.asarray(fence_bitwise(idx, params.base, params.mask))
+    assert 0 <= out[0] < 16          # wrapped into a
+    assert 16 <= out[1] < 32         # wrapped into b
+    assert out[2] == 70              # identity inside c
+    assert out[3] == 17              # identity inside b
+
+
+def test_fence_table_validates_pow2():
+    with pytest.raises(ValueError):
+        FenceTable.from_bounds(base=[0, 16], size=[16, 48])
+    tbl = FenceTable.from_bounds(base=[0, 16], size=[16, 16])
+    np.testing.assert_array_equal(np.asarray(tbl.rows),
+                                  [[0, 15], [16, 15]])
+    with pytest.raises(ValueError):
+        FenceTable.from_partitions([])

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels import ref as R
@@ -126,6 +126,48 @@ def test_flash_attention_sweep(dtype, B, S, H, KH, D, qb, kb):
 def test_moe_histogram_property(T, K, loge):
     E = 2 ** loge
     rng = np.random.default_rng(T * K)
+    ids = jnp.asarray(rng.integers(0, 2 * E, size=(T, K)), jnp.int32)
+    out = ops.moe_histogram(ids, E, 0, E // 2 - 1 if E > 1 else 0)
+    ref = R.moe_histogram_ref(ids, E, 0, E // 2 - 1 if E > 1 else 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert int(out.sum()) == T * K
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seeded mirrors of the hypothesis properties (always run).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,logsize", [(1, 2), (7, 3), (13, 4), (42, 6)])
+def test_paged_attention_isolation_sweep(seed, logsize):
+    """Mirror of the isolation property: mutating the other tenant's pool
+    half never changes the fenced outputs."""
+    rng = np.random.default_rng(seed)
+    P_total = 2 ** logsize
+    half = P_total // 2
+    B, H, KH, D, page, max_pages = 2, 4, 2, 16, 4, 4
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = np.asarray(rng.normal(size=(P_total, page, KH, D)), np.float32)
+    vp = np.asarray(rng.normal(size=(P_total, page, KH, D)), np.float32)
+    pt = jnp.asarray(rng.integers(0, P_total, size=(B, max_pages)),
+                     jnp.int32)
+    lens = jnp.full((B,), max_pages * page, jnp.int32)
+    base = jnp.zeros((B,), jnp.int32)
+    mask = jnp.full((B,), half - 1, jnp.int32)
+    out1 = ops.paged_attention(q, jnp.asarray(kp), jnp.asarray(vp), pt,
+                               lens, base, mask)
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[half:] = 12345.0
+    vp2[half:] = -999.0
+    out2 = ops.paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), pt,
+                               lens, base, mask)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+@pytest.mark.parametrize("T,K,E", [(1, 1, 4), (17, 2, 8), (300, 8, 32),
+                                   (64, 4, 16)])
+def test_moe_histogram_sweep(T, K, E):
+    rng = np.random.default_rng(T * K + E)
     ids = jnp.asarray(rng.integers(0, 2 * E, size=(T, K)), jnp.int32)
     out = ops.moe_histogram(ids, E, 0, E // 2 - 1 if E > 1 else 0)
     ref = R.moe_histogram_ref(ids, E, 0, E // 2 - 1 if E > 1 else 0)

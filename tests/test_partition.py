@@ -1,8 +1,14 @@
 """Property tests for the pow2 buddy allocator + partition bounds table
-(Guardian §4.2.1 invariants I1/I2)."""
+(Guardian §4.2.1 invariants I1/I2).
+
+Hypothesis properties skip when the optional dep is absent; deterministic
+seeded-sweep mirrors below keep I1/I2 covered unconditionally.
+"""
+
+import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.partition import (
     BuddyAllocator,
@@ -122,3 +128,64 @@ def test_mask_wraps_into_partition(size_req):
     # identity inside
     for idx in (part.base, part.base + part.size // 2, part.end - 1):
         assert ((idx & part.mask) | part.base) == idx
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seeded-sweep mirrors (always run, no hypothesis needed).
+# ---------------------------------------------------------------------------
+
+
+def test_buddy_invariants_sweep():
+    """I1 + I2 for every allocated block across seeded size mixes."""
+    rnd = random.Random(0)
+    for trial in range(20):
+        alloc = BuddyAllocator(1024)
+        blocks = []
+        for _ in range(rnd.randint(1, 20)):
+            s = rnd.randint(1, 64)
+            try:
+                base, size = alloc.alloc(s)
+            except OutOfArenaMemory:
+                continue
+            assert is_pow2(size) and size >= s          # I1
+            assert base % size == 0                     # I2
+            blocks.append((base, size))
+        spans = sorted(blocks)
+        for (b1, s1), (b2, _s2) in zip(spans, spans[1:]):
+            assert b1 + s1 <= b2                        # no overlaps
+
+
+def test_buddy_free_coalesces_sweep():
+    """Alloc-all / shuffled-free-all returns the arena to one max block."""
+    rnd = random.Random(1)
+    for trial in range(20):
+        alloc = BuddyAllocator(2048)
+        bases = []
+        for _ in range(rnd.randint(1, 30)):
+            try:
+                base, _ = alloc.alloc(rnd.randint(1, 128))
+                bases.append(base)
+            except OutOfArenaMemory:
+                break
+        rnd.shuffle(bases)
+        for b in bases:
+            alloc.free(b)
+        assert alloc.free_slots() == 2048
+        base, size = alloc.alloc(2048)
+        assert (base, size) == (0, 2048)
+        alloc.free(0)
+
+
+def test_mask_wraps_into_partition_sweep():
+    rnd = random.Random(2)
+    size_reqs = [1, 2, 3, 5, 8, 100, 511, 512] + \
+        [rnd.randint(1, 512) for _ in range(12)]
+    for size_req in size_reqs:
+        tbl = PartitionBoundsTable(1024)
+        part = tbl.create("t", size_req)
+        for idx in (-5, 0, 1, part.base, part.end, part.end + 1,
+                    2**31 - 1):
+            fenced = (idx & part.mask) | part.base
+            assert part.base <= fenced < part.end
+        for idx in (part.base, part.base + part.size // 2, part.end - 1):
+            assert ((idx & part.mask) | part.base) == idx

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.checkpoint import CheckpointStore
 from repro.data import DataConfig, SyntheticLM
@@ -154,6 +154,18 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
        st.floats(min_value=0.01, max_value=100.0))
 @settings(max_examples=25, deadline=None)
 def test_int8_quantization_error_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s, size = quantize_int8(x)
+    y = dequantize_int8(q, s, size, x.shape, x.dtype)
+    blockmax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - y))) <= blockmax / 127.0 + 1e-6
+
+
+@pytest.mark.parametrize("n,scale", [(1, 0.01), (7, 1.0), (255, 31.4),
+                                     (2000, 100.0)])
+def test_int8_quantization_error_bound_sweep(n, scale):
+    """Deterministic mirror of the quantization property (always runs)."""
     rng = np.random.default_rng(n)
     x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
     q, s, size = quantize_int8(x)
