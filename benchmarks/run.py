@@ -31,6 +31,8 @@ SUITES = {
             "context-memory footprint (§2.2)"),
     "sched": ("benchmarks.scheduler_throughput",
               "batched launch scheduler vs round-robin drain (§4.2.4)"),
+    "fault": ("benchmarks.fault_containment",
+              "fault containment: detection latency + co-tenant throughput"),
     "compress": ("benchmarks.compression",
                  "cross-pod int8 gradient compression (beyond-paper)"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),

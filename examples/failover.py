@@ -1,59 +1,125 @@
-"""Fault-tolerance demo — preemption mid-training, restart, bit-exact
-convergence.
+"""Tenant failover demo — rogue tenant detected, quarantined, evicted, and
+its partition reclaimed for a new tenant, while co-tenants never miss a
+launch.
 
-Simulates a node preemption by killing the training process between
-steps, then restarts from the atomic checkpoint with ``--resume`` and
-verifies the final loss matches an uninterrupted run (the restart-exact
-contract of the deterministic data pipeline + atomic checkpoints).
+Drives the fault-containment subsystem (DESIGN.md §Fault-containment)
+end-to-end:
+
+1. three tenants share a CHECK-policy manager; launches fuse into one
+   device step per drain cycle with per-row ok attribution,
+2. tenant "rogue" starts issuing out-of-bounds writes — the fused step
+   rolls its rows back on device and folds per-kind counts into the
+   ViolationLog, co-tenant rows keep landing,
+3. the QuarantineManager's cycle-boundary poll crosses the threshold:
+   rogue is QUARANTINED (queued ops dropped, new calls rejected),
+4. the operator evicts it: partition scrubbed (verified zeroed) and
+   returned to the buddy allocator, compiled symbol-cache entries purged,
+5. a new tenant registers and is admitted into the freed block.
 
     PYTHONPATH=src python examples/failover.py
 """
 
-import json
-import os
-import shutil
-import subprocess
-import sys
+import jax.numpy as jnp
+import numpy as np
 
-ENV = {**os.environ, "PYTHONPATH": "src"}
+from repro.core import (
+    FencePolicy,
+    GuardianManager,
+    QuarantineError,
+    TenantQuarantined,
+    TenantState,
+    ThresholdPolicy,
+)
+
+TOTAL = 1 << 10
 
 
-def run_train(steps, ckpt_dir, resume=False, stop_after=0,
-              timeout=1200):
-    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
-           "minicpm-2b", "--reduced", "--steps", str(steps),
-           "--batch", "4", "--seq", "64", "--lr", "3e-3",
-           "--ckpt-dir", ckpt_dir, "--ckpt-every", "20",
-           "--log-every", "20"]
-    if resume:
-        cmd.append("--resume")
-    if stop_after:
-        cmd += ["--stop-after", str(stop_after)]
-    r = subprocess.run(cmd, capture_output=True, text=True, env=ENV,
-                       timeout=timeout)
-    assert r.returncode == 0, r.stderr[-1500:]
-    last = [ln for ln in r.stdout.splitlines() if ln.startswith("{")][-1]
-    return json.loads(last)
+def work(arena, ptr, n):
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals + 1.0), None
+
+
+def oob_write(arena, target, n):
+    idx = target + jnp.arange(n, dtype=jnp.int32)
+    return arena.at[idx].set(666.0), None
 
 
 def main():
-    base = "/tmp/guardian_failover"
-    shutil.rmtree(base, ignore_errors=True)
+    mgr = GuardianManager(
+        total_slots=TOTAL, policy=FencePolicy.CHECK,
+        quarantine_policy=ThresholdPolicy(quarantine_after=12))
 
-    print("1) uninterrupted run: 60 steps")
-    ref = run_train(60, f"{base}/ref")
+    print("1) three tenants share the arena (CHECK policy, fused drains)")
+    names = ["alice", "bob", "rogue"]
+    clients, ptrs = {}, {}
+    for name in names:
+        c = mgr.register_tenant(name, TOTAL // 8)
+        c.module_load("work", work)
+        c.module_load("oob", oob_write)
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.zeros(8, np.float32))
+        clients[name], ptrs[name] = c, p
+    mgr.synchronize()
+    for name in names:
+        part = mgr.bounds.lookup(name)
+        print(f"   {name:6s} slots [{part.base}, {part.end})")
+    rogue_part = mgr.bounds.lookup("rogue")
 
-    print("2) preempted run: killed after 40 steps (checkpoint at 40)")
-    run_train(60, f"{base}/pre", stop_after=40)   # preempted at 40
+    print("2) rogue goes out of bounds; co-tenants keep launching")
+    victim = mgr.bounds.lookup("alice")
+    for cycle in range(6):
+        for name in ("alice", "bob"):
+            clients[name].launch_kernel("work", ptrs=[ptrs[name]], args=(8,))
+        if mgr.quarantine.state_of("rogue").admissible:
+            clients["rogue"].launch_kernel(
+                "oob", args=(jnp.int32(victim.base), 8))
+    mgr.synchronize()
 
-    print("3) restart with --resume: continues 40 -> 60")
-    res = run_train(60, f"{base}/pre", resume=True)
+    report = mgr.violation_report()
+    print(f"   violation report: {report['tenants']}")
+    assert report["tenants"]["rogue"]["scatter"] >= 12
+    assert report["tenants"]["alice"]["total"] == 0
+    alice_data = clients["alice"].memcpy_d2h(ptrs["alice"], 8)
+    assert (alice_data == 6.0).all(), alice_data   # all 6 cycles landed
+    print(f"   alice's writes all landed: {alice_data[:4]}...")
 
-    print(f"   reference final loss: {ref['final_loss']:.6f}")
-    print(f"   restarted final loss: {res['final_loss']:.6f}")
-    diff = abs(ref["final_loss"] - res["final_loss"])
-    print(f"   |diff| = {diff:.2e}  (restart-exact: {diff < 1e-5})")
-    assert diff < 1e-5
+    print("3) rogue was quarantined at the cycle boundary")
+    assert mgr.quarantine.state_of("rogue") is TenantState.QUARANTINED
+    try:
+        clients["rogue"].launch_kernel("work", ptrs=[ptrs["rogue"]],
+                                       args=(8,))
+        raise AssertionError("quarantined launch was admitted")
+    except TenantQuarantined as e:
+        print(f"   new launch rejected: {e}")
+
+    print("4) evict: partition scrubbed + reclaimed, caches purged")
+    free_before = mgr.bounds.free_slots()
+    mgr.quarantine.evict("rogue")
+    scrubbed = np.asarray(mgr.arena.unsafe_read_range(
+        rogue_part.base, rogue_part.size))
+    assert (scrubbed == 0).all()
+    print(f"   slots [{rogue_part.base}, {rogue_part.end}) zeroed, "
+          f"free {free_before} -> {mgr.bounds.free_slots()}")
+    try:
+        mgr.register_tenant("rogue", TOTAL // 8)
+    except QuarantineError as e:
+        print(f"   re-registration refused: {e}")
+    else:
+        raise AssertionError("EVICTED id re-registered without readmit")
+
+    print("5) new tenant admitted into the freed block")
+    c_new = mgr.register_tenant("carol", TOTAL // 8)
+    new_part = mgr.bounds.lookup("carol")
+    assert new_part.base == rogue_part.base, (new_part, rogue_part)
+    p_new = c_new.malloc(8)
+    c_new.memcpy_h2d(p_new, np.full(8, 3.0, np.float32))
+    c_new.launch_kernel("work", ptrs=[p_new], args=(8,))
+    mgr.synchronize()
+    np.testing.assert_array_equal(c_new.memcpy_d2h(p_new, 8),
+                                  np.full(8, 4.0, np.float32))
+    print(f"   carol reuses slots [{new_part.base}, {new_part.end}); "
+          "co-tenant service never stopped.\nall good.")
 
 
 if __name__ == "__main__":

@@ -5,10 +5,14 @@ Layering (bottom-up):
     partition   — pow2 buddy arena allocator + partition bounds table
     fence       — the 3 bounds modes (bitwise / modulo / check) + guarded ops
     arena       — shared device arenas (flat DRAM model + structured pools)
+    violations  — ViolationLog: device-side per-tenant per-kind OOB counters
     sandbox     — jaxpr-level kernel instrumentor (the "PTX-patcher")
     interception— GuardianClient ("grdLib"): device-API shadowing + traces
     scheduler   — BatchedLaunchScheduler: coalesces compatible cross-tenant
-                  launches into fused device steps (per-row fence tables)
+                  launches into fused device steps (per-row fence tables);
+                  CHECK batches attribute per-row ok + commit selectively
+    quarantine  — tenant lifecycle (ACTIVE→QUARANTINED→EVICTED|READMITTED),
+                  pluggable thresholds, partition reclamation
     manager     — GuardianManager ("grdManager"): sole device owner,
                   validated calls, round-robin spatial multiplexing
     libsim      — simulated closed-source accelerated libraries (Table 6)
@@ -47,7 +51,22 @@ from repro.core.partition import (
     PartitionBoundsTable,
     UnknownTenant,
 )
+from repro.core.quarantine import (
+    QuarantineError,
+    QuarantineManager,
+    QuarantinePolicy,
+    QuarantineStateMachine,
+    TenantQuarantined,
+    TenantState,
+    ThresholdPolicy,
+)
 from repro.core.sandbox import SandboxError, sandbox, sandbox_report
+from repro.core.violations import (
+    KIND_NAMES,
+    NUM_KINDS,
+    ViolationKind,
+    ViolationLog,
+)
 
 __all__ = [
     "Arena", "ArenaSpec", "make_flat_arena",
@@ -61,4 +80,8 @@ __all__ = [
     "BuddyAllocator", "OutOfArenaMemory", "Partition",
     "PartitionBoundsTable", "UnknownTenant",
     "SandboxError", "sandbox", "sandbox_report",
+    "KIND_NAMES", "NUM_KINDS", "ViolationKind", "ViolationLog",
+    "QuarantineError", "QuarantineManager", "QuarantinePolicy",
+    "QuarantineStateMachine", "TenantQuarantined", "TenantState",
+    "ThresholdPolicy",
 ]

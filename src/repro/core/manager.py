@@ -25,6 +25,16 @@ Responsibilities (paper section in parentheses):
   binary for any tenant set).  A TIME_SHARE mode serializes tenants with a
   device sync in between — the paper's baseline.  ``batch_launches=False``
   restores the per-launch round-robin drain (the benchmark baseline).
+* **Fault containment** (§4.4 grown into policy): CHECK launches fold
+  per-kind OOB counts into a device-side per-tenant
+  :class:`~repro.core.violations.ViolationLog` (no host sync on the hot
+  path); fused CHECK steps attribute per-row ``ok`` and commit arena writes
+  selectively (offending rows roll back, co-tenant rows land).  A
+  :class:`~repro.core.quarantine.QuarantineManager` polls the log at
+  drain-cycle boundaries and drives the tenant lifecycle
+  (ACTIVE → QUARANTINED → EVICTED | READMITTED); eviction scrubs and frees
+  the partition and purges the tenant's compiled symbol-cache entries.
+  ``violation_report()`` is the operator surface.
 
 Bounds are passed to kernels as **dynamic scalars** for BITWISE/CHECK (one
 shared binary for all tenants — the paper's two-extra-parameters design) and
@@ -54,8 +64,15 @@ from repro.core.partition import (
     PartitionBoundsTable,
     UnknownTenant,
 )
+from repro.core.quarantine import (
+    QuarantineError,
+    QuarantineManager,
+    QuarantinePolicy,
+    TenantState,
+)
 from repro.core.sandbox import SandboxError, sandbox
 from repro.core.scheduler import BatchedLaunchScheduler, LaunchRequest
+from repro.core.violations import KIND_NAMES, ViolationLog
 
 
 class GuardianViolation(Exception):
@@ -133,12 +150,22 @@ class GuardianManager:
         extra_arenas: Sequence[ArenaSpec] = (),
         batch_launches: bool = True,
         max_fuse: int = 8,
+        max_tenants: int = 64,
+        quarantine_policy: Optional[QuarantinePolicy] = None,
+        quarantine_poll_every: int = 1,
     ):
         self.policy = policy
         self.mode = mode
         self.standalone_fast_path = standalone_fast_path
         self.batch_launches = batch_launches
         self.scheduler = BatchedLaunchScheduler(self, max_fuse=max_fuse)
+
+        # Fault containment: device-side per-tenant violation telemetry
+        # (filled by CHECK launches, in-kernel, no host sync) + the host-side
+        # lifecycle driver that polls it at drain-cycle boundaries.
+        self.violog = ViolationLog(capacity=max_tenants)
+        self.quarantine = QuarantineManager(
+            self, policy=quarantine_policy, poll_every=quarantine_poll_every)
 
         # §4.2.1 — reserve all device memory up front.
         self.arena = Arena(make_flat_arena(total_slots, dtype))
@@ -173,8 +200,28 @@ class GuardianManager:
     def register_tenant(self, tenant_id: str,
                         requested_slots: int) -> GuardianClient:
         """Tenants declare memory needs at init (§4.2.1: "normal in cloud
-        environments, where users buy instances with specific resources")."""
-        part = self.bounds.create(tenant_id, requested_slots)
+        environments, where users buy instances with specific resources").
+
+        An EVICTED tenant id is refused until explicitly readmitted
+        (``manager.quarantine.readmit``) — eviction must survive a
+        re-registration attempt."""
+        # log row before partition: a capacity failure here must not leak
+        # an allocated partition under an id that can never register again.
+        # Roll back only state THIS call created — a failed duplicate
+        # registration must not release a live tenant's row or record
+        # (that would let a rogue tenant reset its own violation counters).
+        new_record = self.quarantine.machine.record_of(tenant_id) is None
+        self.quarantine.admit(tenant_id)
+        new_row = self.violog.row_of(tenant_id) is None
+        try:
+            self.violog.assign(tenant_id)
+            part = self.bounds.create(tenant_id, requested_slots)
+        except Exception:
+            if new_row and self.violog.row_of(tenant_id) is not None:
+                self.violog.release(tenant_id)
+            if new_record:
+                self.quarantine.forget(tenant_id)
+            raise
         self._suballoc[tenant_id] = IntraPartitionAllocator(part)
         self._queues[tenant_id] = collections.deque()
         client = GuardianClient(self, tenant_id)
@@ -182,14 +229,79 @@ class GuardianManager:
         return client
 
     def remove_tenant(self, tenant_id: str) -> None:
+        """Voluntary teardown of a healthy tenant (quarantine eviction goes
+        through :meth:`_evict_tenant`, which keeps the lifecycle record).
+
+        Refused for a quarantined tenant: teardown + re-registration would
+        otherwise launder the quarantine into a fresh ACTIVE record with
+        zeroed counters.  The operator must evict (ban) or readmit first.
+        """
+        state = self.quarantine.state_of(tenant_id)
+        if state is not None and not state.admissible:
+            raise QuarantineError(
+                f"remove_tenant: tenant {tenant_id!r} is {state.name}; "
+                "evict or readmit it instead (teardown must not launder "
+                "the quarantine)")
+        self._reclaim_partition(tenant_id)
+        self.quarantine.forget(tenant_id)
+
+    def _reclaim_partition(self, tenant_id: str) -> None:
+        """Scrub + free a tenant's partition and drop every per-tenant
+        artifact that could outlive it — including compiled symbol-cache
+        entries (a removed tenant's cached unfenced binary must never be
+        launchable again)."""
         part = self.bounds.lookup(tenant_id)
         # Scrub before the slots can be re-issued to another tenant.
         self.arena.zero_range(part.base, part.size)
         self.bounds.destroy(tenant_id)
+        self._purge_symbol_caches(part)
+        self.scheduler.invalidate_tenant_rows(tenant_id)
+        self.violog.release(tenant_id)
         self._suballoc.pop(tenant_id, None)
         self._queues.pop(tenant_id, None)
         self._clients.pop(tenant_id, None)
         self._part_scalars.pop(tenant_id, None)
+
+    def _purge_symbol_caches(self, part: Partition) -> None:
+        """Evict per-tenant compiled state from the jit/symbol caches.
+
+        * NONE-policy ("native") executables: compiled while some tenant ran
+          standalone; they carry no fence at all, so none may survive a
+          tenant-set change (ROADMAP: symbol-cache eviction policy).
+        * The partition's MODULO specializations: keyed on (base, size), the
+          binary bakes in the dead partition's magic constants.
+        * Scheduler fence-table stagings that reference the dead bounds.
+        """
+        self._purge_native_entries()
+        for entry in self.pointer_to_symbol.values():
+            for key in [k for k in entry.jit_cache
+                        if k[0] == f"mod{part.base}.{part.size}"]:
+                del entry.jit_cache[key]
+            entry.modulo_static.pop((part.base, part.size), None)
+        self.scheduler.invalidate_table_rows((part.base, part.mask))
+
+    # -- quarantine/eviction hooks (driven by QuarantineManager) -------- #
+    def _drop_tenant_ops(self, tenant_id: str) -> None:
+        """Quarantine: discard everything queued or pending for the tenant
+        (its in-flight work must not keep landing) and purge standalone
+        binaries (the tenant set effectively changed)."""
+        q = self._queues.get(tenant_id)
+        if q is not None:
+            q.clear()
+        self.scheduler.drop_tenant(tenant_id)
+        self._purge_native_entries()
+
+    def _purge_native_entries(self) -> None:
+        """No NONE-policy (unfenced) executable survives a tenant-set or
+        lifecycle change — the next standalone tenant recompiles."""
+        for entry in self.pointer_to_symbol.values():
+            for key in [k for k in entry.jit_cache if k[0] == "native"]:
+                del entry.jit_cache[key]
+
+    def _evict_tenant(self, tenant_id: str) -> None:
+        """Eviction: drop ops, then scrub + reclaim the partition."""
+        self._drop_tenant_ops(tenant_id)
+        self._reclaim_partition(tenant_id)
 
     def fence_params_for(self, tenant_id: str) -> FenceParams:
         part = self.bounds.lookup(tenant_id)
@@ -222,6 +334,7 @@ class GuardianManager:
     # Memory management (§4.2.1, §4.2.2)                                 #
     # ------------------------------------------------------------------ #
     def malloc(self, tenant_id: str, n_slots: int) -> DevicePtr:
+        self.quarantine.check_admission(tenant_id, "cudaMalloc")
         sub = self._suballoc.get(tenant_id)
         if sub is None:
             raise UnknownTenant(tenant_id)
@@ -241,7 +354,10 @@ class GuardianManager:
     def _validate_range(self, tenant_id: str, addr: int, length: int,
                         api: str) -> Partition:
         """§4.2.2: every host-initiated transfer is checked against the
-        partition bounds table.  Fail-closed on any mismatch."""
+        partition bounds table.  Fail-closed on any mismatch — and on a
+        quarantined/evicted caller (fault containment extends to the
+        transfer plane)."""
+        self.quarantine.check_admission(tenant_id, api)
         part = self.bounds.lookup(tenant_id)
         if length < 0 or not part.contains(addr, addr + max(length, 0)):
             msg = (f"{api}: tenant {tenant_id!r} range [{addr},"
@@ -299,7 +415,7 @@ class GuardianManager:
         sandboxed = sandbox(fn, arena_argnums=arena_argnums,
                             policy=FencePolicy.BITWISE)
         checked = sandbox(fn, arena_argnums=arena_argnums,
-                          policy=FencePolicy.CHECK)
+                          policy=FencePolicy.CHECK, count_violations=True)
 
         def fenced_entry(arena, base, mask, *args):
             # the two extra kernel parameters of Listing 1
@@ -309,7 +425,7 @@ class GuardianManager:
 
         def checked_entry(arena, base, size, *args):
             fp = FenceParams(base=base, size=size)
-            return checked(fp, arena, *args)   # (out, ok)
+            return checked(fp, arena, *args)   # (out, ok, counts)
 
         entry = _KernelEntry(
             name=name, fn=fn, arena_argnums=arena_argnums,
@@ -339,6 +455,7 @@ class GuardianManager:
                       enqueue: bool = False) -> Any:
         # -- lookup (Table 5 "Lookup GPU kernel") ------------------------
         t0 = time.perf_counter_ns()
+        self.quarantine.check_admission(tenant_id, "cudaLaunchKernel")
         entry = self.pointer_to_symbol.get(name)
         if entry is None:
             raise GuardianViolation(
@@ -359,8 +476,11 @@ class GuardianManager:
 
     def _execute_request(self, req: LaunchRequest) -> Any:
         """Per-launch (unbatched) dispatch of one augmented request —
-        the standalone fast path, TIME_SHARE, MODULO/CHECK, and width-1
-        scheduler batches all land here."""
+        the standalone fast path, TIME_SHARE, batch_launches=False, MODULO,
+        and width-1 NONE/BITWISE scheduler batches land here.  CHECK on the
+        scheduler path never does: BatchedLaunchScheduler diverts every
+        CHECK batch (any width) to its contain-and-log commit path; the
+        raising CHECK semantics below are the per-launch paths' only."""
         entry, part, policy = req.entry, req.part, req.policy
 
         # -- augment params (Table 5 "Augment kernel params") ------------
@@ -392,7 +512,11 @@ class GuardianManager:
         result = fn(self.arena.buf, *call_args)
         self.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t2)
         if policy is FencePolicy.CHECK:
-            (new_arena, out), ok = result
+            (new_arena, out), ok, counts = result
+            # attribute even on the raising path: the log row is the
+            # substrate the quarantine policy reasons over (the row exists
+            # since register_tenant; a KeyError here is a lifecycle bug)
+            self.violog.add(req.tenant_id, counts)
             if not bool(ok):
                 msg = (f"kernel {req.name!r} of tenant {req.tenant_id!r} "
                        "performed an out-of-bounds access (detected by "
@@ -452,12 +576,18 @@ class GuardianManager:
                         self._run_op(q.popleft())
                         pending = pending or bool(q)
                 self.scheduler.flush()
+                # containment check at the cycle boundary: a tenant crossing
+                # the violation threshold here has its remaining queued ops
+                # dropped while co-tenants keep draining (skipped entirely
+                # while the log is clean — no sync on fenced-only traffic)
+                self.quarantine.maybe_poll()
         else:
             for q in self._queues.values():
                 while q:
                     self._run_op(q.popleft())
                 # context switch: full device sync between tenants
                 jax.block_until_ready(self.arena.buf)
+            self.quarantine.maybe_poll()
 
     def synchronize(self, tenant_id: Optional[str] = None) -> None:
         self.run_queued()
@@ -471,6 +601,40 @@ class GuardianManager:
             raise GuardianViolation(
                 f"cudaGetExportTable: unknown table {table_id}")
         return self._export_tables[table_id]
+
+    def violation_report(self) -> Dict[str, Any]:
+        """Operator-facing fault-containment report (synchronizing).
+
+        Per-tenant per-kind OOB counts from the device-side ViolationLog,
+        the lifecycle state of every tenant the quarantine machine knows
+        (evicted tenants report the counts snapshotted at eviction), the
+        host-side transfer-violation strings, and the quarantine event
+        trail.
+        """
+        snap = self.violog.snapshot()
+        tenants: Dict[str, Dict[str, Any]] = {}
+        for t in self.violog.tenants():
+            counts = self.violog.counts(t, snap=snap)
+            state = self.quarantine.state_of(t)
+            tenants[t] = {
+                **counts,
+                "total": sum(counts.values()),
+                "state": state.value if state else TenantState.ACTIVE.value,
+            }
+        for rec in self.quarantine.machine.records():
+            if rec.tenant_id in tenants:
+                continue
+            counts = {k: rec.final_counts.get(k, 0) for k in KIND_NAMES}
+            tenants[rec.tenant_id] = {
+                **counts,
+                "total": sum(counts.values()),
+                "state": rec.state.value,
+            }
+        return {
+            "tenants": tenants,
+            "transfer_violations": list(self.violations),
+            "events": list(self.quarantine.events),
+        }
 
     def memory_usage(self) -> Dict[str, Any]:
         """§2.2 memory-footprint claim: one context/arena overall vs one per

@@ -20,6 +20,7 @@ invariants are property-tested in ``tests/test_partition.py``.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 from typing import Dict, List, Optional, Tuple
@@ -119,12 +120,15 @@ class BuddyAllocator:
                 f"no free block of {1 << order} slots (arena fragmented/full)"
             )
         base = self._free[o].pop(0)
-        # Split down to the requested order.
+        # Split down to the requested order.  The split buddy is above every
+        # block already free at that order's prefix we could have split from,
+        # but not necessarily the list tail — insort keeps the order without
+        # the O(n log n) re-sort (hot on tenant churn: every quarantine
+        # eviction frees and re-splits partitions).
         while o > order:
             o -= 1
             buddy = base + (1 << o)
-            self._free[o].append(buddy)
-            self._free[o].sort()
+            bisect.insort(self._free[o], buddy)
         self._allocated[base] = order
         return base, 1 << order
 
@@ -132,17 +136,19 @@ class BuddyAllocator:
         if base not in self._allocated:
             raise KeyError(f"free of unallocated base {base}")
         order = self._allocated.pop(base)
-        # Coalesce with buddy while possible.
+        # Coalesce with buddy while possible (binary search per level —
+        # the free lists are maintained sorted).
         while order < self._max_order:
             buddy = base ^ (1 << order)
-            if buddy in self._free[order]:
-                self._free[order].remove(buddy)
+            lst = self._free[order]
+            i = bisect.bisect_left(lst, buddy)
+            if i < len(lst) and lst[i] == buddy:
+                lst.pop(i)
                 base = min(base, buddy)
                 order += 1
             else:
                 break
-        self._free[order].append(base)
-        self._free[order].sort()
+        bisect.insort(self._free[order], base)
 
     def free_slots(self) -> int:
         return sum(len(v) << o for o, v in self._free.items())
@@ -236,8 +242,7 @@ class IntraPartitionAllocator:
         n = self._live.pop(rel_base, None)
         if n is None:
             raise KeyError(f"free of unallocated offset {rel_base}")
-        self._free.append((rel_base, n))
-        self._free.sort()
+        bisect.insort(self._free, (rel_base, n))
         # coalesce
         merged: List[Tuple[int, int]] = []
         for b, ln in self._free:

@@ -1,0 +1,310 @@
+"""Tenant quarantine & partition reclamation — the containment *policy*
+layer on top of Guardian's detection machinery.
+
+The paper's claim is that fencing lets erroneous applications keep running
+without harming co-tenants; a production manager additionally needs to
+*react*: a tenant whose kernels keep tripping the CHECK fence is burning
+device cycles on clamped accesses and is, by definition, buggy or hostile.
+This module drives the reaction as an explicit lifecycle:
+
+    ACTIVE ──quarantine()──▶ QUARANTINED ──evict()──▶ EVICTED
+       ▲                         │                       │
+       └──── (= READMITTED) ◀────┴──── readmit() ────────┘
+
+* **QUARANTINED** — the tenant's queued ops are dropped and new device
+  calls are rejected (:class:`TenantQuarantined`); its partition and data
+  survive, so a false positive is recoverable via :meth:`readmit`.
+* **EVICTED** — the partition is scrubbed (``Arena.zero_range``), returned
+  to the buddy allocator, and the tenant's compiled entries are purged from
+  the per-kernel jit/symbol caches.  EVICTED is terminal: the *only* edge
+  out is an explicit :meth:`readmit`, after which the tenant must register
+  again to obtain a fresh partition.
+* **READMITTED** — behaviourally ACTIVE (tracked separately so operators
+  can see a tenant has a history); counters are wiped on re-admission.
+
+Transition legality is enforced by :class:`QuarantineStateMachine` (pure,
+host-only — also reused by the serving engine, which has no
+GuardianManager).  *When* to transition is a pluggable
+:class:`QuarantinePolicy`; :class:`ThresholdPolicy` quarantines after N
+logged violations and optionally evicts after M.  The
+:class:`QuarantineManager` polls the device-side
+:class:`~repro.core.violations.ViolationLog` at drain-cycle boundaries
+(never on the per-access hot path) and applies the policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.violations import KIND_NAMES, ViolationLog
+
+
+class QuarantineError(Exception):
+    """Illegal lifecycle transition (e.g. evicting an ACTIVE tenant)."""
+
+
+class TenantQuarantined(QuarantineError):
+    """A quarantined/evicted tenant attempted a device call."""
+
+
+class TenantState(enum.Enum):
+    ACTIVE = "active"
+    QUARANTINED = "quarantined"
+    EVICTED = "evicted"
+    READMITTED = "readmitted"
+
+    @property
+    def admissible(self) -> bool:
+        """May the tenant issue device calls / hold queued ops?"""
+        return self in (TenantState.ACTIVE, TenantState.READMITTED)
+
+
+# state -> states reachable in one legal transition
+_LEGAL = {
+    TenantState.ACTIVE: {TenantState.QUARANTINED},
+    TenantState.READMITTED: {TenantState.QUARANTINED},
+    TenantState.QUARANTINED: {TenantState.EVICTED, TenantState.READMITTED},
+    # EVICTED is terminal except explicit re-admission:
+    TenantState.EVICTED: {TenantState.READMITTED},
+}
+
+
+@dataclasses.dataclass
+class TenantRecord:
+    """Host-side lifecycle record (survives eviction, unlike the log row)."""
+
+    tenant_id: str
+    state: TenantState = TenantState.ACTIVE
+    quarantines: int = 0
+    readmissions: int = 0
+    #: final per-kind counts snapshotted when the log row was recycled
+    final_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reason: str = ""
+
+
+class QuarantineStateMachine:
+    """Pure transition enforcement — no device or manager coupling.
+
+    The serving engine drives one of these directly; the
+    :class:`QuarantineManager` wraps one with device-side actions.
+    """
+
+    def __init__(self):
+        self._records: Dict[str, TenantRecord] = {}
+
+    # ------------------------------------------------------------------ #
+    def admit(self, tenant_id: str) -> TenantRecord:
+        """First registration -> ACTIVE.  Re-registering an EVICTED id
+        without an explicit readmit() is the attack the state machine
+        exists to stop, so it raises."""
+        rec = self._records.get(tenant_id)
+        if rec is None:
+            rec = TenantRecord(tenant_id=tenant_id)
+            self._records[tenant_id] = rec
+            return rec
+        if rec.state is TenantState.EVICTED:
+            raise QuarantineError(
+                f"tenant {tenant_id!r} is EVICTED; only an explicit "
+                "readmit() may clear that state")
+        return rec
+
+    def forget(self, tenant_id: str) -> None:
+        """Voluntary teardown of a healthy tenant drops the record; an
+        EVICTED record is retained (the ban must survive the teardown)."""
+        rec = self._records.get(tenant_id)
+        if rec is not None and rec.state is not TenantState.EVICTED:
+            del self._records[tenant_id]
+
+    # ------------------------------------------------------------------ #
+    def _transition(self, tenant_id: str, to: TenantState) -> TenantRecord:
+        rec = self._records.get(tenant_id)
+        if rec is None:
+            raise QuarantineError(f"unknown tenant {tenant_id!r}")
+        if to not in _LEGAL[rec.state]:
+            raise QuarantineError(
+                f"illegal transition {rec.state.name} -> {to.name} "
+                f"for tenant {tenant_id!r}")
+        rec.state = to
+        return rec
+
+    def quarantine(self, tenant_id: str, reason: str = "") -> TenantRecord:
+        rec = self._transition(tenant_id, TenantState.QUARANTINED)
+        rec.quarantines += 1
+        rec.reason = reason
+        return rec
+
+    def evict(self, tenant_id: str, reason: str = "") -> TenantRecord:
+        rec = self._transition(tenant_id, TenantState.EVICTED)
+        if reason:
+            rec.reason = reason
+        return rec
+
+    def readmit(self, tenant_id: str) -> TenantRecord:
+        rec = self._transition(tenant_id, TenantState.READMITTED)
+        rec.readmissions += 1
+        rec.reason = ""
+        return rec
+
+    # ------------------------------------------------------------------ #
+    def state_of(self, tenant_id: str) -> Optional[TenantState]:
+        rec = self._records.get(tenant_id)
+        return rec.state if rec else None
+
+    def record_of(self, tenant_id: str) -> Optional[TenantRecord]:
+        return self._records.get(tenant_id)
+
+    def check_admission(self, tenant_id: str, api: str = "call") -> None:
+        rec = self._records.get(tenant_id)
+        if rec is not None and not rec.state.admissible:
+            raise TenantQuarantined(
+                f"{api}: tenant {tenant_id!r} is {rec.state.name}"
+                + (f" ({rec.reason})" if rec.reason else ""))
+
+    def records(self) -> List[TenantRecord]:
+        return list(self._records.values())
+
+
+# --------------------------------------------------------------------------- #
+# Policies                                                                    #
+# --------------------------------------------------------------------------- #
+
+
+class QuarantinePolicy:
+    """Decides transitions from a tenant's logged violation counts.
+
+    ``counts`` is the tenant's {kind: n} dict; ``record`` its lifecycle
+    record.  Subclass (or duck-type) to weight kinds, rate-limit, etc.
+    """
+
+    def should_quarantine(self, tenant_id: str, counts: Dict[str, int],
+                          record: TenantRecord) -> bool:
+        raise NotImplementedError
+
+    def should_evict(self, tenant_id: str, counts: Dict[str, int],
+                     record: TenantRecord) -> bool:
+        return False
+
+
+@dataclasses.dataclass
+class ThresholdPolicy(QuarantinePolicy):
+    """Quarantine past ``quarantine_after`` total violations; evict past
+    ``evict_after`` (None = never auto-evict — operator decides)."""
+
+    quarantine_after: int = 8
+    evict_after: Optional[int] = None
+
+    def should_quarantine(self, tenant_id, counts, record):
+        return sum(counts.values()) >= self.quarantine_after
+
+    def should_evict(self, tenant_id, counts, record):
+        return (self.evict_after is not None
+                and sum(counts.values()) >= self.evict_after)
+
+
+# --------------------------------------------------------------------------- #
+# The manager-side driver                                                     #
+# --------------------------------------------------------------------------- #
+
+
+class QuarantineManager:
+    """Polls the ViolationLog and applies a policy against a
+    :class:`~repro.core.manager.GuardianManager`.
+
+    Polling happens at drain-cycle boundaries (``maybe_poll`` from
+    ``run_queued``) — the fused launch path never synchronizes.  A poll is
+    skipped outright while the log is clean (no CHECK launch ran), so
+    BITWISE/MODULO traffic pays nothing.
+    """
+
+    def __init__(self, manager, policy: Optional[QuarantinePolicy] = None,
+                 poll_every: int = 1):
+        if poll_every < 1:
+            raise ValueError("poll_every must be >= 1")
+        self.manager = manager
+        self.policy = policy if policy is not None else ThresholdPolicy()
+        self.machine = QuarantineStateMachine()
+        self.poll_every = poll_every
+        self._cycles_since_poll = 0
+        self.events: List[str] = []   # human-readable transition trail
+
+    # -- registration hooks (called by the manager) --------------------- #
+    def admit(self, tenant_id: str) -> None:
+        self.machine.admit(tenant_id)
+
+    def forget(self, tenant_id: str) -> None:
+        self.machine.forget(tenant_id)
+
+    def check_admission(self, tenant_id: str, api: str = "call") -> None:
+        self.machine.check_admission(tenant_id, api)
+
+    def state_of(self, tenant_id: str) -> Optional[TenantState]:
+        return self.machine.state_of(tenant_id)
+
+    # -- polling --------------------------------------------------------- #
+    def maybe_poll(self) -> None:
+        """Cheap cadence gate for the drain loop.  ``dirty`` latches until
+        poll() consumes it, so the counter only advances on dirty cycles."""
+        if not self.manager.violog.dirty:
+            return
+        self._cycles_since_poll += 1
+        if self._cycles_since_poll >= self.poll_every:
+            self.poll()
+
+    def poll(self) -> List[str]:
+        """Read the log once and apply the policy.  Returns the tenant ids
+        transitioned this poll (quarantined or evicted)."""
+        self._cycles_since_poll = 0
+        log: ViolationLog = self.manager.violog
+        log.dirty = False          # only the poller consumes the flag
+        snap = log.snapshot()
+        transitioned: List[str] = []
+        for tenant_id in log.tenants():
+            rec = self.machine.record_of(tenant_id)
+            if rec is None:
+                continue
+            counts = log.counts(tenant_id, snap=snap)
+            if rec.state.admissible and self.policy.should_quarantine(
+                    tenant_id, counts, rec):
+                self.quarantine(
+                    tenant_id,
+                    reason=f"{sum(counts.values())} logged violations "
+                           f"({self._fmt(counts)})")
+                transitioned.append(tenant_id)
+                rec = self.machine.record_of(tenant_id)
+            if (rec.state is TenantState.QUARANTINED
+                    and self.policy.should_evict(tenant_id, counts, rec)):
+                self.evict(tenant_id)
+                transitioned.append(tenant_id)
+        return transitioned
+
+    @staticmethod
+    def _fmt(counts: Dict[str, int]) -> str:
+        return " ".join(f"{k}={v}" for k, v in counts.items() if v)
+
+    # -- transitions with device-side actions ---------------------------- #
+    def quarantine(self, tenant_id: str, reason: str = "") -> None:
+        """QUARANTINED: drop queued ops, reject new calls; data survives."""
+        self.machine.quarantine(tenant_id, reason=reason)
+        self.manager._drop_tenant_ops(tenant_id)
+        self.events.append(f"quarantine {tenant_id}: {reason}")
+
+    def evict(self, tenant_id: str, reason: str = "") -> None:
+        """EVICTED: scrub + free the partition, purge compiled entries."""
+        log: ViolationLog = self.manager.violog
+        rec = self.machine.evict(tenant_id, reason=reason)
+        if log.row_of(tenant_id) is not None:
+            rec.final_counts = log.counts(tenant_id)
+        self.manager._evict_tenant(tenant_id)
+        self.events.append(f"evict {tenant_id}")
+
+    def readmit(self, tenant_id: str) -> None:
+        """Back to service.  A QUARANTINED tenant keeps its partition; an
+        EVICTED one must register again for a fresh one.  Counters reset —
+        re-admission wipes the slate."""
+        self.machine.readmit(tenant_id)
+        self.manager.violog.reset(tenant_id)
+        self.events.append(f"readmit {tenant_id}")

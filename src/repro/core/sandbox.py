@@ -47,6 +47,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.fence import FenceParams, FencePolicy, apply_fence
+from repro.core.violations import NUM_KINDS, ViolationKind
 
 # Primitives through which "this value IS the arena slot space" propagates.
 _TAINT_TRANSPARENT = {
@@ -118,20 +119,25 @@ def _fence_index_columns(
     cols: Sequence[int],
     params: FenceParams,
     policy: FencePolicy,
-    oks: List[jax.Array],
+    oks: List[Tuple[ViolationKind, jax.Array]],
+    kind: ViolationKind,
 ) -> jax.Array:
-    """Fence the given trailing-dim columns of a gather/scatter index array."""
+    """Fence the given trailing-dim columns of a gather/scatter index array.
+
+    CHECK-mode ``ok`` predicates are collected *untruncated* (full element
+    arrays, tagged with the access kind) so the caller can both reduce them
+    to a scalar verdict and count the violating elements per kind."""
     if indices.ndim == 0:
         fenced, ok = apply_fence(policy, indices, params)
         if ok is not None:
-            oks.append(jnp.all(ok))
+            oks.append((kind, ok))
         return fenced.astype(indices.dtype)
     out = indices
     for c in cols:
         col = indices[..., c]
         fenced, ok = apply_fence(policy, col, params)
         if ok is not None:
-            oks.append(jnp.all(ok))
+            oks.append((kind, ok))
         out = out.at[..., c].set(fenced.astype(indices.dtype))
     return out
 
@@ -143,7 +149,7 @@ def _interpret(
     params: FenceParams,
     policy: FencePolicy,
     report: SandboxReport,
-    oks: List[jax.Array],
+    oks: List[Tuple[ViolationKind, jax.Array]],
 ) -> Tuple[List[Any], List[bool]]:
     jaxpr = closed.jaxpr
     env: Dict[Any, Any] = {}
@@ -189,7 +195,8 @@ def _interpret(
             if cols:
                 invals = list(invals)
                 invals[1] = _fence_index_columns(
-                    jnp.asarray(invals[1]), cols, params, policy, oks)
+                    jnp.asarray(invals[1]), cols, params, policy, oks,
+                    ViolationKind.GATHER)
                 report.fenced_gathers += 1
             out_taint = False  # gathered *values*, not slot space
 
@@ -200,7 +207,8 @@ def _interpret(
             if cols:
                 invals = list(invals)
                 invals[1] = _fence_index_columns(
-                    jnp.asarray(invals[1]), cols, params, policy, oks)
+                    jnp.asarray(invals[1]), cols, params, policy, oks,
+                    ViolationKind.SCATTER)
                 report.fenced_scatters += 1
             out_taint = True  # the arena flows through a scatter
 
@@ -209,7 +217,7 @@ def _interpret(
             invals = list(invals)
             start0, ok = apply_fence(policy, jnp.asarray(invals[1]), params)
             if ok is not None:
-                oks.append(jnp.all(ok))
+                oks.append((ViolationKind.SLICE, ok))
             hi = jnp.maximum(
                 jnp.asarray(params.base + params.size - sizes[0], jnp.int32),
                 jnp.asarray(params.base, jnp.int32))
@@ -223,7 +231,7 @@ def _interpret(
             upd_len = jnp.shape(invals[1])[0] if jnp.ndim(invals[1]) else 1
             start0, ok = apply_fence(policy, jnp.asarray(invals[2]), params)
             if ok is not None:
-                oks.append(jnp.all(ok))
+                oks.append((ViolationKind.UPDATE, ok))
             hi = jnp.maximum(
                 jnp.asarray(params.base + params.size - upd_len, jnp.int32),
                 jnp.asarray(params.base, jnp.int32))
@@ -259,12 +267,19 @@ def sandbox(
     fn: Callable,
     arena_argnums: Sequence[int] = (0,),
     policy: FencePolicy = FencePolicy.BITWISE,
+    count_violations: bool = False,
 ) -> Callable:
     """Instrument ``fn`` so every dynamic access to the arena args is fenced.
 
     Returns ``sandboxed(fence_params, *args) -> (outputs, ok)`` where ``ok``
     is a scalar bool: True unless the CHECK policy observed a violation
     (fencing policies always return True — they contain, not detect).
+
+    With ``count_violations=True`` the return is ``(outputs, ok, counts)``
+    where ``counts`` is a ``(NUM_KINDS,)`` int32 vector of violating
+    *elements* per access class (:class:`~repro.core.violations
+    .ViolationKind` order) — the per-launch row a CHECK step folds into the
+    device-side ViolationLog.  Fencing policies yield all-zero counts.
 
     The returned callable is trace-time instrumented: wrap it in ``jax.jit``
     once and the fences compile into the kernel (the paper compiles the
@@ -295,14 +310,22 @@ def sandbox(
             leaves = jax.tree_util.tree_leaves(a)
             taints.extend([p in arena_set] * len(leaves))
         report = SandboxReport()
-        oks: List[jax.Array] = []
+        oks: List[Tuple[Any, jax.Array]] = []
         outs, _ = _interpret(closed, flat_args, taints, fence_params, policy,
                              report, oks)
-        ok = jnp.all(jnp.stack(oks)) if oks else jnp.bool_(True)
+        ok = jnp.all(jnp.stack([jnp.all(o) for _, o in oks])) \
+            if oks else jnp.bool_(True)
         out_tree = jax.tree_util.tree_structure(
             jax.eval_shape(fn_dyn, *dyn_args)
         )
-        return jax.tree_util.tree_unflatten(out_tree, outs), ok
+        out = jax.tree_util.tree_unflatten(out_tree, outs)
+        if not count_violations:
+            return out, ok
+        counts = jnp.zeros((NUM_KINDS,), jnp.int32)
+        for kind, o in oks:
+            n_bad = jnp.sum(jnp.logical_not(o).astype(jnp.int32))
+            counts = counts.at[int(kind)].add(n_bad)
+        return out, ok, counts
 
     return sandboxed
 
@@ -335,7 +358,7 @@ def sandbox_report(
         leaves = jax.tree_util.tree_leaves(a)
         taints.extend([p in arena_set] * len(leaves))
     report = SandboxReport()
-    oks: List[jax.Array] = []
+    oks: List[Tuple[Any, jax.Array]] = []
     dummy = FenceParams(base=0, size=1)
     _interpret(closed, flat_args, taints, dummy, policy, report, oks)
     return report

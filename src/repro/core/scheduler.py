@@ -8,9 +8,10 @@ This module coalesces *compatible* pending launches from different tenants
 into a single **fused device step**:
 
 * Compatibility = same kernel symbol, same fence policy, same operand
-  signature (array shapes/dtypes + static launch dims).  Only BITWISE
+  signature (array shapes/dtypes + static launch dims).  BITWISE and CHECK
   launches fuse — their bounds are the two dynamic scalar parameters of
-  Listing 1, so fusing costs no recompiles.
+  Listing 1, so fusing costs no recompiles.  (Policies never mix in one
+  batch: the policy is part of the signature.)
 * The fused step takes one :class:`~repro.core.fence.FenceTable` — a
   ``(T, 2)`` int32 table of per-row ``(base, mask)`` scalars — plus each
   row's operands, and threads the shared arena through the rows inside one
@@ -21,6 +22,15 @@ into a single **fused device step**:
   the kernel fenced with tenant ``r``'s own (base, mask), so a forged slot
   id in tenant A's operands can only wrap inside A's partition, exactly as
   in the unbatched path (property-tested in tests/test_scheduler.py).
+* CHECK batches additionally attribute faults per row and **commit
+  selectively**: each row yields an ``ok`` predicate (all of its fenced
+  accesses in-bounds); a violating row's arena writes are rolled back
+  inside the trace while co-tenant rows land, and its per-kind violation
+  counts are folded into the device-side
+  :class:`~repro.core.violations.ViolationLog` — no host sync on the hot
+  path.  CHECK rows therefore *never raise* from the scheduler path;
+  detection is consumed asynchronously by the manager's
+  :class:`~repro.core.quarantine.QuarantineManager` poll.
 
 Non-fusable launches degrade gracefully to the per-launch path:
 
@@ -28,9 +38,6 @@ Non-fusable launches degrade gracefully to the per-launch path:
               native binary, no batching machinery on the hot path.
 * MODULO    — magic-shift constants are structural (per-partition
               binaries), fusing would specialize per tenant set.
-* CHECK     — the manager must attribute the ``ok`` predicate and discard
-              the offender's writes before commit; batching would commit
-              neighbours' rows along with the offender's clamped writes.
 
 Fairness: requests are taken strictly in arrival order (the manager's
 round-robin cycle order).  A request that cannot join the open batch
@@ -93,7 +100,7 @@ class LaunchRequest:
 
     @property
     def fusable(self) -> bool:
-        return self.policy is FencePolicy.BITWISE
+        return self.policy in (FencePolicy.BITWISE, FencePolicy.CHECK)
 
     def repolicy(self, policy: FencePolicy) -> None:
         """Re-resolve the fence policy at drain time.  The effective policy
@@ -117,6 +124,7 @@ class SchedulerStats:
     fused_steps: int = 0            # multi-row device dispatches
     single_steps: int = 0           # per-launch (unbatched) dispatches
     batched_launches: int = 0       # launches that rode in fused steps
+    check_steps: int = 0            # dispatches through the CHECK commit path
     max_batch_width: int = 0
     batch_widths: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
@@ -140,6 +148,7 @@ class SchedulerStats:
             "total_launches": float(self.total_launches),
             "device_steps": float(self.device_steps),
             "fused_steps": float(self.fused_steps),
+            "check_steps": float(self.check_steps),
             "mean_batch_width": self.mean_batch_width,
             "max_batch_width": float(self.max_batch_width),
         }
@@ -166,6 +175,10 @@ class BatchedLaunchScheduler:
         # bounded: distinct batch compositions are combinatorial in the
         # tenant set under uneven drain, so the cache is reset when full
         self._table_cache: Dict[Tuple, FenceTable] = {}
+        # (tenant_id, ...) -> device-staged ViolationLog row-id vector for
+        # CHECK batches (same rationale; invalidated when a tenant's log
+        # row is recycled — see invalidate_tenant_rows)
+        self._vrow_cache: Dict[Tuple[str, ...], jax.Array] = {}
         self.stats = SchedulerStats()
         # tenant ids of the most recent device steps, in dispatch order
         # (fairness tests / debugging; bounded — see SchedulerStats)
@@ -179,6 +192,28 @@ class BatchedLaunchScheduler:
     @property
     def pending(self) -> int:
         return len(self._pending)
+
+    def drop_tenant(self, tenant_id: str) -> int:
+        """Discard a tenant's not-yet-dispatched requests (quarantine path).
+        Returns how many were dropped."""
+        kept = [r for r in self._pending if r.tenant_id != tenant_id]
+        dropped = len(self._pending) - len(kept)
+        self._pending = kept
+        return dropped
+
+    def invalidate_tenant_rows(self, tenant_id: str) -> None:
+        """Drop staged row-id vectors naming the tenant — its ViolationLog
+        row is being recycled and a later same-id registration may land on
+        a different row."""
+        for key in [k for k in self._vrow_cache if tenant_id in k]:
+            del self._vrow_cache[key]
+
+    def invalidate_table_rows(self, bounds: Tuple[int, int]) -> None:
+        """Drop staged FenceTables referencing a dead partition's
+        ``(base, mask)`` — called by the manager on partition reclamation
+        (the scheduler owns its cache key format)."""
+        for key in [k for k in self._table_cache if bounds in k]:
+            del self._table_cache[key]
 
     def flush(self) -> None:
         """Coalesce and execute everything pending, oldest first."""
@@ -211,6 +246,12 @@ class BatchedLaunchScheduler:
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:
         self.dispatch_log.append(tuple(r.tenant_id for r in batch))
+        if batch[0].policy is FencePolicy.CHECK:
+            # CHECK always takes the attributing commit path (any width):
+            # a width-1 CHECK step must contain-and-log, not raise, so its
+            # semantics match the fused case (tests/test_quarantine.py).
+            self._execute_check(batch)
+            return
         if len(batch) == 1:
             self.stats.single_steps += 1
             self.manager._execute_request(batch[0])
@@ -225,13 +266,7 @@ class BatchedLaunchScheduler:
             fn = self._build_fused(head.entry, head.signature[2], T)
             self._fused_cache[key] = fn
 
-        rows_key = tuple((r.part.base, r.part.mask) for r in batch)
-        table = self._table_cache.get(rows_key)
-        if table is None:
-            if len(self._table_cache) >= 512:
-                self._table_cache.clear()   # rebuild cost: one device put
-            table = FenceTable.from_partitions([r.part for r in batch])
-            self._table_cache[rows_key] = table
+        table = self._staged_table(batch)
         flat_dyn: List[Any] = []
         for req in batch:
             flat_dyn.extend(a for a in req.call_args
@@ -242,10 +277,105 @@ class BatchedLaunchScheduler:
         mgr.arena.buf = new_arena
         mgr.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
 
+        self._record_step(T)
+
+    def _staged_table(self, batch: List[LaunchRequest]) -> FenceTable:
+        rows_key = tuple((r.part.base, r.part.mask) for r in batch)
+        table = self._table_cache.get(rows_key)
+        if table is None:
+            if len(self._table_cache) >= 512:
+                self._table_cache.clear()   # rebuild cost: one device put
+            table = FenceTable.from_partitions([r.part for r in batch])
+            self._table_cache[rows_key] = table
+        return table
+
+    def _record_step(self, T: int) -> None:
+        if T == 1:
+            self.stats.single_steps += 1
+            return
         self.stats.fused_steps += 1
         self.stats.batched_launches += T
         self.stats.max_batch_width = max(self.stats.max_batch_width, T)
         self.stats.batch_widths.append(T)
+
+    # ------------------------------------------------------------------ #
+    def _execute_check(self, batch: List[LaunchRequest]) -> None:
+        """CHECK-mode dispatch with per-row attribution + selective commit.
+
+        One compiled step runs every row's checked twin, rolls back the
+        arena for rows whose ``ok`` predicate is false, and folds each
+        row's per-kind violation counts into the manager's device-side
+        ViolationLog — entirely inside the trace (no host sync here; the
+        QuarantineManager polls the log at cycle boundaries).
+        """
+        mgr = self.manager
+        T = len(batch)
+        head = batch[0]
+        key = (*head.signature, T)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            fn = self._build_fused_check(head.entry, head.signature[2], T)
+            self._fused_cache[key] = fn
+
+        table = self._staged_table(batch)
+        vrows = self._staged_vrows(batch)
+        flat_dyn: List[Any] = []
+        for req in batch:
+            flat_dyn.extend(a for a in req.call_args
+                            if isinstance(a, (jax.Array, np.ndarray)))
+
+        t0 = time.perf_counter_ns()
+        new_arena, new_log, _ok_rows, _outs = fn(
+            mgr.arena.buf, mgr.violog.buf, table.rows, vrows, *flat_dyn)
+        mgr.arena.buf = new_arena
+        mgr.violog.buf = new_log
+        mgr.violog.dirty = True
+        mgr.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+
+        self.stats.check_steps += 1
+        self._record_step(T)
+
+    def _staged_vrows(self, batch: List[LaunchRequest]) -> jax.Array:
+        key = tuple(r.tenant_id for r in batch)
+        vrows = self._vrow_cache.get(key)
+        if vrows is None:
+            if len(self._vrow_cache) >= 512:
+                self._vrow_cache.clear()
+            vrows = jnp.asarray(np.array(
+                [self.manager.violog.assign(r.tenant_id) for r in batch],
+                np.int32))
+            self._vrow_cache[key] = vrows
+        return vrows
+
+    def _build_fused_check(self, entry, arg_sig: Tuple, T: int) -> Callable:
+        """CHECK twin of :meth:`_build_fused`: rows carry dynamic
+        ``(base, size)`` bounds, return per-row ``ok``, and commit
+        selectively — ``jnp.where(ok, written, unwritten)`` rolls an
+        offending row back before the next row sees the arena, so
+        co-tenant rows land byte-identically to their standalone runs."""
+        n_dyn_per_row = sum(1 for kind, *_ in arg_sig if kind == "d")
+
+        def fused(arena, violog, rows, vrows, *flat_dyn):
+            oks = []
+            outs = []
+            for r in range(T):
+                row_dyn = iter(
+                    flat_dyn[r * n_dyn_per_row:(r + 1) * n_dyn_per_row])
+                call = [next(row_dyn) if kind == "d" else spec[0]
+                        for kind, *spec in arg_sig]
+                written, ok, counts = entry.checked_dyn(
+                    arena, rows[r, 0], rows[r, 1] + 1, *call)
+                new_arena, out = written
+                # selective commit: the offender's writes never land
+                arena = jnp.where(ok, new_arena, arena)
+                # counts are nonzero exactly where ok is false — fold
+                # unconditionally (in-bounds rows add zeros)
+                violog = violog.at[vrows[r]].add(counts)
+                oks.append(ok)
+                outs.append(out)
+            return arena, violog, jnp.stack(oks), tuple(outs)
+
+        return jax.jit(fused)
 
     def _build_fused(self, entry, arg_sig: Tuple, T: int) -> Callable:
         """One compiled binary per (kernel, operand signature, width).

@@ -12,6 +12,11 @@ belongs to tenant t(b), so the slot index of row b is fenced with t(b)'s
 or a forged slot id can only wrap inside the owning tenant's slots — the
 serving-plane equivalent of the paper's sandboxed kernels.
 
+Fault containment (DESIGN.md §Fault-containment): the engine drives a
+:class:`~repro.core.quarantine.QuarantineStateMachine` — quarantined
+tenants' submissions are rejected, their pending requests re-route to
+co-tenants, and eviction scrubs + reclaims their pool partition.
+
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --reduced --tenants 3 --requests 6 --tokens 16
 """
@@ -30,6 +35,7 @@ import numpy as np
 from repro.configs import ShapeConfig, get_config
 from repro.core.fence import FenceParams, FencePolicy, FenceTable
 from repro.core.partition import PartitionBoundsTable
+from repro.core.quarantine import QuarantineStateMachine
 from repro.models import get_model
 from repro.models.guard import GuardSpec
 
@@ -72,6 +78,12 @@ class ServeEngine:
         slots = self._pool_slots()
         self.bounds = PartitionBoundsTable(slots)
         self._scratch = self.bounds.create("__scratch", slots // 2)
+        # fault containment: lifecycle gate for the serving plane (the
+        # engine shares the state machine with the GuardianManager but
+        # drives transitions itself — violations here are scheduler-level,
+        # e.g. an upstream fraud signal or a manager-side quarantine event)
+        self.quarantine = QuarantineStateMachine()
+        self.rejected: List[int] = []     # rids dropped by quarantine
         self._ftable: Optional[FenceTable] = None
         self._ftable_key: Tuple = ()
         self._ftable_row: Dict[str, int] = {}
@@ -92,9 +104,41 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ #
     def register_tenant(self, name: str, slots: int):
-        return self.bounds.create(name, slots)
+        new_record = self.quarantine.record_of(name) is None
+        self.quarantine.admit(name)      # refuses EVICTED ids
+        try:
+            return self.bounds.create(name, slots)
+        except Exception:
+            if new_record:               # no phantom ACTIVE record
+                self.quarantine.forget(name)
+            raise
+
+    def quarantine_tenant(self, name: str, reason: str = "") -> List[int]:
+        """Reject the tenant: pending requests are dropped (their batch
+        rows re-route to co-tenants on the next ``run``), new submissions
+        raise.  Returns the dropped request ids."""
+        self.quarantine.quarantine(name, reason=reason)
+        dropped = [r.rid for r in self._requests
+                   if r.tenant == name and not r.done]
+        self._requests = [r for r in self._requests
+                          if r.done or r.tenant != name]
+        self.rejected.extend(dropped)
+        return dropped
+
+    def evict_tenant(self, name: str) -> None:
+        """Scrub the tenant's pool slots and return its partition to the
+        buddy allocator; the freed block serves the next registration."""
+        part = self.bounds.lookup(name)
+        self.quarantine.evict(name)
+        self.cache = _scrub_slots(self.cache, part.base, part.size)
+        self.bounds.destroy(name)
+        self._ftable = None              # bounds changed: rebuild on demand
+
+    def readmit_tenant(self, name: str) -> None:
+        self.quarantine.readmit(name)
 
     def submit(self, tenant: str, prompt: np.ndarray) -> int:
+        self.quarantine.check_admission(tenant, "submit")
         part = self.bounds.lookup(tenant)
         used = {r.slot for r in self._requests if not r.done
                 and r.tenant == tenant}
@@ -153,8 +197,11 @@ class ServeEngine:
         )
 
     def _assign_rows(self) -> List[Request]:
-        """Round-robin across tenants (paper §4.2.4) for idle rows."""
-        active = [r for r in self._requests if not r.done]
+        """Round-robin across tenants (paper §4.2.4) for idle rows.
+        Quarantined tenants' requests never occupy a row — their slots
+        re-route to admissible co-tenants."""
+        active = [r for r in self._requests if not r.done
+                  and _admissible(self.quarantine, r.tenant)]
         by_tenant: Dict[str, List[Request]] = {}
         for r in active:
             by_tenant.setdefault(r.tenant, []).append(r)
@@ -215,6 +262,33 @@ class ServeEngine:
                 return dataclasses.replace(c, kv=kv, state=st)
             return dataclasses.replace(c, kv=kv)
         return c
+
+
+def _admissible(machine: QuarantineStateMachine, tenant: str) -> bool:
+    state = machine.state_of(tenant)
+    return state is None or state.admissible
+
+
+def _scrub_slots(cache, base: int, size: int):
+    """Zero a slot range [base, base+size) across every pool tensor of a
+    cache pytree (axis 1 is the shared slot axis in all cache layouts —
+    see kvcache.PagedKVCache / StateCache)."""
+    def zero(arr):
+        z = jnp.zeros((arr.shape[0], size, *arr.shape[2:]), arr.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(arr, z, base, axis=1)
+
+    if hasattr(cache, "kv"):          # hybrid / encdec: recurse
+        new = {"kv": _scrub_slots(cache.kv, base, size)}
+        if hasattr(cache, "state"):
+            new["state"] = _scrub_slots(cache.state, base, size)
+        if hasattr(cache, "cross_k"):  # encdec cross-attention pools
+            new["cross_k"] = zero(cache.cross_k)
+            new["cross_v"] = zero(cache.cross_v)
+        return dataclasses.replace(cache, **new)
+    if hasattr(cache, "pools"):
+        return dataclasses.replace(
+            cache, pools={k: zero(v) for k, v in cache.pools.items()})
+    return dataclasses.replace(cache, k=zero(cache.k), v=zero(cache.v))
 
 
 def main():

@@ -1,0 +1,407 @@
+"""Quarantine lifecycle + CHECK-mode fused launches with selective commit
+(DESIGN.md §Fault-containment).
+
+Covers the acceptance scenario end-to-end: a fused CHECK drain with one OOB
+tenant commits co-tenant rows byte-identically to their standalone runs,
+rolls the offender back, logs its row, quarantines it past the threshold
+while co-tenants continue, and eviction reclaims + scrubs the partition and
+purges the symbol caches.
+
+State-machine invariants run as a deterministic sweep over all transition
+pairs plus a hypothesis property mirror over random transition sequences
+(tests/_hyp.py convention): no transition out of EVICTED except explicit
+re-admission.
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import (
+    FencePolicy,
+    GuardianManager,
+    QuarantineError,
+    QuarantineStateMachine,
+    SharingMode,
+    TenantQuarantined,
+    TenantState,
+    ThresholdPolicy,
+)
+
+
+def bump(arena, ptr, n):
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals + 1.0), None
+
+
+def evil_write(arena, target, n):
+    idx = target + jnp.arange(n, dtype=jnp.int32)
+    return arena.at[idx].set(999.0), None
+
+
+def make_manager(n=3, slots=512, **kw):
+    kw.setdefault("policy", FencePolicy.CHECK)
+    mgr = GuardianManager(total_slots=slots, **kw)
+    clients = []
+    for i in range(n):
+        c = mgr.register_tenant(f"t{i}", slots // (2 * n))
+        c.module_load("bump", bump)
+        c.module_load("evil", evil_write)
+        clients.append(c)
+    return mgr, clients
+
+
+# ---------------------------------------------------------------------------
+# State machine: transition legality
+# ---------------------------------------------------------------------------
+
+_OPS = ("quarantine", "evict", "readmit")
+
+# the complete legal transition relation (op applied in state -> new state)
+_LEGAL_SWEEP = {
+    (TenantState.ACTIVE, "quarantine"): TenantState.QUARANTINED,
+    (TenantState.READMITTED, "quarantine"): TenantState.QUARANTINED,
+    (TenantState.QUARANTINED, "evict"): TenantState.EVICTED,
+    (TenantState.QUARANTINED, "readmit"): TenantState.READMITTED,
+    (TenantState.EVICTED, "readmit"): TenantState.READMITTED,
+}
+
+
+def _machine_in(state: TenantState) -> QuarantineStateMachine:
+    m = QuarantineStateMachine()
+    m.admit("t")
+    path = {
+        TenantState.ACTIVE: (),
+        TenantState.QUARANTINED: ("quarantine",),
+        TenantState.EVICTED: ("quarantine", "evict"),
+        TenantState.READMITTED: ("quarantine", "readmit"),
+    }[state]
+    for op in path:
+        getattr(m, op)("t")
+    return m
+
+
+def test_transition_table_sweep():
+    """Every (state, op) pair behaves per the legal-transition relation."""
+    for state, op in itertools.product(TenantState, _OPS):
+        m = _machine_in(state)
+        want = _LEGAL_SWEEP.get((state, op))
+        if want is None:
+            with pytest.raises(QuarantineError):
+                getattr(m, op)("t")
+            assert m.state_of("t") is state      # illegal op is a no-op
+        else:
+            getattr(m, op)("t")
+            assert m.state_of("t") is want
+
+
+def test_no_exit_from_evicted_except_readmit():
+    m = _machine_in(TenantState.EVICTED)
+    with pytest.raises(QuarantineError):
+        m.quarantine("t")
+    with pytest.raises(QuarantineError):
+        m.evict("t")
+    with pytest.raises(QuarantineError):
+        m.admit("t")                 # re-registration is not an exit
+    assert m.state_of("t") is TenantState.EVICTED
+    m.readmit("t")                   # the single legal exit
+    assert m.state_of("t") is TenantState.READMITTED
+
+
+def test_eviction_record_survives_forget():
+    m = _machine_in(TenantState.EVICTED)
+    m.forget("t")                    # teardown must not launder the ban
+    assert m.state_of("t") is TenantState.EVICTED
+    m2 = _machine_in(TenantState.ACTIVE)
+    m2.forget("t")
+    assert m2.state_of("t") is None  # healthy teardown does forget
+
+
+@given(st.lists(st.sampled_from(_OPS), min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_random_walk_respects_transition_table(ops):
+    """Property mirror of the sweep: under any op sequence the machine
+    only ever moves along legal edges, and EVICTED is only ever left via
+    an explicit readmit."""
+    m = QuarantineStateMachine()
+    m.admit("t")
+    state = TenantState.ACTIVE
+    for op in ops:
+        want = _LEGAL_SWEEP.get((state, op))
+        if want is None:
+            with pytest.raises(QuarantineError):
+                getattr(m, op)("t")
+        else:
+            if state is TenantState.EVICTED:
+                assert op == "readmit"
+            getattr(m, op)("t")
+            state = want
+        assert m.state_of("t") is state
+
+
+def test_quarantine_counters():
+    m = QuarantineStateMachine()
+    m.admit("t")
+    m.quarantine("t", reason="r1")
+    m.readmit("t")
+    m.quarantine("t", reason="r2")
+    rec = m.record_of("t")
+    assert rec.quarantines == 2 and rec.readmissions == 1
+
+
+# ---------------------------------------------------------------------------
+# Fused CHECK drain: per-row ok + selective commit (acceptance scenario)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_check_selective_commit_matches_standalone():
+    """Co-tenants' writes in a fused CHECK step with an OOB offender are
+    byte-identical to their standalone runs; the offender's writes never
+    land; its ViolationLog row is non-zero."""
+    # standalone reference: each well-behaved tenant alone, same launches
+    refs = {}
+    for i in range(2):
+        mgr, clients = make_manager(
+            3, quarantine_policy=ThresholdPolicy(quarantine_after=1 << 30))
+        c = clients[i]
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.arange(8, dtype=np.float32))
+        for _ in range(3):
+            c.launch_kernel("bump", ptrs=[p], args=(8,))
+        mgr.synchronize()
+        part = mgr.bounds.lookup(f"t{i}")
+        refs[i] = np.asarray(
+            mgr.arena.unsafe_read_range(part.base, part.size)).copy()
+
+    # fused run: t0, t1 behave; t2 launches the SAME kernel with a forged
+    # pointer into t0 — all three rows ride in one fused CHECK step
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=1 << 30))
+    ptrs = []
+    for c in clients[:2]:
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.arange(8, dtype=np.float32))
+        ptrs.append(p)
+    mgr.synchronize()                       # uploads land before cycle 1
+    victim = mgr.bounds.lookup("t0")
+    for _ in range(3):
+        for c, p in zip(clients[:2], ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(8,))
+        clients[2].launch_kernel(           # forged ptr, same signature
+            "bump", args=(jnp.int32(victim.base), 8))
+    mgr.synchronize()
+    assert mgr.scheduler.stats.fused_steps == 3      # all 3 rows fused
+    assert mgr.scheduler.stats.check_steps == 3
+    assert list(mgr.scheduler.stats.batch_widths) == [3, 3, 3]
+
+    for i in range(2):
+        part = mgr.bounds.lookup(f"t{i}")
+        got = np.asarray(mgr.arena.unsafe_read_range(part.base, part.size))
+        np.testing.assert_array_equal(got, refs[i], err_msg=f"t{i}")
+    # offender: no write landed anywhere (its own partition stays zero,
+    # and t0's bytes above already matched the attack-free reference)
+    part2 = mgr.bounds.lookup("t2")
+    own = np.asarray(mgr.arena.unsafe_read_range(part2.base, part2.size))
+    assert (own == 0).all()
+    # attribution: 3 launches x 8 OOB gather + 8 OOB scatter elements
+    assert mgr.violog.counts("t2") == {
+        "gather": 24, "scatter": 24, "slice": 0, "update": 0}
+    assert mgr.violog.total("t0") == 0 and mgr.violog.total("t1") == 0
+
+
+def test_threshold_quarantines_offender_cotenants_uninterrupted():
+    """Crossing the threshold mid-drain drops the offender's remaining ops
+    while co-tenant launches in the same drain keep landing."""
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=16))
+    ptrs = []
+    for c in clients[:2]:
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.zeros(8, np.float32))
+        ptrs.append(p)
+    victim = mgr.bounds.lookup("t0")
+    cycles = 6
+    for _ in range(cycles):
+        for c, p in zip(clients[:2], ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(8,))
+        clients[2].launch_kernel("evil", args=(jnp.int32(victim.base), 8))
+    mgr.synchronize()
+    # 8 violations/launch -> quarantined after the 2nd offending cycle
+    assert mgr.quarantine.state_of("t2") is TenantState.QUARANTINED
+    assert mgr.violog.total("t2") == 16          # later ops were dropped
+    # every co-tenant cycle still landed
+    for c, p in zip(clients[:2], ptrs):
+        np.testing.assert_array_equal(
+            c.memcpy_d2h(p, 8), np.full(8, float(cycles), np.float32))
+    with pytest.raises(TenantQuarantined):
+        clients[2].launch_kernel("bump", args=(jnp.int32(0), 8))
+    report = mgr.violation_report()
+    assert report["tenants"]["t2"]["state"] == "quarantined"
+    assert report["events"]
+
+
+def test_eviction_scrubs_reclaims_and_bans():
+    mgr, clients = make_manager(
+        2, quarantine_policy=ThresholdPolicy(quarantine_after=8))
+    part = mgr.bounds.lookup("t1")
+    p = clients[1].malloc(8)
+    clients[1].memcpy_h2d(p, np.full(8, 5.0, np.float32))
+    clients[1].launch_kernel(
+        "evil", args=(jnp.int32(mgr.bounds.lookup("t0").base), 8))
+    mgr.synchronize()
+    assert mgr.quarantine.state_of("t1") is TenantState.QUARANTINED
+    free_before = mgr.bounds.free_slots()
+    mgr.quarantine.evict("t1")
+    # partition scrubbed and returned to the buddy allocator
+    got = np.asarray(mgr.arena.unsafe_read_range(part.base, part.size))
+    assert (got == 0).all()
+    assert mgr.bounds.free_slots() == free_before + part.size
+    # final counts survive in the report after the log row was recycled
+    rep = mgr.violation_report()["tenants"]["t1"]
+    assert rep["state"] == "evicted" and rep["scatter"] == 8
+    # the ban holds across re-registration attempts...
+    with pytest.raises(QuarantineError):
+        mgr.register_tenant("t1", 64)
+    # ...until explicit re-admission
+    mgr.quarantine.readmit("t1")
+    c_new = mgr.register_tenant("t1", 64)
+    assert mgr.bounds.lookup("t1").base == part.base   # freed block reused
+    assert c_new is mgr._clients["t1"]
+
+
+def test_remove_tenant_cannot_launder_quarantine():
+    """Voluntary teardown of a QUARANTINED tenant is refused — otherwise
+    remove + re-register would yield a fresh ACTIVE record with zeroed
+    counters."""
+    mgr, clients = make_manager(
+        2, quarantine_policy=ThresholdPolicy(quarantine_after=8))
+    clients[1].launch_kernel(
+        "evil", args=(jnp.int32(mgr.bounds.lookup("t0").base), 8))
+    mgr.synchronize()
+    assert mgr.quarantine.state_of("t1") is TenantState.QUARANTINED
+    with pytest.raises(QuarantineError):
+        mgr.remove_tenant("t1")
+    assert mgr.quarantine.state_of("t1") is TenantState.QUARANTINED
+    assert mgr.violog.total("t1") == 8           # counters intact
+    # healthy co-tenant teardown still works
+    mgr.remove_tenant("t0")
+    assert mgr.quarantine.state_of("t0") is None
+
+
+def test_readmit_from_quarantine_restores_service_and_counters():
+    mgr, clients = make_manager(
+        2, quarantine_policy=ThresholdPolicy(quarantine_after=8))
+    clients[1].launch_kernel(
+        "evil", args=(jnp.int32(mgr.bounds.lookup("t0").base), 8))
+    mgr.synchronize()
+    assert mgr.quarantine.state_of("t1") is TenantState.QUARANTINED
+    mgr.quarantine.readmit("t1")
+    assert mgr.quarantine.state_of("t1") is TenantState.READMITTED
+    assert mgr.violog.total("t1") == 0           # slate wiped
+    p = clients[1].malloc(4)                     # partition survived
+    clients[1].memcpy_h2d(p, np.ones(4, np.float32))
+    clients[1].launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    np.testing.assert_array_equal(clients[1].memcpy_d2h(p, 4),
+                                  np.full(4, 2.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Symbol-cache eviction (ROADMAP: "eviction policy for the symbol caches")
+# ---------------------------------------------------------------------------
+
+
+def test_remove_tenant_evicts_native_jit_entries():
+    """A removed tenant's cached unfenced (NONE-policy) binary can never be
+    launched again: the native entries leave the per-kernel jit caches on
+    remove_tenant, and the next tenant set compiles fresh fenced twins."""
+    mgr = GuardianManager(total_slots=256)
+    solo = mgr.register_tenant("solo", 64)
+    solo.module_load("bump", bump)
+    p = solo.malloc(8)
+    solo.memcpy_h2d(p, np.zeros(8, np.float32))
+    solo.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.synchronize()
+    entry = mgr.pointer_to_symbol["bump"]
+    assert any(k[0] == "native" for k in entry.jit_cache)
+    mgr.remove_tenant("solo")
+    assert not any(k[0] == "native" for k in entry.jit_cache)
+
+    # a new pair of tenants reuses the symbol; nothing native remains
+    a = mgr.register_tenant("a", 64)
+    mgr.register_tenant("b", 64)
+    pa = a.malloc(8)
+    a.memcpy_h2d(pa, np.zeros(8, np.float32))
+    a.launch_kernel("bump", ptrs=[pa], args=(8,))
+    mgr.synchronize()
+    assert not any(k[0] == "native" for k in entry.jit_cache)
+
+
+def test_quarantine_evicts_native_jit_entries():
+    mgr = GuardianManager(
+        total_slots=256, policy=FencePolicy.BITWISE,
+        quarantine_policy=ThresholdPolicy(quarantine_after=1 << 30))
+    solo = mgr.register_tenant("solo", 64)
+    solo.module_load("bump", bump)
+    p = solo.malloc(8)
+    solo.memcpy_h2d(p, np.zeros(8, np.float32))
+    solo.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.synchronize()
+    entry = mgr.pointer_to_symbol["bump"]
+    assert any(k[0] == "native" for k in entry.jit_cache)
+    mgr.quarantine.quarantine("solo", reason="operator action")
+    assert not any(k[0] == "native" for k in entry.jit_cache)
+
+
+def test_eviction_purges_modulo_and_table_caches():
+    mgr, clients = make_manager(
+        2, policy=FencePolicy.MODULO, mode=SharingMode.TIME_SHARE,
+        quarantine_policy=ThresholdPolicy(quarantine_after=1 << 30))
+    part = mgr.bounds.lookup("t1")
+    p = clients[1].malloc(4)
+    clients[1].memcpy_h2d(p, np.ones(4, np.float32))
+    clients[1].launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    entry = mgr.pointer_to_symbol["bump"]
+    key = (part.base, part.size)
+    assert key in entry.modulo_static
+    mgr.quarantine.quarantine("t1")
+    mgr.quarantine.evict("t1")
+    assert key not in entry.modulo_static
+    assert not any(k[0] == f"mod{part.base}.{part.size}"
+                   for k in entry.jit_cache)
+
+
+# ---------------------------------------------------------------------------
+# Serving plane
+# ---------------------------------------------------------------------------
+
+
+def test_serve_rejects_and_reroutes_quarantined_tenant():
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=4, max_len=64)
+    eng.register_tenant("good", 2)
+    eng.register_tenant("bad", 2)
+    rng = np.random.default_rng(0)
+    rid_g = eng.submit("good", rng.integers(0, cfg.vocab, 8, np.int32))
+    rid_b = eng.submit("bad", rng.integers(0, cfg.vocab, 8, np.int32))
+    dropped = eng.quarantine_tenant("bad", reason="abuse signal")
+    assert dropped == [rid_b]
+    with pytest.raises(TenantQuarantined):
+        eng.submit("bad", rng.integers(0, cfg.vocab, 8, np.int32))
+    out = eng.run(max_new_tokens=2)
+    assert rid_g in out and rid_b not in out     # good tenant re-routed in
+    # eviction frees the pool partition for a newcomer
+    bad_part = eng.bounds.lookup("bad")
+    eng.evict_tenant("bad")
+    eng.register_tenant("new", 2)
+    assert eng.bounds.lookup("new").base == bad_part.base
+    with pytest.raises(QuarantineError):
+        eng.register_tenant("bad", 2)            # ban survives eviction

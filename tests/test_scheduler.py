@@ -300,10 +300,33 @@ def test_serve_fence_table_tracks_repartition():
         (new_part.base, new_part.mask) == tuple(old_row)
 
 
-def test_check_policy_not_fused_and_still_detects():
-    """CHECK launches degrade to per-launch dispatch (the manager must
-    attribute the ok predicate and discard the offender's writes)."""
+def test_check_policy_contains_and_attributes_on_scheduler_path():
+    """CHECK launches ride the scheduler's attributing commit path: the
+    offender's writes are rolled back on device and the violation lands in
+    its ViolationLog row — no exception interrupts the drain (the
+    per-launch paths, TIME_SHARE and batch_launches=False, still raise;
+    see test_manager.test_check_policy_detects_oob)."""
     mgr = GuardianManager(total_slots=256, policy=FencePolicy.CHECK)
+    a = mgr.register_tenant("a", 64)
+    mgr.register_tenant("b", 64)
+
+    def oob(arena, n):
+        idx = 200 + jnp.arange(n, dtype=jnp.int32)   # b's partition
+        return arena.at[idx].set(1.0), None
+
+    a.module_load("oob", oob)
+    a.launch_kernel("oob", args=(4,))
+    mgr.synchronize()                     # contains; does not raise
+    assert mgr.scheduler.stats.check_steps == 1
+    assert not (np.asarray(mgr.arena.buf) == 1.0).any()   # rolled back
+    assert mgr.violog.counts("a")["scatter"] == 4
+    assert mgr.violog.total("b") == 0
+
+
+def test_check_policy_unbatched_drain_still_raises():
+    """batch_launches=False restores the raising per-launch CHECK path."""
+    mgr = GuardianManager(total_slots=256, policy=FencePolicy.CHECK,
+                          batch_launches=False)
     a = mgr.register_tenant("a", 64)
     mgr.register_tenant("b", 64)
 
@@ -315,8 +338,8 @@ def test_check_policy_not_fused_and_still_detects():
     a.launch_kernel("oob", args=(4,))
     with pytest.raises(GuardianViolation):
         mgr.synchronize()
-    assert mgr.scheduler.stats.fused_steps == 0
     assert mgr.violations
+    assert mgr.violog.counts("a")["scatter"] == 4   # attributed even so
 
 
 def test_signature_distinguishes_policies():

@@ -1,0 +1,230 @@
+"""ViolationLog accounting — device-side per-tenant per-kind OOB telemetry
+(DESIGN.md §Fault-containment): counts match injected OOB indices exactly,
+zero false positives under in-bounds (BITWISE-safe) traffic, and row
+lifecycle (assign / release / reset).
+
+Deterministic seeded sweeps mirror every hypothesis property (the tier-1
+suite runs without hypothesis; see tests/_hyp.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import (
+    FencePolicy,
+    GuardianManager,
+    ThresholdPolicy,
+    ViolationKind,
+    ViolationLog,
+)
+
+TOTAL = 512
+
+
+def make_mixed_kernel():
+    """One fenced access of every kind the sandbox instruments:
+    gather + scatter over ``idx``, dynamic slice + update at ``start``."""
+    import jax
+
+    def mixed(arena, idx, start, n):
+        vals = jnp.take(arena, idx, axis=0)                        # gather
+        arena = arena.at[idx].set(vals + 1.0)                      # scatter
+        window = jax.lax.dynamic_slice_in_dim(arena, start, 4, axis=0)
+        arena = jax.lax.dynamic_update_slice_in_dim(
+            arena, window * 1.0, start, axis=0)                    # update
+        return arena, None
+
+    return mixed
+
+
+def setup_manager(**kw):
+    kw.setdefault("total_slots", TOTAL)
+    kw.setdefault("policy", FencePolicy.CHECK)
+    # accounting tests observe the log itself; park the threshold out of
+    # reach so the QuarantineManager never reacts (tests/test_quarantine.py
+    # covers the reactions)
+    kw.setdefault("quarantine_policy",
+                  ThresholdPolicy(quarantine_after=1 << 30))
+    mgr = GuardianManager(**kw)
+    a = mgr.register_tenant("a", 128)
+    b = mgr.register_tenant("b", 128)
+    a.module_load("mixed", make_mixed_kernel())
+    b.module_load("mixed", make_mixed_kernel())
+    return mgr, a, b
+
+
+def _launch_mixed(mgr, client, idx, start):
+    client.launch_kernel(
+        "mixed", args=(jnp.asarray(idx, jnp.int32), jnp.int32(start), 0))
+    mgr.run_queued()      # drain without the final d2h sync
+
+
+def _expected(part, idx, start):
+    n_oob = int(sum(1 for i in idx if not (part.base <= i < part.end)))
+    start_oob = int(not (part.base <= start < part.end))
+    return {"gather": n_oob, "scatter": n_oob,
+            "slice": start_oob, "update": start_oob}
+
+
+# ---------------------------------------------------------------------------
+# Exact accounting (deterministic sweep — hypothesis mirror below)
+# ---------------------------------------------------------------------------
+
+
+def test_counts_match_injected_oob_exactly_sweep():
+    mgr, a, _ = setup_manager()
+    part = mgr.bounds.lookup("a")
+    rng = np.random.default_rng(0)
+    expected = {"gather": 0, "scatter": 0, "slice": 0, "update": 0}
+    for _ in range(6):
+        n = int(rng.integers(1, 9))
+        inside = rng.integers(part.base, part.end, size=n)
+        oob_mask = rng.random(n) < 0.4
+        idx = np.where(oob_mask, inside + part.size, inside)
+        start = int(rng.choice([part.base + 1, part.end + 7]))
+        for k, v in _expected(part, idx, start).items():
+            expected[k] += v
+        _launch_mixed(mgr, a, idx, start)
+    got = mgr.violog.counts("a")
+    assert got == expected
+    assert mgr.violog.total("a") == sum(expected.values())
+
+
+def test_zero_false_positives_under_safe_traffic():
+    """In-bounds traffic (what BITWISE would pass through untouched) must
+    log nothing — detection has no noise floor."""
+    mgr, a, b = setup_manager()
+    for client in (a, b):
+        part = mgr.bounds.lookup(client.tenant_id)
+        rng = np.random.default_rng(1)
+        for _ in range(4):
+            idx = rng.integers(part.base, part.end, size=8)
+            _launch_mixed(mgr, client, idx, part.base + 2)
+    snap = mgr.violog.snapshot()
+    assert (snap == 0).all()
+    assert mgr.quarantine.state_of("a").admissible
+    assert mgr.quarantine.state_of("b").admissible
+
+
+def test_attribution_lands_on_the_offending_tenant_only():
+    mgr, a, b = setup_manager()
+    pa, pb = mgr.bounds.lookup("a"), mgr.bounds.lookup("b")
+    # a attacks b's range; b stays in bounds — same fused drain
+    _launch_mixed(mgr, a, np.arange(pb.base, pb.base + 8), pa.base)
+    _launch_mixed(mgr, b, np.arange(pb.base, pb.base + 8), pb.base)
+    snap = mgr.violog.snapshot()
+    assert mgr.violog.counts("a", snap=snap)["gather"] == 8
+    assert mgr.violog.counts("a", snap=snap)["scatter"] == 8
+    assert mgr.violog.total("b", snap=snap) == 0
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=8),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_counts_match_injected_oob_property(oob_mask, start_oob):
+    mgr, a, _ = setup_manager()
+    part = mgr.bounds.lookup("a")
+    idx = np.array([part.end + 3 if bad else part.base + j
+                    for j, bad in enumerate(oob_mask)], np.int32)
+    start = part.end + 1 if start_oob else part.base
+    _launch_mixed(mgr, a, idx, start)
+    assert mgr.violog.counts("a") == _expected(part, idx, start)
+
+
+# ---------------------------------------------------------------------------
+# Log row lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_row_recycling_and_reset():
+    log = ViolationLog(capacity=2)
+    r0 = log.assign("a")
+    assert log.assign("a") == r0            # idempotent
+    log.add("a", np.array([1, 2, 3, 4], np.int32))
+    assert log.total("a") == 10
+    log.reset("a")
+    assert log.total("a") == 0
+    log.add("a", np.array([5, 0, 0, 0], np.int32))
+    log.release("a")
+    r1 = log.assign("b")                    # recycled row arrives zeroed
+    assert r1 == r0 or log.assign("c") == r0
+    snap = log.snapshot()
+    assert (snap == 0).all()
+
+
+def test_capacity_exhaustion_fails_closed():
+    log = ViolationLog(capacity=1)
+    log.assign("a")
+    with pytest.raises(RuntimeError):
+        log.assign("b")
+    log.release("a")
+    log.assign("b")                         # freed row is reusable
+
+
+def test_duplicate_registration_cannot_reset_counters():
+    """A failed duplicate register_tenant must not touch the live tenant's
+    log row or lifecycle record — otherwise a rogue tenant could reset its
+    own violation counters by re-registering its id."""
+    mgr, a, _ = setup_manager()
+    part = mgr.bounds.lookup("a")
+    _launch_mixed(mgr, a, np.full(4, part.end + 1, np.int32), part.base)
+    before = mgr.violog.total("a")
+    assert before == 8                     # 4 gather + 4 scatter
+    with pytest.raises(ValueError):
+        mgr.register_tenant("a", 64)       # duplicate partition
+    assert mgr.violog.row_of("a") is not None
+    assert mgr.violog.total("a") == before
+    assert mgr.quarantine.state_of("a") is not None
+
+
+def test_register_beyond_log_capacity_leaks_nothing():
+    """A capacity failure during register_tenant must not leak a partition
+    or poison the tenant id (the log row is taken before bounds.create)."""
+    mgr = GuardianManager(total_slots=512, max_tenants=2)
+    mgr.register_tenant("a", 64)
+    mgr.register_tenant("b", 64)
+    free = mgr.bounds.free_slots()
+    with pytest.raises(RuntimeError):
+        mgr.register_tenant("c", 64)
+    assert mgr.bounds.free_slots() == free   # no partition leaked
+    assert mgr.quarantine.state_of("c") is None   # no phantom record
+    assert "c" not in mgr.violation_report()["tenants"]
+    mgr.remove_tenant("a")
+    c = mgr.register_tenant("c", 64)         # id usable once capacity frees
+    assert c is mgr._clients["c"]
+
+
+def test_dirty_flag_gates_polling():
+    """BITWISE traffic never marks the log dirty — the quarantine poll is
+    skipped entirely (no device sync on fenced-only drains)."""
+    mgr = GuardianManager(total_slots=TOTAL, policy=FencePolicy.BITWISE)
+    a = mgr.register_tenant("a", 128)
+    mgr.register_tenant("b", 128)
+    a.module_load("mixed", make_mixed_kernel())
+    part = mgr.bounds.lookup("a")
+    assert not mgr.violog.dirty
+    _launch_mixed(mgr, a, np.arange(part.base, part.base + 4), part.base)
+    assert not mgr.violog.dirty             # BITWISE contains, never logs
+    assert (mgr.violog.snapshot() == 0).all()
+
+
+def test_operator_reads_do_not_suppress_poll():
+    """violation_report()/snapshot() must not clear the dirty flag — an
+    operator inspecting the log between polls would otherwise defer
+    containment of an already-over-threshold tenant."""
+    mgr, a, _ = setup_manager(quarantine_poll_every=100)   # poll deferred
+    part = mgr.bounds.lookup("a")
+    _launch_mixed(mgr, a, np.full(4, part.end + 1, np.int32), part.base)
+    assert mgr.violog.dirty
+    mgr.violation_report()                   # operator look
+    assert mgr.violog.dirty                  # poll gate still armed
+    mgr.quarantine.poll()                    # only the poller consumes it
+    assert not mgr.violog.dirty
+
+
+def test_violation_kind_order_is_stable():
+    """Report columns are part of the operator contract."""
+    assert [k.name.lower() for k in ViolationKind] == [
+        "gather", "scatter", "slice", "update"]
