@@ -1,0 +1,182 @@
+"""CI perf-regression gate: compare a fresh ``benchmarks.run --quick``
+run against the committed ``results/bench.csv``.
+
+Fails (exit 1) when, over the row names both files share:
+
+* ``us_per_call`` regresses by more than ``--max-regression`` (default
+  25%), optionally after normalizing both files by a reference row
+  (``--normalize sched.roundrobin.2t``) so the gate measures *relative*
+  scheduler performance and survives CI-runner speed differences; or
+* a fused batch's ``mean_width`` (parsed from the ``derived`` column)
+  drops below the committed value — fusion regressions are correctness
+  of the batching path, not noise, so no tolerance beyond rounding.
+
+``--inject-slowdown F`` multiplies every fresh ``us_per_call`` by F —
+the self-test CI runs to prove the gate actually fires on a 2x slowdown.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --normalize sched.roundrobin.2t --out results/bench.fresh.csv
+
+Pure comparison logic (no jax import) — unit-tested in
+tests/test_bench_gate.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+#: mean_width differences below this are float formatting, not regressions
+WIDTH_TOL = 0.05
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, str]
+
+    @property
+    def mean_width(self) -> Optional[float]:
+        v = self.derived.get("mean_width")
+        return float(v) if v is not None else None
+
+
+def parse_rows(text: str) -> Dict[str, Row]:
+    """Parse ``name,us_per_call,derived`` CSV (derived = ';'-separated
+    ``k=v`` pairs).  ERROR rows are kept — comparing against them fails
+    loudly rather than silently shrinking the intersection."""
+    rows: Dict[str, Row] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        name, us = parts[0], float(parts[1])
+        derived: Dict[str, str] = {}
+        if len(parts) == 3:
+            for kv in parts[2].split(";"):
+                if "=" in kv:
+                    k, v = kv.split("=", 1)
+                    derived[k] = v
+        rows[name] = Row(name=name, us_per_call=us, derived=derived)
+    return rows
+
+
+def compare(baseline: Dict[str, Row], fresh: Dict[str, Row],
+            max_regression: float = 0.25,
+            normalize: Optional[str] = None) -> List[str]:
+    """Returns the list of gate failures (empty = pass)."""
+    failures: List[str] = []
+    common = sorted(set(baseline) & set(fresh))
+    if not common:
+        return [f"no common rows between baseline ({len(baseline)}) and "
+                f"fresh ({len(fresh)}) — the quick suite must emit names "
+                "present in the committed results/bench.csv"]
+
+    def scale(rows: Dict[str, Row]) -> float:
+        if normalize is None:
+            return 1.0
+        ref = rows.get(normalize)
+        if ref is None or ref.us_per_call <= 0:
+            failures.append(f"normalization row {normalize!r} missing or "
+                            "non-positive")
+            return 1.0
+        return ref.us_per_call
+
+    b_scale, f_scale = scale(baseline), scale(fresh)
+    for name in common:
+        b, f = baseline[name], fresh[name]
+        if name.endswith(".ERROR") or b.us_per_call <= 0:
+            failures.append(f"{name}: unusable baseline row")
+            continue
+        rel = (f.us_per_call / f_scale) / (b.us_per_call / b_scale)
+        if name != normalize and rel > 1.0 + max_regression:
+            failures.append(
+                f"{name}: us_per_call regressed {rel:.2f}x "
+                f"(baseline {b.us_per_call:.2f}us, fresh "
+                f"{f.us_per_call:.2f}us, limit {1 + max_regression:.2f}x"
+                + (f", normalized by {normalize}" if normalize else "")
+                + ")")
+        bw, fw = b.mean_width, f.mean_width
+        if bw is not None:
+            if fw is None:
+                failures.append(f"{name}: mean_width disappeared "
+                                f"(baseline {bw:.1f})")
+            elif fw < bw - WIDTH_TOL:
+                failures.append(f"{name}: mean_width dropped "
+                                f"{bw:.1f} -> {fw:.1f} (fusion regression)")
+    return failures
+
+
+def run_quick(out_path: str) -> str:
+    """Run the quick benchmark suite into ``out_path``; returns its CSV."""
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--out", out_path],
+        check=True, env=env)
+    with open(out_path) as f:
+        return f.read()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/bench.csv",
+                    help="committed baseline CSV")
+    ap.add_argument("--fresh", default=None,
+                    help="pre-computed fresh CSV (default: run "
+                         "`benchmarks.run --quick` now)")
+    ap.add_argument("--out", default="results/bench.fresh.csv",
+                    help="where the fresh quick run is written (uploaded "
+                         "as a CI artifact)")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional us_per_call regression")
+    ap.add_argument("--normalize", default=None,
+                    help="row name to normalize both files by (makes the "
+                         "gate robust to absolute runner speed)")
+    ap.add_argument("--inject-slowdown", type=float, default=None,
+                    help="multiply fresh us_per_call by this factor, "
+                         "sparing the --normalize reference row (gate "
+                         "self-test: simulates a scheduler hot-path "
+                         "regression; a uniform slowdown would be "
+                         "indistinguishable from a slow runner and is "
+                         "absorbed by normalization on purpose)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = parse_rows(f.read())
+    if args.fresh is not None:
+        with open(args.fresh) as f:
+            fresh = parse_rows(f.read())
+    else:
+        fresh = parse_rows(run_quick(args.out))
+    if args.inject_slowdown is not None:
+        for row in fresh.values():
+            if row.name != args.normalize:
+                row.us_per_call *= args.inject_slowdown
+
+    failures = compare(baseline, fresh,
+                       max_regression=args.max_regression,
+                       normalize=args.normalize)
+    common = len(set(baseline) & set(fresh))
+    if failures:
+        print(f"PERF GATE: FAIL ({len(failures)} finding(s) over "
+              f"{common} compared rows)")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"PERF GATE: PASS ({common} rows within "
+          f"{args.max_regression:.0%} of the committed baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

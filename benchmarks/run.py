@@ -2,15 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig6 table5
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI perf-gate set
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows; the full set
-is also written to results/bench.csv.
+is also written to results/bench.csv (override with ``--out``).
+
+``--quick`` runs the reduced scheduler matrix (fewer tenants/reps via
+``BENCH_QUICK=1``) that ``benchmarks.check_regression`` compares against
+the committed results/bench.csv in the CI ``perf-gate`` job — the row
+names intersect the full run's, the timings are just cheaper.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
-import sys
 import time
 from typing import List
 
@@ -38,9 +44,25 @@ SUITES = {
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
 }
 
+#: the suites a --quick run times (must emit rows whose names intersect
+#: the committed baseline so check_regression has something to compare)
+QUICK_SUITES = ["sched"]
+
 
 def main() -> None:
-    want = sys.argv[1:] or list(SUITES)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*",
+                    help=f"suites to run (default: all); known: "
+                         f"{list(SUITES)}")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI matrix (BENCH_QUICK=1, sched only)")
+    ap.add_argument("--out", default="results/bench.csv",
+                    help="CSV output path")
+    args = ap.parse_args()
+
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    want = args.suites or (QUICK_SUITES if args.quick else list(SUITES))
     rows: List[str] = []
     for key in want:
         if key not in SUITES:
@@ -56,11 +78,13 @@ def main() -> None:
             rows.append(f"{key}.ERROR,0,{type(e).__name__}:{e}")
             print(rows[-1])
         print(f"--- {key} done in {time.time() - t0:.1f}s")
-    os.makedirs("results", exist_ok=True)
-    with open("results/bench.csv", "w") as f:
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(rows) + "\n")
-    print(f"\n{len(rows)} rows -> results/bench.csv")
+    print(f"\n{len(rows)} rows -> {args.out}")
 
 
 if __name__ == "__main__":

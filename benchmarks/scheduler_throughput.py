@@ -7,11 +7,20 @@ one compiled binary for any tenant set).  This benchmark measures
 launches/sec of the fused drain vs the per-launch round-robin drain at
 2/4/8 simulated tenants, on whatever backend is present (CPU works).
 
+MODULO tenants are benchmarked too: fused MODULO rides the FenceTable's
+(T, 4) magic row table (traced reciprocal constants — one binary), while
+the round-robin drain pays the per-partition static specialization; the
+``sched.modulo.*`` rows gate that fusion path in CI.
+
+Set ``BENCH_QUICK=1`` (or run ``benchmarks.run --quick``) for the reduced
+matrix the CI perf gate uses: fewer tenants/reps, same row names.
+
     PYTHONPATH=src python -m benchmarks.scheduler_throughput
 """
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -22,8 +31,17 @@ import numpy as np
 from repro.core import FencePolicy, GuardianManager
 
 TOTAL_SLOTS = 1 << 18   # fixed device arena, carved among the tenants
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+# N_ROUNDS stays the same in quick mode: per-call cost amortizes the
+# drain sync over the round count, so changing it would skew the gate's
+# us_per_call comparison; quick saves time via fewer reps/tenants only.
 N_ROUNDS = 30           # launches per tenant per timed repetition
-REPS = 5
+REPS = 2 if QUICK else 5
+TENANTS = {
+    FencePolicy.BITWISE: (2, 4) if QUICK else (2, 4, 8),
+    FencePolicy.MODULO: (2, 4),
+}
 
 
 def _kernel(arena, ptr, n):
@@ -32,9 +50,9 @@ def _kernel(arena, ptr, n):
     return arena.at[idx].set(vals * 1.0001 + 1.0), None
 
 
-def _setup(n_tenants: int, batched: bool):
+def _setup(n_tenants: int, batched: bool, policy: FencePolicy):
     mgr = GuardianManager(total_slots=TOTAL_SLOTS,
-                          policy=FencePolicy.BITWISE,
+                          policy=policy,
                           batch_launches=batched)
     clients, ptrs = [], []
     for i in range(n_tenants):
@@ -60,9 +78,9 @@ def _drain_rate(mgr, clients, ptrs, rounds: int) -> float:
     return rounds * len(clients) / dt
 
 
-def main(out: List[str]):
-    for n_tenants in (2, 4, 8):
-        setups = {b: _setup(n_tenants, b) for b in (False, True)}
+def _bench_policy(policy: FencePolicy, prefix: str, out: List[str]) -> None:
+    for n_tenants in TENANTS[policy]:
+        setups = {b: _setup(n_tenants, b, policy) for b in (False, True)}
         for b, (mgr, clients, ptrs) in setups.items():
             _drain_rate(mgr, clients, ptrs, 4)          # warmup + compile
         samples = {False: [], True: []}
@@ -73,18 +91,24 @@ def main(out: List[str]):
         rates = {b: float(np.median(v)) for b, v in samples.items()}
         width = setups[True][0].scheduler.stats.summary()["mean_batch_width"]
         win = rates[True] / rates[False]
-        out.append(f"sched.roundrobin.{n_tenants}t,"
+        out.append(f"{prefix}.roundrobin.{n_tenants}t,"
                    f"{1e6 / rates[False]:.2f},"
                    f"launches_per_s={rates[False]:.0f}")
-        out.append(f"sched.batched.{n_tenants}t,"
+        out.append(f"{prefix}.batched.{n_tenants}t,"
                    f"{1e6 / rates[True]:.2f},"
                    f"launches_per_s={rates[True]:.0f}"
                    f";mean_width={width:.1f};speedup={win:.2f}x")
         for line in out[-2:]:
             print(line)
+
+
+def main(out: List[str]):
+    _bench_policy(FencePolicy.BITWISE, "sched", out)
+    _bench_policy(FencePolicy.MODULO, "sched.modulo", out)
     print("batched scheduler speedup vs round-robin drain "
           "(same kernels, same tenants; fused steps carry per-row "
-          "(base, mask) rows — one binary, no per-tenant recompiles)")
+          "(base, mask) rows — BITWISE — or (base, size, m, s) magic "
+          "rows — MODULO — one binary, no per-tenant recompiles)")
 
 
 if __name__ == "__main__":

@@ -24,19 +24,23 @@ from repro.core.fence import (
     FencePolicy,
     FenceTable,
     apply_fence,
+    apply_fence_mixed,
     fence_bitwise,
     fence_check,
     fence_modulo,
     fence_modulo_magic,
+    fence_modulo_magic_dyn,
     guarded_take,
     guarded_update,
     magic_constants,
+    magic_row,
     require_pow2_sizes,
 )
 from repro.core.scheduler import (
     BatchedLaunchScheduler,
     LaunchRequest,
     SchedulerStats,
+    round_robin_interleave,
 )
 from repro.core.interception import CallTrace, DevicePtr, GuardianClient
 from repro.core.manager import (
@@ -71,10 +75,12 @@ from repro.core.violations import (
 __all__ = [
     "Arena", "ArenaSpec", "make_flat_arena",
     "FenceParams", "FencePolicy", "FenceTable", "apply_fence",
-    "fence_bitwise", "fence_check", "fence_modulo", "fence_modulo_magic",
-    "guarded_take", "guarded_update", "magic_constants",
+    "apply_fence_mixed", "fence_bitwise", "fence_check", "fence_modulo",
+    "fence_modulo_magic", "fence_modulo_magic_dyn",
+    "guarded_take", "guarded_update", "magic_constants", "magic_row",
     "require_pow2_sizes",
     "BatchedLaunchScheduler", "LaunchRequest", "SchedulerStats",
+    "round_robin_interleave",
     "CallTrace", "DevicePtr", "GuardianClient",
     "GuardianManager", "GuardianViolation", "SharingMode",
     "BuddyAllocator", "OutOfArenaMemory", "Partition",

@@ -49,6 +49,20 @@ class FencePolicy(enum.Enum):
     MODULO = "modulo"      # address fencing, inline modulo
     CHECK = "check"        # address checking (detects OOB; debug / strict)
 
+    @property
+    def code(self) -> int:
+        """Stable int32 code for per-element policy columns in row-mixed
+        batches (see :func:`apply_fence_mixed`)."""
+        return _POLICY_CODE[self]
+
+
+_POLICY_CODE = {
+    FencePolicy.NONE: 0,
+    FencePolicy.BITWISE: 1,
+    FencePolicy.MODULO: 2,
+    FencePolicy.CHECK: 3,
+}
+
 
 # ---------------------------------------------------------------------------
 # Magic-number (reciprocal) unsigned division, n < 2**31.
@@ -81,6 +95,20 @@ def magic_constants(d: int) -> Tuple[int, int]:
     m //= d
     assert m < (1 << 32), (d, m)
     return m, s
+
+
+def magic_row(d: int) -> Tuple[int, int]:
+    """(m, s) for the *dynamic* magic row table.
+
+    Identical to :func:`magic_constants` except the degenerate ``d == 1``
+    divisor, whose shift (0) would underflow the traced ``s - 32``
+    hi-word shift.  The dynamic fence masks the remainder to zero for
+    size-1 rows (`fence_modulo_magic_dyn`), so the stored pair only needs
+    a shift >= 32; (0, 32) yields q = 0 and the mask does the rest.
+    """
+    if d == 1:
+        return 0, 32
+    return magic_constants(d)
 
 
 def _umul_hi32_and_shift(n: jax.Array, m: int, s: int) -> jax.Array:
@@ -120,6 +148,39 @@ def _umul_hi32_and_shift(n: jax.Array, m: int, s: int) -> jax.Array:
     return q.astype(jnp.int32)
 
 
+def _umul_hi32_and_shift_dyn(n: jax.Array, m, s) -> jax.Array:
+    """Traced-magic twin of :func:`_umul_hi32_and_shift`.
+
+    ``m``/``s`` arrive as *dynamic* operands — int32 scalars or arrays from
+    a magic row table (``m`` is the uint32 multiplier's bit pattern stored
+    in int32) — instead of Python constants, so one compiled binary serves
+    any tenant set.  Same 16-bit-limb carry chain, same exactness proof
+    (n < 2^31, m < 2^32).  ``s`` must be >= 32 (guaranteed by
+    :func:`magic_row` for every divisor).
+    """
+    n = jnp.asarray(n).astype(jnp.uint32)
+    m = jax.lax.bitcast_convert_type(jnp.asarray(m, jnp.int32), jnp.uint32)
+    n_lo = n & jnp.uint32(0xFFFF)
+    n_hi = n >> jnp.uint32(16)
+    m_lo = m & jnp.uint32(0xFFFF)
+    m_hi = m >> jnp.uint32(16)
+
+    ll = n_lo * m_lo
+    lh = n_lo * m_hi
+    hl = n_hi * m_lo
+    hh = n_hi * m_hi
+
+    mid1 = lh + (ll >> jnp.uint32(16))
+    mid_lo = (mid1 & jnp.uint32(0xFFFF)) + (hl & jnp.uint32(0xFFFF))
+    mid_hi = (mid1 >> jnp.uint32(16)) + (hl >> jnp.uint32(16)) + (
+        mid_lo >> jnp.uint32(16))
+    hi = hh + mid_hi
+
+    sh = (jnp.asarray(s, jnp.int32) - 32).astype(jnp.uint32)
+    q = hi >> sh
+    return q.astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class FenceParams:
     """The per-tenant scalar row passed to kernels (paper: "two extra kernel
@@ -128,12 +189,17 @@ class FenceParams:
     ``base``/``size`` may be Python ints (static — per-tenant specialized
     binary, which the paper rejects as unscalable) **or traced int32 scalars**
     (dynamic — one shared binary, bounds passed at launch time, the paper's
-    actual design).  MODULO's magic constants require a concrete size
-    (the shift amount is structural), so that mode compiles per-partition.
+    actual design).  MODULO historically required a concrete size (the
+    shift amount was structural, one binary per partition); with
+    ``magic_m``/``magic_s`` populated — int32 scalars or arrays carrying a
+    precomputed reciprocal row from a :class:`FenceTable` magic table —
+    MODULO too becomes a dynamic-operand mode and fuses like BITWISE.
     """
 
     base: Any
     size: Any
+    magic_m: Any = None    # uint32 multiplier bit-pattern (int32-stored)
+    magic_s: Any = None    # shift amount, >= 32 (see magic_row)
 
     def __post_init__(self):
         if isinstance(self.size, int) and self.size <= 0:
@@ -213,17 +279,40 @@ class FenceTable:
     recompiles).  Row ``r`` fences row ``r`` of the fused batch; a
     tenant-id *column* can gather per-element params for row-mixed batches
     (the serving engine's per-row guard).
+
+    ``magic`` is the optional per-row magic-constant table that lets
+    MODULO batches fuse too: ``(T, 4)`` int32 of ``(base, size, m, s)``
+    built from :func:`magic_row`.  Unlike the bitwise ``rows`` it supports
+    arbitrary (non-pow2) partition sizes — a magic-only table
+    (:meth:`modulo_from_bounds`) has ``rows is None``.
     """
 
-    rows: jax.Array            # (T, 2) int32: rows[r] = (base, mask)
+    rows: Optional[jax.Array] = None   # (T, 2) int32: rows[r] = (base, mask)
+    magic: Optional[jax.Array] = None  # (T, 4) int32: (base, size, m, s)
+
+    def __post_init__(self):
+        if self.rows is None and self.magic is None:
+            raise ValueError("FenceTable needs bitwise rows, a magic "
+                             "table, or both")
+
+    @staticmethod
+    def _magic_arr(bounds: Sequence[Tuple[int, int]]) -> jax.Array:
+        arr = np.zeros((len(bounds), 4), np.uint32)
+        for r, (base, size) in enumerate(bounds):
+            m, s = magic_row(size)
+            arr[r] = (base, size, m, s)
+        return jnp.asarray(arr.view(np.int32))
 
     @classmethod
-    def from_partitions(cls, parts: Sequence[Partition]) -> "FenceTable":
+    def from_partitions(cls, parts: Sequence[Partition],
+                        with_magic: bool = False) -> "FenceTable":
         if not parts:
             raise ValueError("FenceTable needs at least one partition")
         require_pow2_sizes([p.size for p in parts])
         arr = np.array([[p.base, p.mask] for p in parts], dtype=np.int32)
-        return cls(rows=jnp.asarray(arr))
+        magic = cls._magic_arr([(p.base, p.size) for p in parts]) \
+            if with_magic else None
+        return cls(rows=jnp.asarray(arr), magic=magic)
 
     @classmethod
     def from_bounds(cls, base, size) -> "FenceTable":
@@ -234,25 +323,62 @@ class FenceTable:
         arr = np.stack([base, (size - 1).astype(np.int32)], axis=1)
         return cls(rows=jnp.asarray(arr.astype(np.int32)))
 
+    @classmethod
+    def modulo_from_bounds(cls, base, size) -> "FenceTable":
+        """Magic-only table for arbitrary (incl. non-pow2) partition sizes.
+
+        No bitwise rows are built — a non-pow2 ``size - 1`` is not a valid
+        wrap mask — so the table fences through MODULO/CHECK only.
+        """
+        base = np.asarray(base, np.int64).reshape(-1)
+        size = np.asarray(size, np.int64).reshape(-1)
+        if (size <= 0).any():
+            raise ValueError("partition sizes must be positive")
+        return cls(magic=cls._magic_arr(list(zip(base.tolist(),
+                                                 size.tolist()))))
+
     def __len__(self) -> int:
-        return int(self.rows.shape[0])
+        arr = self.rows if self.rows is not None else self.magic
+        return int(arr.shape[0])
 
     def row_params(self, row) -> FenceParams:
         """Traced FenceParams for one table row (fused-step row ``r``)."""
+        if self.rows is None:
+            return self.magic_row_params(row)
         return FenceParams(base=self.rows[row, 0],
                            size=self.rows[row, 1] + 1)
+
+    def magic_row_params(self, row) -> FenceParams:
+        """Traced magic-carrying FenceParams for one magic-table row."""
+        if self.magic is None:
+            raise ValueError("table was built without a magic row table")
+        return FenceParams(base=self.magic[row, 0], size=self.magic[row, 1],
+                           magic_m=self.magic[row, 2],
+                           magic_s=self.magic[row, 3])
 
     def gather(self, tenant_col: jax.Array) -> FenceParams:
         """Per-element FenceParams for a tenant-id column.
 
         ``tenant_col[i]`` selects the table row fencing element ``i``; the
         returned params hold ``(N,)`` base/size arrays that broadcast
-        elementwise through the fences (batched serving, §4.2.4).
+        elementwise through the fences (batched serving, §4.2.4).  When the
+        table carries magic rows the params also carry per-element magic
+        columns, so MODULO (and row-mixed) policies fence dynamically.
         """
         col = jnp.asarray(tenant_col, jnp.int32)
-        base = jnp.take(self.rows[:, 0], col, axis=0)
-        mask = jnp.take(self.rows[:, 1], col, axis=0)
-        return FenceParams(base=base, size=mask + 1)
+        if self.rows is not None:
+            base = jnp.take(self.rows[:, 0], col, axis=0)
+            mask = jnp.take(self.rows[:, 1], col, axis=0)
+            base, size = base, mask + 1
+        else:
+            base = jnp.take(self.magic[:, 0], col, axis=0)
+            size = jnp.take(self.magic[:, 1], col, axis=0)
+        if self.magic is None:
+            return FenceParams(base=base, size=size)
+        return FenceParams(
+            base=base, size=size,
+            magic_m=jnp.take(self.magic[:, 2], col, axis=0),
+            magic_s=jnp.take(self.magic[:, 3], col, axis=0))
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +432,66 @@ def fence_modulo_magic(idx: jax.Array, base, size, m: int, s: int) -> jax.Array:
     return jnp.int32(base) + rem
 
 
+def fence_modulo_magic_dyn(idx: jax.Array, base, size, m, s) -> jax.Array:
+    """Reciprocal modulo with *traced* magic constants — the fused-batch
+    form of :func:`fence_modulo_magic`.
+
+    ``(base, size, m, s)`` are dynamic operands (one magic row of a
+    :class:`FenceTable`), so a single compiled binary fences any tenant
+    set — the missing piece that historically kept MODULO launches out of
+    fused device steps.  Bit-identical to the static form for every
+    divisor (the division is exact either way); size-1 rows are handled by
+    masking the remainder to zero (see :func:`magic_row`).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    base = jnp.asarray(base, jnp.int32)
+    size = jnp.asarray(size, jnp.int32)
+    off = jnp.bitwise_and(idx - base, jnp.int32(0x7FFFFFFF))
+    q = _umul_hi32_and_shift_dyn(off, m, s)
+    rem = off - q * size
+    rem = jnp.where(size == 1, jnp.int32(0), rem)
+    return base + rem
+
+
+def apply_fence_mixed(
+    codes: jax.Array,
+    idx: jax.Array,
+    params: FenceParams,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-element policy dispatch for row-mixed batches (serving plane).
+
+    ``codes[i]`` is the :attr:`FencePolicy.code` fencing element ``i`` —
+    gathered through the same tenant-id column as ``params`` — so one
+    batched step can mix BITWISE, MODULO and CHECK tenants.  Requires
+    ``params`` built from a magic-carrying table (``magic_m`` set) because
+    the MODULO branch is compiled in unconditionally; BITWISE masks are
+    only correct because partitions are pow2 by construction (buddy
+    invariant I1, validated when the table was staged).
+
+    Returns ``(fenced, ok)`` where ``ok`` is True everywhere except
+    CHECK-policy elements that were out of bounds (the serving engine
+    folds it into the ViolationLog).
+    """
+    if params.magic_m is None:
+        raise ValueError(
+            "apply_fence_mixed needs magic-carrying FenceParams (build the "
+            "FenceTable with with_magic=True)")
+    idx = jnp.asarray(idx, jnp.int32)
+    codes = jnp.asarray(codes, jnp.int32)
+    bitwise = fence_bitwise(idx, params.base, params.size - 1)
+    modulo = fence_modulo_magic_dyn(idx, params.base, params.size,
+                                    params.magic_m, params.magic_s)
+    checked, ok_chk = fence_check(idx, params.base, params.size)
+    fenced = jnp.select(
+        [codes == FencePolicy.BITWISE.code,
+         codes == FencePolicy.MODULO.code,
+         codes == FencePolicy.CHECK.code],
+        [bitwise, modulo, checked],
+        idx)                                  # NONE: native passthrough
+    ok = jnp.where(codes == FencePolicy.CHECK.code, ok_chk, True)
+    return fenced, ok
+
+
 def fence_check(idx: jax.Array, base, size) -> Tuple[jax.Array, jax.Array]:
     """Address checking: returns (safe_idx, ok).
 
@@ -337,6 +523,10 @@ def apply_fence(
     if policy is FencePolicy.BITWISE:
         return fence_bitwise(idx, params.base, params.mask), None
     if policy is FencePolicy.MODULO:
+        if params.magic_m is not None:
+            return fence_modulo_magic_dyn(
+                idx, params.base, params.size,
+                params.magic_m, params.magic_s), None
         m, s = params.magic
         return fence_modulo_magic(idx, params.base, params.size, m, s), None
     if policy is FencePolicy.CHECK:

@@ -36,11 +36,18 @@ Responsibilities (paper section in parentheses):
   the partition and purges the tenant's compiled symbol-cache entries.
   ``violation_report()`` is the operator surface.
 
-Bounds are passed to kernels as **dynamic scalars** for BITWISE/CHECK (one
-shared binary for all tenants — the paper's two-extra-parameters design) and
-as static constants for MODULO (the magic-shift is structural; the paper
-likewise notes per-partition specialization does not scale, so MODULO pays a
-per-partition compile).
+Bounds are passed to kernels as **dynamic scalars** for every policy (one
+shared binary for all tenants — the paper's two-extra-parameters design):
+BITWISE/CHECK carry ``(base, mask|size)``, fused MODULO carries a four-
+scalar magic row ``(base, size, m, s)`` so the reciprocal division runs
+with traced constants.  Only the *per-launch* MODULO path keeps the static
+per-partition specialization (cheapest when a batch is width 1 anyway).
+
+The serving engine (:mod:`repro.launch.serve`) is a manager client too: its
+prefill/decode steps are *trusted kernels* — internally fenced multi-row
+programs whose per-row bounds come from :meth:`GuardianManager.fence_table`
+— enqueued and drained through the same scheduler as raw tenant launches
+(one dispatch layer for every workload class).
 """
 
 from __future__ import annotations
@@ -56,7 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import Arena, ArenaSpec, make_flat_arena
-from repro.core.fence import FenceParams, FencePolicy, require_pow2_sizes
+from repro.core.fence import FenceParams, FencePolicy, FenceTable, \
+    require_pow2_sizes
 from repro.core.interception import DevicePtr, GuardianClient
 from repro.core.partition import (
     IntraPartitionAllocator,
@@ -111,10 +119,16 @@ class _KernelEntry:
     native: Callable                  # raw, no fence
     fenced_dyn: Callable              # dynamic (base, mask) operands
     checked_dyn: Callable             # CHECK mode, dynamic bounds
+    modulo_dyn: Optional[Callable] = None   # dynamic (base,size,m,s) magic
     modulo_static: Dict[Tuple[int, int], Callable] = dataclasses.field(
         default_factory=dict)         # (base,size) -> callable
     jit_cache: Dict[Tuple, Callable] = dataclasses.field(
         default_factory=dict)         # (mode, static_positions) -> jitted
+    #: framework-plane kernels (serving-engine steps): already fenced
+    #: internally via a GuardSpec built from the manager's fence table,
+    #: so the sandboxer is skipped and the launch executes eagerly —
+    #: never fused, never specialized per policy.
+    trusted: bool = False
 
 
 def _specialized_jit(entry: _KernelEntry, mode: str, fn: Callable,
@@ -182,6 +196,16 @@ class GuardianManager:
         # partition scalars pre-staged on device (the "augment" fast path:
         # the two extra parameters are reused, not re-uploaded per launch)
         self._part_scalars: Dict[str, Tuple[Any, Any, Any]] = {}
+        # per-tenant fence-policy overrides (None -> manager default); lets
+        # one arena mix e.g. MODULO and CHECK tenants — each policy group
+        # fuses separately (the policy is part of the batch signature)
+        self._tenant_policy: Dict[str, Optional[FencePolicy]] = {}
+        # all-tenant fence table for the serving plane (one (T,2) bitwise +
+        # (T,4) magic row staging, rebuilt only when the partition set
+        # changes — the engine-side twin of the scheduler's batch tables)
+        self._fence_table: Optional[FenceTable] = None
+        self._fence_table_key: Tuple = ()
+        self._fence_table_row: Dict[str, int] = {}
 
         self._queues: "collections.OrderedDict[str, collections.deque]" = (
             collections.OrderedDict())
@@ -197,14 +221,27 @@ class GuardianManager:
     # ------------------------------------------------------------------ #
     # Tenant lifecycle                                                   #
     # ------------------------------------------------------------------ #
-    def register_tenant(self, tenant_id: str,
-                        requested_slots: int) -> GuardianClient:
+    def register_tenant(self, tenant_id: str, requested_slots: int,
+                        policy: Optional[FencePolicy] = None
+                        ) -> GuardianClient:
         """Tenants declare memory needs at init (§4.2.1: "normal in cloud
         environments, where users buy instances with specific resources").
+
+        ``policy`` overrides the manager default for this tenant's
+        launches (e.g. a CHECK canary beside MODULO production tenants);
+        the standalone fast path still applies when eligible.  NONE is
+        refused: an unfenced per-tenant override would bypass isolation
+        against co-tenants (the native fast path is granted automatically
+        — and revoked at drain time — by ``standalone_fast_path``).
 
         An EVICTED tenant id is refused until explicitly readmitted
         (``manager.quarantine.readmit``) — eviction must survive a
         re-registration attempt."""
+        if policy is FencePolicy.NONE:
+            raise ValueError(
+                "per-tenant policy NONE would run unfenced beside "
+                "co-tenants; the standalone fast path is automatic "
+                "(standalone_fast_path=True), never a grantable override")
         # log row before partition: a capacity failure here must not leak
         # an allocated partition under an id that can never register again.
         # Roll back only state THIS call created — a failed duplicate
@@ -224,6 +261,7 @@ class GuardianManager:
             raise
         self._suballoc[tenant_id] = IntraPartitionAllocator(part)
         self._queues[tenant_id] = collections.deque()
+        self._tenant_policy[tenant_id] = policy
         client = GuardianClient(self, tenant_id)
         self._clients[tenant_id] = client
         return client
@@ -261,6 +299,7 @@ class GuardianManager:
         self._queues.pop(tenant_id, None)
         self._clients.pop(tenant_id, None)
         self._part_scalars.pop(tenant_id, None)
+        self._tenant_policy.pop(tenant_id, None)
 
     def _purge_symbol_caches(self, part: Partition) -> None:
         """Evict per-tenant compiled state from the jit/symbol caches.
@@ -307,6 +346,33 @@ class GuardianManager:
         part = self.bounds.lookup(tenant_id)
         return FenceParams.from_partition(part)
 
+    def policy_of(self, tenant_id: str) -> FencePolicy:
+        """The tenant's configured fence policy (override or default) —
+        before standalone fast-path resolution."""
+        return self._tenant_policy.get(tenant_id) or self.policy
+
+    def fence_table(self) -> Tuple[FenceTable, Dict[str, int]]:
+        """Stacked fence rows for every registered tenant, magic table
+        included — the serving plane's per-row guard source (§4.2.4).
+
+        Rebuilt only when the partition set changes (the key includes the
+        bounds: a tenant destroyed and re-registered under the same name
+        may land on a different partition).  Returns ``(table, row_of)``
+        where ``row_of[tenant] -> table row`` feeds tenant-id columns for
+        :meth:`FenceTable.gather`.  Pow2 sizes are validated on the host
+        before staging — a traced FenceParams.mask cannot
+        (fence.require_pow2_sizes contract).
+        """
+        ids = tuple(sorted(self.bounds.tenants()))
+        parts = [self.bounds.lookup(t) for t in ids]
+        key = tuple((t, p.base, p.size) for t, p in zip(ids, parts))
+        if self._fence_table is None or self._fence_table_key != key:
+            self._fence_table = FenceTable.from_partitions(
+                parts, with_magic=True)
+            self._fence_table_key = key
+            self._fence_table_row = {t: i for i, t in enumerate(ids)}
+        return self._fence_table, self._fence_table_row
+
     def _scalars_for(self, tenant_id: str, part: Partition):
         """Device-staged (base, mask, size) int32 scalars per tenant.
 
@@ -324,11 +390,13 @@ class GuardianManager:
     def standalone(self) -> bool:
         return len(self.bounds) <= 1
 
-    def _effective_policy(self) -> FencePolicy:
+    def _effective_policy(self, tenant_id: Optional[str] = None
+                          ) -> FencePolicy:
+        policy = self._tenant_policy.get(tenant_id) or self.policy
         if (self.standalone and self.standalone_fast_path
-                and self.policy is not FencePolicy.CHECK):
+                and policy is not FencePolicy.CHECK):
             return FencePolicy.NONE  # §4.2.3 native fast path
-        return self.policy
+        return policy
 
     # ------------------------------------------------------------------ #
     # Memory management (§4.2.1, §4.2.2)                                 #
@@ -416,6 +484,8 @@ class GuardianManager:
                             policy=FencePolicy.BITWISE)
         checked = sandbox(fn, arena_argnums=arena_argnums,
                           policy=FencePolicy.CHECK, count_violations=True)
+        modulo_sb = sandbox(fn, arena_argnums=arena_argnums,
+                            policy=FencePolicy.MODULO)
 
         def fenced_entry(arena, base, mask, *args):
             # the two extra kernel parameters of Listing 1
@@ -427,12 +497,43 @@ class GuardianManager:
             fp = FenceParams(base=base, size=size)
             return checked(fp, arena, *args)   # (out, ok, counts)
 
+        def modulo_entry_dyn(arena, base, size, m, s, *args):
+            # one magic row of the FenceTable: the four extra parameters
+            # that make MODULO a dynamic (fusable) mode
+            fp = FenceParams(base=base, size=size, magic_m=m, magic_s=s)
+            out, ok = modulo_sb(fp, arena, *args)
+            return out
+
         entry = _KernelEntry(
             name=name, fn=fn, arena_argnums=arena_argnums,
             native=fn,
             fenced_dyn=fenced_entry,
             checked_dyn=checked_entry,
+            modulo_dyn=modulo_entry_dyn,
         )
+        self.pointer_to_symbol[name] = entry
+
+    def register_trusted_kernel(self, name: str, fn: Callable,
+                                arena_argnums: Sequence[int] = (0,)) -> None:
+        """Register a *framework-plane* kernel — an engine step that is
+        already fenced internally (per-row GuardSpec built from this
+        manager's :meth:`fence_table`).
+
+        The jaxpr sandboxer is skipped and the launch executes eagerly and
+        unjitted through the per-launch path: the step is itself a fused
+        multi-row program whose rows the engine fences, so wrapping it in
+        the scheduler's row fencing would double-fence.  Trusted kernels
+        still ride the queues and the scheduler drain — ordering,
+        quarantine drops and launch telemetry are shared — they are just
+        never batched with tenant kernels.  Only engine code may register
+        trusted kernels; tenant-supplied callables go through
+        :meth:`register_kernel` (fail-closed sandboxing).
+        """
+        if name in self.pointer_to_symbol:
+            return
+        entry = _KernelEntry(
+            name=name, fn=fn, arena_argnums=tuple(arena_argnums),
+            native=fn, fenced_dyn=fn, checked_dyn=fn, trusted=True)
         self.pointer_to_symbol[name] = entry
 
     def _modulo_exec(self, entry: _KernelEntry, part: Partition) -> Callable:
@@ -467,21 +568,38 @@ class GuardianManager:
 
         ptr_args = tuple(p.addr_device for p in ptrs)
         req = LaunchRequest(tenant_id=tenant_id, name=name,
-                            policy=self._effective_policy(), entry=entry,
-                            part=part, call_args=(*ptr_args, *args))
+                            policy=self._effective_policy(tenant_id),
+                            entry=entry, part=part,
+                            call_args=(*ptr_args, *args))
         if enqueue or self.mode is SharingMode.SPATIAL:
             self._enqueue(tenant_id, "launch", (req,))
-            return None
-        return self._execute_request(req)
+            # the request doubles as the result handle: req.result holds
+            # the kernel output once a drain dispatches it
+            return req
+        self._execute_request(req)
+        return req.result
 
     def _execute_request(self, req: LaunchRequest) -> Any:
         """Per-launch (unbatched) dispatch of one augmented request —
-        the standalone fast path, TIME_SHARE, batch_launches=False, MODULO,
-        and width-1 NONE/BITWISE scheduler batches land here.  CHECK on the
-        scheduler path never does: BatchedLaunchScheduler diverts every
-        CHECK batch (any width) to its contain-and-log commit path; the
-        raising CHECK semantics below are the per-launch paths' only."""
+        the standalone fast path, TIME_SHARE, batch_launches=False, and
+        width-1 scheduler batches land here (MODULO keeps its static
+        per-partition specialization on this path; fused MODULO rides the
+        scheduler's magic-row table).  CHECK on the scheduler path never
+        does: BatchedLaunchScheduler diverts every CHECK batch (any width)
+        to its contain-and-log commit path; the raising CHECK semantics
+        below are the per-launch paths' only."""
         entry, part, policy = req.entry, req.part, req.policy
+
+        if entry.trusted:
+            # framework step: internally fenced, executes eagerly (no jit,
+            # no augmentation) — see register_trusted_kernel
+            t1 = time.perf_counter_ns()
+            new_arena, out = entry.fn(self.arena.buf, *req.call_args)
+            self.arena.buf = new_arena
+            self.launch_stats.dispatch_ns.append(
+                time.perf_counter_ns() - t1)
+            req.result = out
+            return out
 
         # -- augment params (Table 5 "Augment kernel params") ------------
         t1 = time.perf_counter_ns()
@@ -526,6 +644,7 @@ class GuardianManager:
         else:
             new_arena, out = result
         self.arena.buf = new_arena
+        req.result = out
         return out
 
     # ------------------------------------------------------------------ #
@@ -538,8 +657,10 @@ class GuardianManager:
         if op.kind == "launch":
             (req,) = op.payload
             # the tenant set may have changed since enqueue — a stale NONE
-            # (native) policy must not run against a now-shared arena
-            req.repolicy(self._effective_policy())
+            # (native) policy must not run against a now-shared arena.
+            # (Fusability never needs forcing here: BITWISE/CHECK/MODULO
+            # all fuse natively now.)
+            req.repolicy(self._effective_policy(req.tenant_id))
             if self.batch_launches and self.mode is SharingMode.SPATIAL:
                 # selection: the fused execution happens at the cycle-end
                 # scheduler flush, preserving round-robin selection order

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -230,6 +230,13 @@ class QuarantineManager:
         self.poll_every = poll_every
         self._cycles_since_poll = 0
         self.events: List[str] = []   # human-readable transition trail
+        # transition observers: (tenant_id, new_state) callbacks fired on
+        # every quarantine/evict/readmit — the hook that propagates
+        # manager-side containment into the serving plane (the engine
+        # drops the tenant's pending requests and scrubs its pool slots).
+        # EVICTED fires *before* partition reclamation so listeners can
+        # still read the tenant's bounds.
+        self._listeners: List[Callable[[str, TenantState], None]] = []
 
     # -- registration hooks (called by the manager) --------------------- #
     def admit(self, tenant_id: str) -> None:
@@ -285,12 +292,27 @@ class QuarantineManager:
     def _fmt(counts: Dict[str, int]) -> str:
         return " ".join(f"{k}={v}" for k, v in counts.items() if v)
 
+    # -- transition observers -------------------------------------------- #
+    def subscribe(self, callback: Callable[[str, TenantState], None]) -> None:
+        """Register a transition observer (serving engines, operators).
+
+        ``callback(tenant_id, new_state)`` fires after the state machine
+        transitions but — for EVICTED — *before* the partition is
+        reclaimed, so the listener can still resolve the tenant's bounds
+        (the serve engine scrubs its pool slots with them)."""
+        self._listeners.append(callback)
+
+    def _notify(self, tenant_id: str, state: TenantState) -> None:
+        for cb in self._listeners:
+            cb(tenant_id, state)
+
     # -- transitions with device-side actions ---------------------------- #
     def quarantine(self, tenant_id: str, reason: str = "") -> None:
         """QUARANTINED: drop queued ops, reject new calls; data survives."""
         self.machine.quarantine(tenant_id, reason=reason)
         self.manager._drop_tenant_ops(tenant_id)
         self.events.append(f"quarantine {tenant_id}: {reason}")
+        self._notify(tenant_id, TenantState.QUARANTINED)
 
     def evict(self, tenant_id: str, reason: str = "") -> None:
         """EVICTED: scrub + free the partition, purge compiled entries."""
@@ -298,6 +320,7 @@ class QuarantineManager:
         rec = self.machine.evict(tenant_id, reason=reason)
         if log.row_of(tenant_id) is not None:
             rec.final_counts = log.counts(tenant_id)
+        self._notify(tenant_id, TenantState.EVICTED)   # bounds still live
         self.manager._evict_tenant(tenant_id)
         self.events.append(f"evict {tenant_id}")
 
@@ -308,3 +331,4 @@ class QuarantineManager:
         self.machine.readmit(tenant_id)
         self.manager.violog.reset(tenant_id)
         self.events.append(f"readmit {tenant_id}")
+        self._notify(tenant_id, TenantState.READMITTED)

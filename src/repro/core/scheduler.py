@@ -32,12 +32,22 @@ into a single **fused device step**:
   detection is consumed asynchronously by the manager's
   :class:`~repro.core.quarantine.QuarantineManager` poll.
 
+* MODULO batches fuse through the FenceTable's **magic row table**: a
+  ``(T, 4)`` int32 table of per-row ``(base, size, m, s)`` reciprocal
+  constants (``fence.magic_row``), so the paper's cheapest arbitrary-size
+  fencing mode shares one compiled binary across tenant sets exactly like
+  BITWISE — the magic multiply-high runs with *traced* constants
+  (``fence_modulo_magic_dyn``), bit-identical to the per-partition static
+  specialization the per-launch path still uses.
+
 Non-fusable launches degrade gracefully to the per-launch path:
 
 * NONE      — standalone fast path (§4.2.3): a single tenant gets the
               native binary, no batching machinery on the hot path.
-* MODULO    — magic-shift constants are structural (per-partition
-              binaries), fusing would specialize per tenant set.
+* trusted   — framework-plane steps (the serving engine's prefill/decode)
+              are internally fenced multi-row launches already; they ride
+              the same drain for ordering/quarantine but execute eagerly
+              via the per-launch path.
 
 Fairness: requests are taken strictly in arrival order (the manager's
 round-robin cycle order).  A request that cannot join the open batch
@@ -89,6 +99,10 @@ class LaunchRequest:
     entry: Any                      # manager._KernelEntry
     part: Any                       # partition snapshot at augment time
     call_args: Tuple
+    #: launch output, set at dispatch (the enqueue-path return handle:
+    #: callers read it after the drain — how the serving engine gets its
+    #: step logits back through the shared scheduler)
+    result: Any = dataclasses.field(default=None, repr=False)
 
     _sig: Optional[Tuple] = dataclasses.field(default=None, repr=False)
 
@@ -100,7 +114,10 @@ class LaunchRequest:
 
     @property
     def fusable(self) -> bool:
-        return self.policy in (FencePolicy.BITWISE, FencePolicy.CHECK)
+        if getattr(self.entry, "trusted", False):
+            return False   # internally-fenced engine steps run standalone
+        return self.policy in (FencePolicy.BITWISE, FencePolicy.CHECK,
+                               FencePolicy.MODULO)
 
     def repolicy(self, policy: FencePolicy) -> None:
         """Re-resolve the fence policy at drain time.  The effective policy
@@ -143,6 +160,20 @@ class SchedulerStats:
         return self.batched_launches / self.fused_steps \
             if self.fused_steps else 0.0
 
+    @property
+    def launches_per_step(self) -> float:
+        """Mean launches per device dispatch over ALL steps (the batching
+        win the benchmark gates on).  A fresh scheduler has dispatched
+        nothing — report 0.0 rather than dividing by zero."""
+        return self.total_launches / self.device_steps \
+            if self.device_steps else 0.0
+
+    @property
+    def fused_fraction(self) -> float:
+        """Share of launches that rode in fused steps (0.0 when idle)."""
+        return self.batched_launches / self.total_launches \
+            if self.total_launches else 0.0
+
     def summary(self) -> Dict[str, float]:
         return {
             "total_launches": float(self.total_launches),
@@ -151,6 +182,8 @@ class SchedulerStats:
             "check_steps": float(self.check_steps),
             "mean_batch_width": self.mean_batch_width,
             "max_batch_width": float(self.max_batch_width),
+            "launches_per_step": self.launches_per_step,
+            "fused_fraction": self.fused_fraction,
         }
 
 
@@ -212,7 +245,7 @@ class BatchedLaunchScheduler:
         """Drop staged FenceTables referencing a dead partition's
         ``(base, mask)`` — called by the manager on partition reclamation
         (the scheduler owns its cache key format)."""
-        for key in [k for k in self._table_cache if bounds in k]:
+        for key in [k for k in self._table_cache if bounds in k[0]]:
             del self._table_cache[key]
 
     def flush(self) -> None:
@@ -246,6 +279,12 @@ class BatchedLaunchScheduler:
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:
         self.dispatch_log.append(tuple(r.tenant_id for r in batch))
+        if getattr(batch[0].entry, "trusted", False):
+            # internally-fenced engine step (always width 1): the per-launch
+            # path executes it eagerly, whatever its nominal policy
+            self.stats.single_steps += 1
+            self.manager._execute_request(batch[0])
+            return
         if batch[0].policy is FencePolicy.CHECK:
             # CHECK always takes the attributing commit path (any width):
             # a width-1 CHECK step must contain-and-log, not raise, so its
@@ -260,33 +299,41 @@ class BatchedLaunchScheduler:
         mgr = self.manager
         T = len(batch)
         head = batch[0]
+        modulo = head.policy is FencePolicy.MODULO
         key = (*head.signature, T)
         fn = self._fused_cache.get(key)
         if fn is None:
-            fn = self._build_fused(head.entry, head.signature[2], T)
+            fn = (self._build_fused_modulo if modulo else self._build_fused)(
+                head.entry, head.signature[2], T)
             self._fused_cache[key] = fn
 
-        table = self._staged_table(batch)
+        table = self._staged_table(batch, with_magic=modulo)
         flat_dyn: List[Any] = []
         for req in batch:
             flat_dyn.extend(a for a in req.call_args
                             if isinstance(a, (jax.Array, np.ndarray)))
 
         t0 = time.perf_counter_ns()
-        new_arena, _outs = fn(mgr.arena.buf, table.rows, *flat_dyn)
+        new_arena, outs = fn(mgr.arena.buf,
+                             table.magic if modulo else table.rows,
+                             *flat_dyn)
         mgr.arena.buf = new_arena
         mgr.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+        for req, out in zip(batch, outs):
+            req.result = out
 
         self._record_step(T)
 
-    def _staged_table(self, batch: List[LaunchRequest]) -> FenceTable:
-        rows_key = tuple((r.part.base, r.part.mask) for r in batch)
-        table = self._table_cache.get(rows_key)
+    def _staged_table(self, batch: List[LaunchRequest],
+                      with_magic: bool = False) -> FenceTable:
+        key = (tuple((r.part.base, r.part.mask) for r in batch), with_magic)
+        table = self._table_cache.get(key)
         if table is None:
             if len(self._table_cache) >= 512:
                 self._table_cache.clear()   # rebuild cost: one device put
-            table = FenceTable.from_partitions([r.part for r in batch])
-            self._table_cache[rows_key] = table
+            table = FenceTable.from_partitions([r.part for r in batch],
+                                               with_magic=with_magic)
+            self._table_cache[key] = table
         return table
 
     def _record_step(self, T: int) -> None:
@@ -325,12 +372,14 @@ class BatchedLaunchScheduler:
                             if isinstance(a, (jax.Array, np.ndarray)))
 
         t0 = time.perf_counter_ns()
-        new_arena, new_log, _ok_rows, _outs = fn(
+        new_arena, new_log, _ok_rows, outs = fn(
             mgr.arena.buf, mgr.violog.buf, table.rows, vrows, *flat_dyn)
         mgr.arena.buf = new_arena
         mgr.violog.buf = new_log
         mgr.violog.dirty = True
         mgr.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+        for req, out in zip(batch, outs):
+            req.result = out
 
         self.stats.check_steps += 1
         self._record_step(T)
@@ -401,3 +450,48 @@ class BatchedLaunchScheduler:
             return arena, tuple(outs)
 
         return jax.jit(fused)
+
+    def _build_fused_modulo(self, entry, arg_sig: Tuple, T: int) -> Callable:
+        """MODULO twin of :meth:`_build_fused`: rows come from the magic
+        row table — ``(base, size, m, s)`` per tenant — and the reciprocal
+        division runs with *traced* constants, so one binary serves any T
+        co-located tenants.  Bit-identical to the per-launch path's static
+        per-partition specialization (the division is exact either way;
+        property-tested in tests/test_scheduler.py)."""
+        n_dyn_per_row = sum(1 for kind, *_ in arg_sig if kind == "d")
+
+        def fused(arena, magic_rows, *flat_dyn):
+            outs = []
+            for r in range(T):
+                row_dyn = iter(
+                    flat_dyn[r * n_dyn_per_row:(r + 1) * n_dyn_per_row])
+                call = [next(row_dyn) if kind == "d" else spec[0]
+                        for kind, *spec in arg_sig]
+                arena, out = entry.modulo_dyn(
+                    arena, magic_rows[r, 0], magic_rows[r, 1],
+                    magic_rows[r, 2], magic_rows[r, 3], *call)
+                outs.append(out)
+            return arena, tuple(outs)
+
+        return jax.jit(fused)
+
+
+def round_robin_interleave(
+    by_tenant: Dict[str, List[Any]], limit: Optional[int] = None
+) -> List[Any]:
+    """Strict round-robin interleave across per-tenant FIFO queues — the
+    drain-cycle selection order of §4.2.4, factored out so the serving
+    engine's batch-row assignment and the manager's queue drain share one
+    fairness policy.  Tenants are visited in sorted-id order; each cycle
+    takes at most one item per tenant; ``limit`` caps the result.
+    """
+    queues = {t: list(q) for t, q in sorted(by_tenant.items()) if q}
+    order: List[Any] = []
+    while queues and (limit is None or len(order) < limit):
+        for t in sorted(queues):
+            if limit is not None and len(order) >= limit:
+                break
+            order.append(queues[t].pop(0))
+            if not queues[t]:
+                del queues[t]
+    return order

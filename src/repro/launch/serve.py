@@ -1,24 +1,38 @@
 """Multi-tenant serving engine — Guardian's spatial sharing applied to a
-shared LM server.
+shared LM server, **unified with the GuardianManager launch path**.
 
 One model, one KV pool, many mutually-untrusting tenants.  The pool's
-sequence-slot space is carved into contiguous pow2 partitions (buddy
-allocator) — one per tenant.  Every batched step carries **per-row fence
-parameters**: a :class:`~repro.core.fence.FenceTable` holds one
-``(base, mask)`` int32 row per tenant, and each prefill/decode step gathers
-the rows for its batch through a tenant-id column — row b of the batch
-belongs to tenant t(b), so the slot index of row b is fenced with t(b)'s
-(base, mask).  Even a corrupted scheduler
-or a forged slot id can only wrap inside the owning tenant's slots — the
-serving-plane equivalent of the paper's sandboxed kernels.
+sequence-slot space is carved into contiguous pow2 partitions by the
+engine's :class:`~repro.core.manager.GuardianManager` (the same buddy
+allocator, bounds table and quarantine lifecycle that fence raw kernel
+launches).  The engine owns **no fence table and no row-assignment
+policy of its own**:
 
-Fault containment (DESIGN.md §Fault-containment): the engine drives a
-:class:`~repro.core.quarantine.QuarantineStateMachine` — quarantined
-tenants' submissions are rejected, their pending requests re-route to
-co-tenants, and eviction scrubs + reclaims their pool partition.
+* every prefill/decode step is registered as a *trusted kernel* and
+  submitted as a :class:`~repro.core.scheduler.LaunchRequest`, enqueued
+  and drained by the shared :class:`BatchedLaunchScheduler` — serving
+  traffic and raw tenant launches ride one dispatch layer;
+* per-row fence params come from :meth:`GuardianManager.fence_table`
+  (bitwise rows + the MODULO magic row table), gathered through a
+  tenant-id column: batch row b belongs to tenant t(b), so the slot index
+  of row b is fenced with t(b)'s bounds.  Even a corrupted scheduler or a
+  forged slot id can only wrap inside the owning tenant's slots;
+* batch-row selection uses the scheduler's shared
+  :func:`~repro.core.scheduler.round_robin_interleave` fairness policy;
+* tenants may carry **per-tenant fence policies** (a CHECK canary beside
+  MODULO production tenants): the step gathers a per-row policy-code
+  column and dispatches per element (``fence.apply_fence_mixed``);
+* CHECK rows attribute: their ``ok`` predicates are collected per step
+  and folded into the manager's ViolationLog, so a tenant spraying
+  out-of-partition slot ids is quarantined by the same
+  :class:`~repro.core.quarantine.QuarantineManager` poll that polices raw
+  launches — and manager-side transitions propagate *back* into the
+  engine through the quarantine subscription (pending requests dropped,
+  pool slots scrubbed on eviction).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --reduced --tenants 3 --requests 6 --tokens 16
+        --reduced --tenants 3 --requests 6 --tokens 16 \
+        --policies modulo,check
 """
 
 from __future__ import annotations
@@ -26,18 +40,25 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ShapeConfig, get_config
-from repro.core.fence import FenceParams, FencePolicy, FenceTable
-from repro.core.partition import PartitionBoundsTable
-from repro.core.quarantine import QuarantineStateMachine
+from repro.configs import get_config
+from repro.core.fence import FenceParams, FencePolicy
+from repro.core.manager import GuardianManager
+from repro.core.quarantine import QuarantinePolicy, TenantState
+from repro.core.scheduler import round_robin_interleave
+from repro.core.violations import NUM_KINDS, ViolationKind
 from repro.models import get_model
 from repro.models.guard import GuardSpec
+
+#: The engine's own manager tenant: owns the scratch half of the pool where
+#: idle batch rows park (their fenced writes must never land in a tenant's
+#: slots) and is the tenant id under which step launches are enqueued.
+ENGINE_TENANT = "__scratch"
 
 
 @dataclasses.dataclass
@@ -51,11 +72,17 @@ class Request:
 
 
 class ServeEngine:
-    """Continuous-batching (fixed-slot) multi-tenant server."""
+    """Continuous-batching (fixed-slot) multi-tenant server.
+
+    A thin client of its :class:`GuardianManager`: request bookkeeping and
+    operand marshalling live here; partitioning, fencing rows, launch
+    scheduling and quarantine all live on the manager side.
+    """
 
     def __init__(self, cfg, *, max_batch: int = 8, max_len: int = 256,
                  policy: FencePolicy = FencePolicy.BITWISE,
-                 guard: bool = True, seed: int = 0):
+                 guard: bool = True, seed: int = 0,
+                 quarantine_policy: Optional[QuarantinePolicy] = None):
         self.cfg = cfg
         self.api = get_model(cfg)
         self.policy = policy
@@ -64,11 +91,8 @@ class ServeEngine:
         self.max_len = max_len
         self.params = self.api.init(jax.random.PRNGKey(seed))
         # pool = 2x the batch slots: the upper half is the engine's scratch
-        # partition where idle batch rows park (their fenced writes must
-        # never land in a tenant's slots).
-        def pow2(n):
-            return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
-        n_slots = 2 * pow2(max_batch)
+        # partition where idle batch rows park.
+        n_slots = 2 * _pow2(max_batch)
         if cfg.family == "ssm":
             self.cache = self.api.init_cache(max_batch, slots=n_slots)
         else:
@@ -76,23 +100,26 @@ class ServeEngine:
                                              dtype=jnp.float32,
                                              slots=n_slots)
         slots = self._pool_slots()
-        self.bounds = PartitionBoundsTable(slots)
-        self._scratch = self.bounds.create("__scratch", slots // 2)
-        # fault containment: lifecycle gate for the serving plane (the
-        # engine shares the state machine with the GuardianManager but
-        # drives transitions itself — violations here are scheduler-level,
-        # e.g. an upstream fraud signal or a manager-side quarantine event)
-        self.quarantine = QuarantineStateMachine()
+        # The manager owns the pool's partitioning and the launch path.
+        # standalone_fast_path=False: a guarded engine always fences, even
+        # with a single tenant (bit-identical generations solo vs shared).
+        self.manager = GuardianManager(
+            total_slots=slots, policy=policy,
+            standalone_fast_path=False,
+            quarantine_policy=quarantine_policy)
+        self._client = self.manager.register_tenant(ENGINE_TENANT,
+                                                    slots // 2)
+        self._scratch = self.manager.bounds.lookup(ENGINE_TENANT)
+        self.manager.quarantine.subscribe(self._on_transition)
+        self._register_step_kernels()
         self.rejected: List[int] = []     # rids dropped by quarantine
-        self._ftable: Optional[FenceTable] = None
-        self._ftable_key: Tuple = ()
-        self._ftable_row: Dict[str, int] = {}
-        self._tenant_of_slot: Dict[int, str] = {}
         self._requests: List[Request] = []
         self._rid = 0
-        self._row_slots = np.zeros((max_batch,), np.int32)
-        self._row_req: List[Optional[Request]] = [None] * max_batch
         self.decode_steps = 0
+        # evictions fired *during* run() scrub the stale self.cache; the
+        # live local cache is re-scrubbed at run()-end from this list
+        self._in_run = False
+        self._pending_scrubs: List[tuple] = []
 
     def _pool_slots(self) -> int:
         c = self.cache
@@ -102,44 +129,86 @@ class ServeEngine:
             return next(iter(c.pools.values())).shape[1]
         return c.kv.k.shape[1]
 
+    def _register_step_kernels(self) -> None:
+        """The engine's steps as trusted manager kernels: internally fenced
+        (per-row GuardSpec from the manager's fence table), executed
+        eagerly by the per-launch path, enqueued/drained like any launch.
+        The flat manager arena is threaded untouched — the serve pool
+        tensors ride in the operands and return through the result."""
+        api, params = self.api, self.params
+
+        def prefill_step(arena, cache, batch, guard):
+            return arena, api.prefill(params, cache, batch, guard=guard)
+
+        def decode_step(arena, cache, toks, guard):
+            return arena, api.decode(params, cache, toks, guard=guard)
+
+        self.manager.register_trusted_kernel("serve.prefill", prefill_step)
+        self.manager.register_trusted_kernel("serve.decode", decode_step)
+
     # ------------------------------------------------------------------ #
-    def register_tenant(self, name: str, slots: int):
-        new_record = self.quarantine.record_of(name) is None
-        self.quarantine.admit(name)      # refuses EVICTED ids
-        try:
-            return self.bounds.create(name, slots)
-        except Exception:
-            if new_record:               # no phantom ACTIVE record
-                self.quarantine.forget(name)
-            raise
+    # Tenant lifecycle (all state on the manager)                        #
+    # ------------------------------------------------------------------ #
+    @property
+    def bounds(self):
+        return self.manager.bounds
+
+    @property
+    def quarantine(self):
+        """The shared lifecycle driver (manager-owned)."""
+        return self.manager.quarantine
+
+    def register_tenant(self, name: str, slots: int,
+                        policy: Optional[FencePolicy] = None):
+        """Carve a pool partition for ``name``; returns the Partition.
+
+        ``policy`` optionally overrides the engine default for this
+        tenant's rows (per-row mixed fencing)."""
+        self.manager.register_tenant(name, slots, policy=policy)
+        return self.manager.bounds.lookup(name)
 
     def quarantine_tenant(self, name: str, reason: str = "") -> List[int]:
-        """Reject the tenant: pending requests are dropped (their batch
-        rows re-route to co-tenants on the next ``run``), new submissions
-        raise.  Returns the dropped request ids."""
-        self.quarantine.quarantine(name, reason=reason)
-        dropped = [r.rid for r in self._requests
-                   if r.tenant == name and not r.done]
-        self._requests = [r for r in self._requests
-                          if r.done or r.tenant != name]
-        self.rejected.extend(dropped)
-        return dropped
+        """Reject the tenant via the manager's quarantine (the subscription
+        drops its pending requests; new submissions raise).  Returns the
+        dropped request ids."""
+        before = len(self.rejected)
+        self.manager.quarantine.quarantine(name, reason=reason)
+        return self.rejected[before:]
 
     def evict_tenant(self, name: str) -> None:
         """Scrub the tenant's pool slots and return its partition to the
-        buddy allocator; the freed block serves the next registration."""
-        part = self.bounds.lookup(name)
-        self.quarantine.evict(name)
-        self.cache = _scrub_slots(self.cache, part.base, part.size)
-        self.bounds.destroy(name)
-        self._ftable = None              # bounds changed: rebuild on demand
+        buddy allocator (manager-side reclamation; the subscription scrubs
+        the serve pool while the bounds are still resolvable)."""
+        self.manager.quarantine.evict(name)
 
     def readmit_tenant(self, name: str) -> None:
-        self.quarantine.readmit(name)
+        self.manager.quarantine.readmit(name)
+
+    def _on_transition(self, tenant_id: str, state: TenantState) -> None:
+        """Manager-side quarantine events propagate into the serving plane
+        (including transitions the engine never initiated, e.g. a
+        ViolationLog threshold crossing from raw-launch traffic)."""
+        if tenant_id == ENGINE_TENANT:
+            return
+        if state is TenantState.EVICTED:
+            # fires before partition reclamation: bounds still resolvable
+            part = self.manager.bounds.lookup(tenant_id)
+            self.cache = _scrub_slots(self.cache, part.base, part.size)
+            if self._in_run:
+                # run() holds a newer local cache that will overwrite
+                # self.cache at run-end — it must be scrubbed too, or the
+                # evicted tenant's KV leaks into the reclaimed partition
+                self._pending_scrubs.append((part.base, part.size))
+        if not state.admissible:
+            dropped = [r.rid for r in self._requests
+                       if r.tenant == tenant_id and not r.done]
+            self._requests = [r for r in self._requests
+                              if r.done or r.tenant != tenant_id]
+            self.rejected.extend(dropped)
 
     def submit(self, tenant: str, prompt: np.ndarray) -> int:
-        self.quarantine.check_admission(tenant, "submit")
-        part = self.bounds.lookup(tenant)
+        self.manager.quarantine.check_admission(tenant, "submit")
+        part = self.manager.bounds.lookup(tenant)
         used = {r.slot for r in self._requests if not r.done
                 and r.tenant == tenant}
         free = [s for s in range(part.base, part.end) if s not in used]
@@ -153,70 +222,93 @@ class ServeEngine:
         return rid
 
     # ------------------------------------------------------------------ #
-    def _fence_table(self) -> Tuple[FenceTable, Dict[str, int]]:
-        """Stacked (T, 2) fence rows for all registered tenants (incl. the
-        scratch partition), rebuilt only when the tenant set changes.  The
-        table validates pow2 sizes on the host before staging — a traced
-        FenceParams.mask cannot (fence.require_pow2_sizes contract)."""
-        ids = tuple(sorted(self.bounds.tenants()))
-        parts = [self.bounds.lookup(t) for t in ids]
-        # key includes the bounds: a tenant destroyed and re-registered
-        # under the same name may get a different partition
-        key = tuple((t, p.base, p.size) for t, p in zip(ids, parts))
-        if self._ftable is None or self._ftable_key != key:
-            self._ftable = FenceTable.from_partitions(parts)
-            self._ftable_key = key
-            self._ftable_row = {t: i for i, t in enumerate(ids)}
-        return self._ftable, self._ftable_row
-
-    def _guard_for_rows(self, rows: List[Request]) -> Optional[GuardSpec]:
+    def _guard_for_rows(self, rows: List[Optional[Request]]
+                        ) -> Optional[GuardSpec]:
         if not self.guard_enabled:
             return None
-        table, row_of = self._fence_table()
+        table, row_of = self.manager.fence_table()
         # tenant-id column: batch row b -> fence-table row of its tenant
         # (idle rows park in the engine's scratch partition)
-        cols = np.full((self.max_batch,), row_of["__scratch"], np.int32)
+        cols = np.full((self.max_batch,), row_of[ENGINE_TENANT], np.int32)
+        pol = np.full((self.max_batch,), self.policy.code, np.int32)
         for i, r in enumerate(rows):
             if r is not None:
                 cols[i] = row_of[r.tenant]
+                pol[i] = self.manager.policy_of(r.tenant).code
         slot_params = table.gather(jnp.asarray(cols))
+        # row-mixed policies only when some tenant actually diverges from
+        # the engine default (the homogeneous path stays bit-identical)
+        mixed = bool((pol != self.policy.code).any())
+        row_policy = jnp.asarray(pol) if mixed else None
         pages = self.cache.kv.pages_per_slot if hasattr(self.cache, "kv") \
             else (self.cache.pages_per_slot if hasattr(self.cache, "k")
                   else 1)
-
-        def pow2(n):
-            return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
         return GuardSpec(
             policy=self.policy,
-            vocab=FenceParams(base=0, size=pow2(self.cfg.vocab)),
+            vocab=FenceParams(base=0, size=_pow2(self.cfg.vocab)),
             kv=slot_params,
             state=slot_params,
-            expert=(FenceParams(base=0, size=pow2(
+            expert=(FenceParams(base=0, size=_pow2(
                 self.cfg.moe.num_experts)) if self.cfg.moe else None),
-            page=FenceParams(base=0, size=pow2(max(pages, 1))),
+            page=FenceParams(base=0, size=_pow2(max(pages, 1))),
+            row_policy=row_policy,
         )
 
-    def _assign_rows(self) -> List[Request]:
-        """Round-robin across tenants (paper §4.2.4) for idle rows.
-        Quarantined tenants' requests never occupy a row — their slots
-        re-route to admissible co-tenants."""
-        active = [r for r in self._requests if not r.done
-                  and _admissible(self.quarantine, r.tenant)]
+    def _select_rows(self) -> List[Request]:
+        """Batch-row assignment through the scheduler's shared round-robin
+        fairness policy (§4.2.4).  Quarantined tenants' requests never
+        occupy a row — their slots re-route to admissible co-tenants."""
         by_tenant: Dict[str, List[Request]] = {}
-        for r in active:
-            by_tenant.setdefault(r.tenant, []).append(r)
-        order: List[Request] = []
-        while any(by_tenant.values()):
-            for t in sorted(by_tenant):
-                if by_tenant[t]:
-                    order.append(by_tenant[t].pop(0))
-        return order[: self.max_batch]
+        for r in self._requests:
+            if r.done:
+                continue
+            state = self.manager.quarantine.state_of(r.tenant)
+            if state is None or state.admissible:
+                by_tenant.setdefault(r.tenant, []).append(r)
+        return round_robin_interleave(by_tenant, self.max_batch)
 
+    def _attribute(self, rows: List[Request],
+                   slot_ids: np.ndarray) -> None:
+        """Per-step CHECK attribution for the serving plane: a CHECK row
+        whose slot id left its owner's partition is a detected violation.
+
+        Computed host-side from the same bounds the in-step fence used
+        (the clamp happens on device; detection must not depend on model
+        internals — slot fences run inside scan-over-layers).  One GATHER
+        count per offending row per step, folded into the manager's
+        ViolationLog so serve traffic feeds the same QuarantineManager
+        poll as raw launches."""
+        if not self.guard_enabled:
+            return
+        for i, r in enumerate(rows):
+            state = self.manager.quarantine.state_of(r.tenant)
+            if state is not None and not state.admissible:
+                # quarantined/evicted mid-run: the row is a lame duck —
+                # its bounds/log row may already be reclaimed
+                continue
+            if self.manager.policy_of(r.tenant) is not FencePolicy.CHECK:
+                continue
+            part = self.manager.bounds.lookup(r.tenant)
+            if not (part.base <= int(slot_ids[i]) < part.end):
+                counts = np.zeros((NUM_KINDS,), np.int32)
+                counts[int(ViolationKind.GATHER)] = 1
+                self.manager.violog.add(r.tenant, counts)
+
+    # ------------------------------------------------------------------ #
     def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
-        """Prefill all pending, then decode until done/limit."""
-        rows = self._assign_rows()
+        """Prefill all pending, then decode until done/limit.  Every step
+        is a LaunchRequest drained by the manager's scheduler."""
+        rows = self._select_rows()
         if not rows:
             return {}
+        self._in_run = True
+        try:
+            return self._run_rows(rows, max_new_tokens)
+        finally:
+            self._in_run = False
+
+    def _run_rows(self, rows: List[Request],
+                  max_new_tokens: int) -> Dict[int, List[int]]:
         B = self.max_batch
         # build padded prompt batch
         plen = max(len(r.prompt) for r in rows)
@@ -236,20 +328,45 @@ class ServeEngine:
                 "tgt": jnp.asarray(toks)}
         else:
             batch = {"tokens": jnp.asarray(toks)}
-        cache, logits = self.api.prefill(self.params, cache, batch,
-                                         guard=guard)
+
+        cache, logits = self._step("serve.prefill", (cache, batch, guard),
+                                   rows, slot_ids)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         for _ in range(max_new_tokens):
             for i, r in enumerate(rows):
                 r.generated.append(int(nxt[i]))
-            cache, logits = self.api.decode(self.params, cache, nxt,
-                                            guard=guard)
+            cache, logits = self._step("serve.decode", (cache, nxt, guard),
+                                       rows, slot_ids)
             self.decode_steps += 1
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for r in rows:
-            r.done = True
         self.cache = cache
-        return {r.rid: r.generated for r in rows}
+        # a mid-run eviction scrubbed the stale cache; re-apply to the one
+        # we just committed (zeroing is idempotent, nothing re-registers
+        # inside a single-threaded run)
+        for base, size in self._pending_scrubs:
+            self.cache = _scrub_slots(self.cache, base, size)
+        self._pending_scrubs.clear()
+        # rows whose tenant was quarantined/evicted mid-run were already
+        # dropped + recorded in self.rejected: they must not also be
+        # reported as served (their clamped generations are discarded)
+        out: Dict[int, List[int]] = {}
+        for r in rows:
+            state = self.manager.quarantine.state_of(r.tenant)
+            if state is None or state.admissible:
+                r.done = True
+                out[r.rid] = r.generated
+        return out
+
+    def _step(self, kernel: str, args, rows: List[Request],
+              slot_ids: np.ndarray):
+        """One engine step through the unified path: attribute CHECK rows,
+        enqueue the launch, drain the manager (scheduler flush + the
+        quarantine poll that consumes the attribution), read the result
+        handle."""
+        self._attribute(rows, slot_ids)
+        req = self._client.launch_kernel(kernel, args=args)
+        self.manager.run_queued()
+        return req.result
 
     def _cache_with_slots(self, slot_ids):
         c = self.cache
@@ -264,9 +381,8 @@ class ServeEngine:
         return c
 
 
-def _admissible(machine: QuarantineStateMachine, tenant: str) -> bool:
-    state = machine.state_of(tenant)
-    return state is None or state.admissible
+def _pow2(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
 
 
 def _scrub_slots(cache, base: int, size: int):
@@ -299,6 +415,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--no-guard", action="store_true")
+    ap.add_argument("--policies", default="",
+                    help="comma-separated per-tenant fence policies cycled "
+                         "across tenants (e.g. 'modulo,check'); empty = "
+                         "engine default (bitwise) for all")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -306,9 +426,14 @@ def main():
         cfg = cfg.reduced()
     eng = ServeEngine(cfg, max_batch=8, max_len=256,
                       guard=not args.no_guard)
+    pols = [FencePolicy(p.strip()) for p in args.policies.split(",")
+            if p.strip()]
     per = max(eng._pool_slots() // max(args.tenants, 1) // 2, 2)
     for t in range(args.tenants):
-        eng.register_tenant(f"tenant{t}", per)
+        pol = pols[t % len(pols)] if pols else None
+        eng.register_tenant(f"tenant{t}", per, policy=pol)
+        if pol is not None:
+            print(f"tenant{t}: policy={pol.value}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         tenant = f"tenant{i % args.tenants}"
@@ -319,8 +444,11 @@ def main():
     dt = time.time() - t0
     for rid, toks in sorted(out.items()):
         print(f"req {rid}: {toks[:8]}...")
+    st = eng.manager.scheduler.stats
     print(f"{len(out)} requests, {args.tokens} tokens each, "
-          f"{dt:.2f}s total, {eng.decode_steps} decode steps")
+          f"{dt:.2f}s total, {eng.decode_steps} decode steps, "
+          f"{int(st.total_launches)} scheduler launches")
+    return out
 
 
 if __name__ == "__main__":

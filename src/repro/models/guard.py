@@ -27,7 +27,18 @@ from typing import Optional
 
 import jax
 
-from repro.core.fence import FenceParams, FencePolicy, apply_fence
+from repro.core.fence import (
+    FenceParams,
+    FencePolicy,
+    apply_fence,
+    apply_fence_mixed,
+)
+
+#: Index spaces whose params are *per-batch-row* (gathered through a
+#: tenant-id column) — the spaces row-mixed policies apply to.  The global
+#: spaces (vocab / expert / page) are shared read-only index spaces fenced
+#: with the engine-level default policy.
+ROW_SPACES = ("kv", "state")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +49,9 @@ class GuardSpec:
     state: Optional[FenceParams] = None
     expert: Optional[FenceParams] = None
     page: Optional[FenceParams] = None   # logical->physical page ids in slab
+    #: per-batch-row policy codes (FencePolicy.code) for row-mixed batches;
+    #: applies to ROW_SPACES only.  None -> ``policy`` everywhere.
+    row_policy: Optional[jax.Array] = None
 
     def params_for(self, which: str) -> Optional[FenceParams]:
         return getattr(self, which)
@@ -47,14 +61,18 @@ def fence(spec: Optional[GuardSpec], which: str, idx: jax.Array) -> jax.Array:
     """Fence ``idx`` into the partition for index-space ``which``.
 
     No-op (native fast path) when spec is None or the space is unguarded.
-    CHECK policy degrades to clamping here (the `ok` predicate is surfaced
-    through the manager API, not the model API)."""
+    CHECK policy degrades to clamping here (detection/attribution for the
+    serving plane is host-side from the same bounds — the `ok` predicate
+    would be a scan tracer inside scan-over-layers models)."""
     if spec is None:
         return idx
     params = spec.params_for(which)
     if params is None:
         return idx
-    fenced, _ok = apply_fence(spec.policy, idx, params)
+    if spec.row_policy is not None and which in ROW_SPACES:
+        fenced, _ok = apply_fence_mixed(spec.row_policy, idx, params)
+    else:
+        fenced, _ok = apply_fence(spec.policy, idx, params)
     return fenced.astype(idx.dtype)
 
 

@@ -1,0 +1,92 @@
+"""CI perf-regression gate (benchmarks/check_regression.py): pure
+comparison logic — parsing, thresholds, normalization, width gating, and
+the injected-slowdown self-test the perf-gate CI job runs."""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import Row, compare, parse_rows  # noqa: E402
+
+BASELINE = """\
+name,us_per_call,derived
+sched.roundrobin.2t,476.52,launches_per_s=2099
+sched.batched.2t,241.05,launches_per_s=4149;mean_width=2.0;speedup=1.98x
+sched.modulo.batched.2t,250.00,launches_per_s=4000;mean_width=2.0
+"""
+
+
+def fresh_like(scale=1.0, width=2.0):
+    return parse_rows(
+        "name,us_per_call,derived\n"
+        f"sched.roundrobin.2t,{476.52 * scale:.2f},launches_per_s=1\n"
+        f"sched.batched.2t,{241.05 * scale:.2f},mean_width={width}\n"
+        f"sched.modulo.batched.2t,{250.0 * scale:.2f},mean_width={width}\n")
+
+
+def test_parse_rows_roundtrip():
+    rows = parse_rows(BASELINE)
+    assert set(rows) == {"sched.roundrobin.2t", "sched.batched.2t",
+                         "sched.modulo.batched.2t"}
+    r = rows["sched.batched.2t"]
+    assert r.us_per_call == pytest.approx(241.05)
+    assert r.mean_width == 2.0
+    assert r.derived["speedup"] == "1.98x"
+    assert rows["sched.roundrobin.2t"].mean_width is None
+
+
+def test_gate_passes_identical_and_faster():
+    base = parse_rows(BASELINE)
+    assert compare(base, fresh_like(1.0)) == []
+    assert compare(base, fresh_like(0.5)) == []       # faster is fine
+    assert compare(base, fresh_like(1.2)) == []       # within 25%
+
+
+def test_gate_fails_on_2x_slowdown():
+    """The perf-gate CI job's self-test: --inject-slowdown 2 must fire."""
+    base = parse_rows(BASELINE)
+    failures = compare(base, fresh_like(2.0))
+    assert len(failures) == 3
+    assert all("us_per_call regressed" in f for f in failures)
+
+
+def test_gate_fails_on_mean_width_drop():
+    base = parse_rows(BASELINE)
+    failures = compare(base, fresh_like(1.0, width=1.0))
+    assert len(failures) == 2
+    assert all("fusion regression" in f for f in failures)
+    # rounding jitter is not a regression
+    assert compare(base, fresh_like(1.0, width=1.96)) == []
+
+
+def test_gate_normalization_absorbs_runner_speed():
+    """A uniformly 3x slower runner passes when normalized by the
+    round-robin reference row; a *relative* regression still fails."""
+    base = parse_rows(BASELINE)
+    slow_runner = fresh_like(3.0)
+    assert compare(base, slow_runner) != []           # absolute gate fires
+    assert compare(base, slow_runner,
+                   normalize="sched.roundrobin.2t") == []
+    # batched path alone regresses 2x on the same runner -> caught
+    skewed = fresh_like(1.0)
+    skewed["sched.batched.2t"].us_per_call *= 2
+    assert any("sched.batched.2t" in f for f in
+               compare(base, skewed, normalize="sched.roundrobin.2t"))
+
+
+def test_gate_fails_on_disjoint_rows_and_bad_reference():
+    base = parse_rows(BASELINE)
+    assert compare(base, {}) != []
+    other = {"unrelated": Row("unrelated", 1.0, {})}
+    assert any("no common rows" in f for f in compare(base, other))
+    assert any("missing" in f for f in
+               compare(base, fresh_like(1.0), normalize="nope"))
+
+
+def test_gate_flags_error_rows():
+    base = parse_rows("name,us_per_call,derived\nsched.ERROR,0,boom\n")
+    fresh = parse_rows("name,us_per_call,derived\nsched.ERROR,0,boom\n")
+    assert any("unusable baseline" in f for f in compare(base, fresh))

@@ -15,11 +15,14 @@ from repro.core.fence import (
     FencePolicy,
     FenceTable,
     apply_fence,
+    apply_fence_mixed,
     fence_bitwise,
     fence_check,
     fence_modulo,
     fence_modulo_magic,
+    fence_modulo_magic_dyn,
     magic_constants,
+    magic_row,
     require_pow2_sizes,
 )
 from repro.core.partition import Partition
@@ -234,3 +237,104 @@ def test_fence_table_validates_pow2():
                                   [[0, 15], [16, 15]])
     with pytest.raises(ValueError):
         FenceTable.from_partitions([])
+
+
+# ---------------------------------------------------------------------------
+# Dynamic magic constants (fused MODULO) + row-mixed policy dispatch
+# ---------------------------------------------------------------------------
+
+
+def _dyn_magic_args(size):
+    m, s = magic_row(size)
+    return (jnp.asarray(np.uint32(m).view(np.int32)), jnp.int32(s))
+
+
+@given(st.integers(min_value=1, max_value=2**20),
+       st.integers(min_value=0, max_value=1000),
+       st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1),
+                min_size=1, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_modulo_magic_dyn_matches_static(size, base, idxs):
+    """The traced-constant reciprocal modulo is bit-identical to the
+    static per-partition specialization — the equivalence MODULO fusion
+    rests on.  Covers non-pow2 sizes and the size-1 degenerate row."""
+    idx = jnp.asarray(idxs, jnp.int32)
+    if size > 1:
+        m, s = magic_constants(size)
+        ref = np.asarray(fence_modulo_magic(idx, base, size, m, s))
+    else:
+        ref = np.full(idx.shape, base, np.int32)
+    mm, ms = _dyn_magic_args(size)
+    dyn = np.asarray(fence_modulo_magic_dyn(
+        idx, jnp.int32(base), jnp.int32(size), mm, ms))
+    np.testing.assert_array_equal(ref, dyn)
+    assert ((dyn >= base) & (dyn < base + size)).all()
+
+
+def test_modulo_magic_dyn_matches_static_sweep():
+    rng = np.random.default_rng(11)
+    for size in [1, 2, 3, 7, 16, 48, 100, 1000, (1 << 20) + 3]:
+        base = int(rng.integers(0, 1000))
+        idx = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, 64), jnp.int32)
+        if size > 1:
+            m, s = magic_constants(size)
+            ref = np.asarray(fence_modulo_magic(idx, base, size, m, s))
+        else:
+            ref = np.full(idx.shape, base, np.int32)
+        mm, ms = _dyn_magic_args(size)
+        dyn = np.asarray(fence_modulo_magic_dyn(
+            idx, jnp.int32(base), jnp.int32(size), mm, ms))
+        np.testing.assert_array_equal(ref, dyn, err_msg=f"size={size}")
+
+
+def test_apply_fence_modulo_uses_dyn_when_magic_params_present():
+    """Magic-carrying FenceParams (gathered from a table) switch the
+    MODULO dispatch to the traced reciprocal — no concrete-size error."""
+    idx = jnp.asarray([100, -5, 63], jnp.int32)
+    mm, ms = _dyn_magic_args(48)
+    p = FenceParams(base=jnp.int32(0), size=jnp.int32(48),
+                    magic_m=mm, magic_s=ms)
+    out, ok = apply_fence(FencePolicy.MODULO, idx, p)
+    assert ok is None
+    np.testing.assert_array_equal(
+        np.asarray(out), [100 % 48, (-5 & 0x7FFFFFFF) % 48, 63 % 48])
+    # traced size without magic still fails loudly (structural shift)
+    with pytest.raises(ValueError):
+        apply_fence(FencePolicy.MODULO, idx,
+                    FenceParams(base=jnp.int32(0), size=jnp.int32(48)))
+
+
+def test_fence_table_magic_rows_and_mixed_gather():
+    """from_partitions(with_magic=True) carries a (T, 4) magic table;
+    modulo_from_bounds accepts non-pow2 sizes; gather returns params that
+    drive apply_fence_mixed per element."""
+    parts = [Partition("a", base=0, size=16),
+             Partition("b", base=16, size=16)]
+    tbl = FenceTable.from_partitions(parts, with_magic=True)
+    assert tbl.magic.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(tbl.magic)[:, :2],
+                                  [[0, 16], [16, 16]])
+
+    npw = FenceTable.modulo_from_bounds([0, 48, 60], [48, 12, 1])
+    assert npw.rows is None and len(npw) == 3
+    params = npw.gather(jnp.asarray([0, 1, 2, 1], jnp.int32))
+    idx = jnp.asarray([100, 49, 999, 45], jnp.int32)
+    codes = jnp.asarray([FencePolicy.MODULO.code, FencePolicy.MODULO.code,
+                         FencePolicy.CHECK.code, FencePolicy.CHECK.code],
+                        jnp.int32)
+    fenced, ok = apply_fence_mixed(codes, idx, params)
+    fenced, ok = np.asarray(fenced), np.asarray(ok)
+    assert fenced[0] == 100 % 48
+    assert fenced[1] == 48 + (49 - 48) % 12
+    assert fenced[2] == 60 and not ok[2]      # CHECK: clamped + detected
+    assert fenced[3] == 48 and not ok[3]      # below base -> clamped too
+    # mixed dispatch without magic params fails loudly
+    with pytest.raises(ValueError):
+        apply_fence_mixed(codes, idx, FenceParams(base=0, size=16))
+
+
+def test_magic_row_degenerate_divisor():
+    assert magic_row(1) == (0, 32)
+    assert magic_row(2) == magic_constants(2)
+    with pytest.raises(ValueError):
+        magic_constants(0)

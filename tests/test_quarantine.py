@@ -405,3 +405,159 @@ def test_serve_rejects_and_reroutes_quarantined_tenant():
     assert eng.bounds.lookup("new").base == bad_part.base
     with pytest.raises(QuarantineError):
         eng.register_tenant("bad", 2)            # ban survives eviction
+
+
+def test_serve_steps_ride_the_shared_scheduler():
+    """The unified launch path: every prefill/decode step is a
+    LaunchRequest drained by the manager's BatchedLaunchScheduler under
+    the engine tenant; the engine owns no fence table or row-assignment
+    logic of its own."""
+    from repro.configs import get_config
+    from repro.launch.serve import ENGINE_TENANT, ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=4, max_len=64)
+    eng.register_tenant("a", 2)
+    rng = np.random.default_rng(0)
+    eng.submit("a", rng.integers(0, cfg.vocab, 8, np.int32))
+    out = eng.run(max_new_tokens=3)
+    assert len(out) == 1
+    st = eng.manager.scheduler.stats
+    # 1 prefill + 3 decode steps, all via the scheduler's per-launch path
+    assert st.single_steps == 4 and st.total_launches == 4
+    assert all(b == (ENGINE_TENANT,)
+               for b in eng.manager.scheduler.dispatch_log)
+    # the engine delegates fencing rows to the manager
+    assert not hasattr(eng, "_fence_table")
+    assert not hasattr(eng, "_assign_rows")
+    table, row_of = eng.manager.fence_table()
+    assert set(row_of) == {ENGINE_TENANT, "a"} and table.magic is not None
+    # and its step launches appear in the client-side call trace
+    assert eng._client.trace.api_counts()["cudaLaunchKernel"] == 4
+
+
+def test_manager_side_quarantine_propagates_to_serve_engine():
+    """A quarantine decided on the manager side (not via the engine API)
+    drops the tenant's pending serve requests and blocks submission —
+    the transition subscription closes the loop."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=4, max_len=64)
+    eng.register_tenant("good", 2)
+    eng.register_tenant("rogue", 2)
+    rng = np.random.default_rng(1)
+    rid_g = eng.submit("good", rng.integers(0, cfg.vocab, 8, np.int32))
+    rid_r = eng.submit("rogue", rng.integers(0, cfg.vocab, 8, np.int32))
+    # manager-side decision (e.g. threshold crossing from raw launches)
+    eng.manager.quarantine.quarantine("rogue", reason="violog threshold")
+    assert rid_r in eng.rejected
+    with pytest.raises(TenantQuarantined):
+        eng.submit("rogue", rng.integers(0, cfg.vocab, 8, np.int32))
+    out = eng.run(max_new_tokens=2)
+    assert rid_g in out and rid_r not in out
+    # eviction through the manager scrubs the serve pool slots
+    part = eng.bounds.lookup("rogue")
+    eng.manager.quarantine.evict("rogue")
+    sl = np.asarray(eng.cache.k[:, part.base:part.base + part.size])
+    assert (sl == 0).all()
+    assert any("quarantine rogue" in e for e in eng.manager.quarantine.events)
+
+
+def test_serve_check_rows_attribute_and_threshold_quarantine():
+    """A CHECK tenant spraying out-of-partition slot ids is detected by
+    the serving plane, attributed to the manager's ViolationLog, and
+    quarantined by the same threshold poll that polices raw launches;
+    co-tenants keep generating."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=8, max_len=64,
+                      quarantine_policy=ThresholdPolicy(quarantine_after=3))
+    eng.register_tenant("honest", 2)
+    vp = eng.register_tenant("victim", 2)
+    eng.register_tenant("sprayer", 2, policy=FencePolicy.CHECK)
+    rng = np.random.default_rng(2)
+    rid_h = eng.submit("honest", rng.integers(0, cfg.vocab, 8, np.int32))
+    eng.submit("victim", rng.integers(0, cfg.vocab, 8, np.int32))
+    rid_s = eng.submit("sprayer", rng.integers(0, cfg.vocab, 8, np.int32))
+    # forge the sprayer's slot into the victim's partition
+    req = [r for r in eng._requests if r.rid == rid_s][0]
+    req.slot = vp.base
+    out = eng.run(max_new_tokens=4)
+    assert rid_h in out and len(out[rid_h]) == 4
+    assert eng.manager.violog.total("sprayer") >= 3
+    assert eng.manager.quarantine.state_of("sprayer") is \
+        TenantState.QUARANTINED
+    with pytest.raises(TenantQuarantined):
+        eng.submit("sprayer", rng.integers(0, cfg.vocab, 8, np.int32))
+
+
+def test_serve_mid_run_eviction_scrubs_final_cache_and_drops_output():
+    """Auto-eviction firing *during* run() (threshold poll between decode
+    steps) must survive the run-end cache commit: the evicted tenant's
+    pool slots are zero in the final cache, its rid is rejected — not
+    served — and co-tenants finish unharmed (regression: the scrub used
+    to be overwritten by the stale local cache, and attribution crashed
+    on the reclaimed tenant)."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=8, max_len=64,
+                      policy=FencePolicy.CHECK,
+                      quarantine_policy=ThresholdPolicy(
+                          quarantine_after=2, evict_after=2))
+    eng.register_tenant("honest", 2)
+    vp = eng.register_tenant("victim", 2)
+    sp = eng.register_tenant("sprayer", 2)
+    rng = np.random.default_rng(4)
+    rid_h = eng.submit("honest", rng.integers(0, cfg.vocab, 8, np.int32))
+    rid_s = eng.submit("sprayer", rng.integers(0, cfg.vocab, 8, np.int32))
+    req = [r for r in eng._requests if r.rid == rid_s][0]
+    req.slot = vp.base                      # forged into the victim
+    out = eng.run(max_new_tokens=6)
+    assert eng.manager.quarantine.state_of("sprayer") is TenantState.EVICTED
+    assert rid_h in out and len(out[rid_h]) == 6
+    assert rid_s not in out and rid_s in eng.rejected
+    # the evicted tenant's partition is scrubbed in the COMMITTED cache
+    sl = np.asarray(eng.cache.k[:, sp.base:sp.base + sp.size])
+    assert (sl == 0).all()
+    # and the freed block serves a newcomer without inheriting data
+    assert eng.register_tenant("newcomer", 2).base == sp.base
+
+
+def test_per_tenant_none_policy_override_refused():
+    """A NONE per-tenant override would run unfenced beside co-tenants —
+    the manager refuses it at registration (the native fast path is only
+    ever granted, and revoked, by the standalone check)."""
+    mgr = GuardianManager(total_slots=256)
+    with pytest.raises(ValueError):
+        mgr.register_tenant("evil", 32, policy=FencePolicy.NONE)
+    assert mgr.quarantine.machine.record_of("evil") is None  # no leak
+
+
+def test_serve_mixed_policies_match_homogeneous_for_honest_tenants():
+    """Row-mixed fencing (MODULO + CHECK tenants beside the BITWISE
+    default) is a semantic no-op for in-partition workloads: generations
+    are bit-identical to the all-BITWISE engine."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(3)
+    prompts = {t: rng.integers(0, cfg.vocab, 8, np.int32)
+               for t in ("a", "b", "c")}
+    outs = []
+    for policies in ({}, {"a": FencePolicy.MODULO,
+                          "b": FencePolicy.CHECK}):
+        eng = ServeEngine(cfg, max_batch=8, max_len=64)
+        rids = {}
+        for t, p in prompts.items():
+            eng.register_tenant(t, 2, policy=policies.get(t))
+            rids[t] = eng.submit(t, p)
+        out = eng.run(max_new_tokens=4)
+        outs.append({t: out[r] for t, r in rids.items()})
+    assert outs[0] == outs[1]

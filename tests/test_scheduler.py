@@ -276,28 +276,233 @@ def test_stale_standalone_policy_reresolved_at_drain():
     assert (own == 999.0).any()       # fenced wrap into a's own partition
 
 
-def test_serve_fence_table_tracks_repartition():
-    """Destroy + re-register under the same tenant name must rebuild the
-    serve engine's FenceTable (the partition bounds can move)."""
-    from repro.configs import get_config
-    from repro.launch.serve import ServeEngine
-
-    cfg = get_config("stablelm-3b").reduced()
-    eng = ServeEngine(cfg, max_batch=4, max_len=64)
-    eng.register_tenant("a", 2)
-    t1, row1 = eng._fence_table()
-    old_row = np.asarray(t1.rows)[row1["a"]]
-    eng.register_tenant("b", 2)       # occupies slots next to a
-    eng.bounds.destroy("a")
-    eng.register_tenant("a", 2)       # buddy allocator may move a
-    t2, row2 = eng._fence_table()
-    new_part = eng.bounds.lookup("a")
+def test_manager_fence_table_tracks_repartition():
+    """Remove + re-register under the same tenant name must rebuild the
+    manager's all-tenant FenceTable (the partition bounds can move), magic
+    rows included — the serving plane reads its per-row guard from here."""
+    mgr = GuardianManager(total_slots=256)
+    mgr.register_tenant("a", 16)
+    t1, row1 = mgr.fence_table()
+    old_row = np.asarray(t1.rows)[row1["a"]].copy()
+    mgr.register_tenant("b", 32)      # occupies slots next to a
+    mgr.remove_tenant("a")
+    mgr.register_tenant("a", 64)      # buddy allocator must move a
+    t2, row2 = mgr.fence_table()
+    new_part = mgr.bounds.lookup("a")
     np.testing.assert_array_equal(
         np.asarray(t2.rows)[row2["a"]],
         [new_part.base, new_part.mask])
-    assert not np.array_equal(old_row,
-                              np.asarray(t2.rows)[row2["a"]]) or \
-        (new_part.base, new_part.mask) == tuple(old_row)
+    assert not np.array_equal(old_row, np.asarray(t2.rows)[row2["a"]])
+    # the magic table tracks the same rebuild: (base, size, m, s) with the
+    # reciprocal constants of the NEW size (m is a uint32 bit pattern)
+    from repro.core.fence import magic_row
+    m, s = magic_row(new_part.size)
+    np.testing.assert_array_equal(
+        np.asarray(t2.magic).view(np.uint32)[row2["a"]],
+        np.array([new_part.base, new_part.size, m, s], np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# MODULO fusion via the magic row table
+# ---------------------------------------------------------------------------
+
+
+def test_modulo_launches_fuse_into_one_step():
+    """MODULO is no longer the odd one out: compatible MODULO launches
+    from different tenants coalesce into one fused device step driven by
+    the (T, 4) magic row table."""
+    mgr, clients = make_manager(4, policy=FencePolicy.MODULO)
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.zeros(8, np.float32))
+        ptrs.append(p)
+    for _ in range(3):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.synchronize()
+    st = mgr.scheduler.stats
+    assert st.fused_steps == 3 and st.mean_batch_width == 4.0
+    for c, p in zip(clients, ptrs):
+        np.testing.assert_array_equal(c.memcpy_d2h(p, 8),
+                                      np.full(8, 3.0, np.float32))
+
+
+def test_modulo_fused_matches_per_launch_drain():
+    """Fused MODULO batches are byte-identical to standalone MODULO
+    launches (the per-launch path's static per-partition magic constants
+    vs the fused path's traced magic rows — same exact division).  Mirrors
+    the CHECK selective-commit equality test."""
+    arenas = []
+    for batched in (True, False):
+        mgr, clients = make_manager(4, policy=FencePolicy.MODULO,
+                                    batch_launches=batched)
+        for i, c in enumerate(clients):
+            c.module_load("bump", bump)
+            p = c.malloc(16)
+            c.memcpy_h2d(p, np.arange(16, dtype=np.float32) * (i + 1))
+            for _ in range(i + 1):           # unequal load per tenant
+                c.launch_kernel("bump", ptrs=[p], args=(16,))
+        mgr.synchronize()
+        if batched:
+            assert mgr.scheduler.stats.fused_steps > 0
+        else:
+            assert mgr.scheduler.stats.fused_steps == 0
+        arenas.append(np.asarray(mgr.arena.buf))
+    np.testing.assert_array_equal(arenas[0], arenas[1])
+
+
+def test_modulo_fused_batch_cross_tenant_isolation():
+    """Fused MODULO rows wrap a forged pointer into the attacker's own
+    partition — same containment as the static per-partition binaries."""
+    mgr, clients = make_manager(4, policy=FencePolicy.MODULO)
+    parts = [mgr.bounds.lookup(f"t{i}") for i in range(4)]
+    ptrs = []
+    for i, c in enumerate(clients):
+        c.module_load("evil", evil_write)
+        p = c.malloc(16)
+        c.memcpy_h2d(p, np.full(16, float(i + 1), np.float32))
+        ptrs.append(p)
+    mgr.synchronize()
+    before = np.asarray(mgr.arena.buf).copy()
+    for i, c in enumerate(clients):
+        victim = ptrs[(i + 1) % 4]
+        c.launch_kernel("evil", args=(jnp.int32(victim.addr), 16))
+    mgr.synchronize()
+    assert list(mgr.scheduler.stats.batch_widths) == [4]
+    after = np.asarray(mgr.arena.buf)
+    for i, part in enumerate(parts):
+        own = after[part.base:part.base + part.size]
+        assert (own == 999.0).any(), f"t{i}: wrap-around missing"
+        changed = own != before[part.base:part.base + part.size]
+        assert (own[changed] == 999.0).all(), f"t{i}: foreign write leaked"
+
+
+def test_modulo_fused_non_pow2_partition_sizes():
+    """The magic row table handles arbitrary partition sizes: a fused
+    MODULO step over hand-built non-pow2 bounds produces the same arena
+    bytes as standalone static-magic launches over the same bounds (the
+    reciprocal constants, not the pow2 mask, do the wrapping)."""
+    from repro.core import FenceParams, FenceTable, sandbox
+
+    bounds = [(0, 48), (48, 12), (60, 3)]        # none pow2-aligned
+    table = FenceTable.modulo_from_bounds([b for b, _ in bounds],
+                                          [s for _, s in bounds])
+    assert table.rows is None and table.magic.shape == (3, 4)
+
+    def kern(arena, start, n):
+        idx = start + jnp.arange(n, dtype=jnp.int32)
+        vals = jnp.take(arena, idx, axis=0)
+        return arena.at[idx].set(vals + 100.0), None
+
+    # standalone reference: static magic constants per partition
+    ref = np.arange(64, dtype=np.float32)
+    arena_ref = jnp.asarray(ref)
+    sb = sandbox(kern, arena_argnums=(0,), policy=FencePolicy.MODULO)
+    starts = [40, 55, 61]                        # each straddles its end
+    for (base, size), start in zip(bounds, starts):
+        (arena_ref, _), _ok = sb(FenceParams(base=base, size=size),
+                                 arena_ref, jnp.int32(start), 8)
+
+    # fused run: same launches as rows of one compiled step
+    from repro.core.manager import GuardianManager
+    mgr = GuardianManager(total_slots=64)
+    mgr.register_kernel("kern", kern)
+    entry = mgr.pointer_to_symbol["kern"]
+    fused = mgr.scheduler._build_fused_modulo(
+        entry, (("d", (), jnp.int32), ("s", 8)), 3)
+    arena = jnp.asarray(ref)
+    starts_dev = [jnp.int32(s) for s in starts]
+    arena, _outs = fused(arena, table.magic, *starts_dev)
+    np.testing.assert_array_equal(np.asarray(arena), np.asarray(arena_ref))
+
+
+def test_per_tenant_policies_fuse_in_separate_batches():
+    """Tenants may override the manager's fence policy; policy groups
+    fuse separately (the policy is part of the batch signature) and the
+    MODULO group rides the magic row table."""
+    mgr = GuardianManager(total_slots=512, policy=FencePolicy.BITWISE)
+    clients = [
+        mgr.register_tenant("m0", 32, policy=FencePolicy.MODULO),
+        mgr.register_tenant("m1", 32, policy=FencePolicy.MODULO),
+        mgr.register_tenant("b0", 32),
+        mgr.register_tenant("b1", 32),
+    ]
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(8)
+        c.memcpy_h2d(p, np.zeros(8, np.float32))
+        ptrs.append(p)
+    mgr.synchronize()
+    mgr.scheduler.dispatch_log.clear()
+    for c, p in zip(clients, ptrs):
+        c.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.synchronize()
+    # one MODULO pair + one BITWISE pair, never mixed
+    assert sorted(mgr.scheduler.dispatch_log) == [("b0", "b1"),
+                                                  ("m0", "m1")]
+    assert mgr.scheduler.stats.fused_steps == 2
+    for c, p in zip(clients, ptrs):
+        np.testing.assert_array_equal(c.memcpy_d2h(p, 8),
+                                      np.full(8, 1.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Stats + shared fairness helper
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_stats_summary_fresh_is_all_zeros():
+    """A fresh scheduler has dispatched nothing: every summary metric is
+    0.0 — no division by zero for device_steps == 0 (regression)."""
+    from repro.core import SchedulerStats
+
+    st = SchedulerStats()
+    summary = st.summary()
+    assert summary == {k: 0.0 for k in summary}
+    assert st.launches_per_step == 0.0
+    assert st.fused_fraction == 0.0
+    assert st.mean_batch_width == 0.0
+
+
+def test_round_robin_interleave_matches_drain_fairness():
+    from repro.core import round_robin_interleave
+
+    by_tenant = {"t0": ["a0", "a1", "a2", "a3"], "t1": ["b0", "b1"],
+                 "t2": ["c0"]}
+    order = round_robin_interleave(by_tenant)
+    assert order == ["a0", "b0", "c0", "a1", "b1", "a2", "a3"]
+    assert round_robin_interleave(by_tenant, limit=4) == \
+        ["a0", "b0", "c0", "a1"]
+    assert round_robin_interleave({}) == []
+    # inputs are not consumed
+    assert by_tenant["t0"] == ["a0", "a1", "a2", "a3"]
+
+
+def test_launch_result_handle_filled_by_drain():
+    """SPATIAL launches return a request handle whose .result is set once
+    the scheduler dispatches it — fused, CHECK and single paths alike."""
+    for policy in (FencePolicy.BITWISE, FencePolicy.MODULO,
+                   FencePolicy.CHECK):
+        mgr, clients = make_manager(2, policy=policy)
+
+        def echo(arena, ptr, n):
+            idx = ptr + jnp.arange(n, dtype=jnp.int32)
+            vals = jnp.take(arena, idx, axis=0)
+            return arena.at[idx].set(vals + 1.0), jnp.sum(vals)
+
+        reqs = []
+        for i, c in enumerate(clients):
+            c.module_load("echo", echo)
+            p = c.malloc(4)
+            c.memcpy_h2d(p, np.full(4, float(i + 1), np.float32))
+            reqs.append(c.launch_kernel("echo", ptrs=[p], args=(4,)))
+        mgr.synchronize()
+        for i, req in enumerate(reqs):
+            assert req.result is not None, policy
+            assert float(req.result) == 4.0 * (i + 1), policy
 
 
 def test_check_policy_contains_and_attributes_on_scheduler_path():
@@ -343,12 +548,18 @@ def test_check_policy_unbatched_drain_still_raises():
 
 
 def test_signature_distinguishes_policies():
+    """Policies never mix within a batch (the policy is part of the batch
+    signature) — but every fencing policy is fusable now, MODULO included
+    (via the magic row table); only NONE degrades to the native path."""
     r1 = LaunchRequest(tenant_id="a", name="k", policy=FencePolicy.BITWISE,
                        entry=None, part=None, call_args=(jnp.int32(1), 4))
     r2 = LaunchRequest(tenant_id="b", name="k", policy=FencePolicy.MODULO,
                        entry=None, part=None, call_args=(jnp.int32(2), 4))
     r3 = LaunchRequest(tenant_id="b", name="k", policy=FencePolicy.BITWISE,
                        entry=None, part=None, call_args=(jnp.int32(3), 4))
+    r4 = LaunchRequest(tenant_id="b", name="k", policy=FencePolicy.NONE,
+                       entry=None, part=None, call_args=(jnp.int32(4), 4))
     assert r1.signature != r2.signature
     assert r1.signature == r3.signature
-    assert r1.fusable and r3.fusable and not r2.fusable
+    assert r1.fusable and r3.fusable and r2.fusable
+    assert not r4.fusable
