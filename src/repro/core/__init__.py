@@ -39,6 +39,7 @@ from repro.core.fence import (
 from repro.core.scheduler import (
     BatchedLaunchScheduler,
     LaunchRequest,
+    LRUCache,
     SchedulerStats,
     round_robin_interleave,
 )
@@ -79,8 +80,8 @@ __all__ = [
     "fence_modulo_magic", "fence_modulo_magic_dyn",
     "guarded_take", "guarded_update", "magic_constants", "magic_row",
     "require_pow2_sizes",
-    "BatchedLaunchScheduler", "LaunchRequest", "SchedulerStats",
-    "round_robin_interleave",
+    "BatchedLaunchScheduler", "LaunchRequest", "LRUCache",
+    "SchedulerStats", "round_robin_interleave",
     "CallTrace", "DevicePtr", "GuardianClient",
     "GuardianManager", "GuardianViolation", "SharingMode",
     "BuddyAllocator", "OutOfArenaMemory", "Partition",

@@ -73,6 +73,24 @@ class ArenaSpec:
         return self.num_slots * max(self.slot_bytes, 1)
 
 
+class PoolArena:
+    """A live *pytree* arena — framework-plane pools (KV page pools, SSM
+    state pools) registered with the manager so the manager, not the
+    serving engine, holds the only reference to the device buffers.
+
+    Unlike :class:`Arena` there is no flat spec: the buffer is an
+    arbitrary pytree whose slot-indexed tensors share the manager's
+    global slot space on axis 1.  Trusted kernels declaring
+    ``pool_arena=<name>`` have the pool threaded through their compiled
+    steps (and through every row of a fused multi-engine step) exactly
+    like the flat arena — one live pool, engines only ever see the value
+    the manager hands their step.
+    """
+
+    def __init__(self, buf: Any):
+        self.buf = buf
+
+
 class Arena:
     """A live arena: spec + current buffer.  All dynamic access goes through
     the guarded ops so the fence policy is applied uniformly."""

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arena import Arena, ArenaSpec, make_flat_arena
+from repro.core.arena import Arena, ArenaSpec, PoolArena, make_flat_arena
 from repro.core.fence import FenceParams, FencePolicy, FenceTable, \
     require_pow2_sizes
 from repro.core.interception import DevicePtr, GuardianClient
@@ -79,7 +79,13 @@ from repro.core.quarantine import (
     TenantState,
 )
 from repro.core.sandbox import SandboxError, sandbox
-from repro.core.scheduler import BatchedLaunchScheduler, LaunchRequest
+from repro.core.scheduler import (
+    BatchedLaunchScheduler,
+    LaunchRequest,
+    LRUCache,
+    _arg_signature,
+    donation_supported,
+)
 from repro.core.violations import KIND_NAMES, ViolationLog
 
 
@@ -126,9 +132,21 @@ class _KernelEntry:
         default_factory=dict)         # (mode, static_positions) -> jitted
     #: framework-plane kernels (serving-engine steps): already fenced
     #: internally via a GuardSpec built from the manager's fence table,
-    #: so the sandboxer is skipped and the launch executes eagerly —
-    #: never fused, never specialized per policy.
+    #: so the sandboxer is skipped — never specialized per policy.  With
+    #: ``jit_trusted`` the launch runs through a compiled (and, across
+    #: engines, fused) step; ``jit_trusted=False`` restores the eager
+    #: unfused fallback.
     trusted: bool = False
+    #: fn-arg positions (arena = 0) whose buffers the jitted trusted step
+    #: may donate — consumed-once operands like the engine's KV cache;
+    #: ignored on backends without donation (CPU)
+    donate_argnums: Tuple[int, ...] = ()
+    #: name of a manager :class:`PoolArena` threaded through the step as
+    #: its second argument — ``fn(arena, pool, *args) ->
+    #: (arena, pool, out)``.  The manager reads the live pool at dispatch
+    #: and commits the returned one, so N engines sharing the pool (and
+    #: fused rows of one device step) always see each other's updates.
+    pool_arena: Optional[str] = None
 
 
 def _specialized_jit(entry: _KernelEntry, mode: str, fn: Callable,
@@ -167,12 +185,24 @@ class GuardianManager:
         max_tenants: int = 64,
         quarantine_policy: Optional[QuarantinePolicy] = None,
         quarantine_poll_every: int = 1,
+        jit_trusted: bool = True,
+        jit_cache_capacity: int = 64,
+        lookahead_cycles: int = 0,
     ):
         self.policy = policy
         self.mode = mode
         self.standalone_fast_path = standalone_fast_path
         self.batch_launches = batch_launches
-        self.scheduler = BatchedLaunchScheduler(self, max_fuse=max_fuse)
+        #: compile trusted (framework-plane) steps instead of executing
+        #: them eagerly, and let compatible trusted steps from multiple
+        #: serve engines fuse into one device step.  False restores the
+        #: eager per-launch fallback (bit-identical by regression test).
+        self.jit_trusted = jit_trusted
+        #: LRU capacity of each kernel entry's fenced jit cache (ROADMAP:
+        #: symbol-cache growth under many-kernel churn)
+        self.jit_cache_capacity = jit_cache_capacity
+        self.scheduler = BatchedLaunchScheduler(
+            self, max_fuse=max_fuse, lookahead_cycles=lookahead_cycles)
 
         # Fault containment: device-side per-tenant violation telemetry
         # (filled by CHECK launches, in-kernel, no host sync) + the host-side
@@ -200,6 +230,10 @@ class GuardianManager:
         # one arena mix e.g. MODULO and CHECK tenants — each policy group
         # fuses separately (the policy is part of the batch signature)
         self._tenant_policy: Dict[str, Optional[FencePolicy]] = {}
+        # per-tenant weighted-round-robin weights: a weight-w tenant
+        # drains up to w ops per cycle and divides the lookahead hold
+        # budget of any batch its ops join (priority against starvation)
+        self._tenant_weight: Dict[str, int] = {}
         # all-tenant fence table for the serving plane (one (T,2) bitwise +
         # (T,4) magic row staging, rebuilt only when the partition set
         # changes — the engine-side twin of the scheduler's batch tables)
@@ -222,7 +256,8 @@ class GuardianManager:
     # Tenant lifecycle                                                   #
     # ------------------------------------------------------------------ #
     def register_tenant(self, tenant_id: str, requested_slots: int,
-                        policy: Optional[FencePolicy] = None
+                        policy: Optional[FencePolicy] = None,
+                        weight: int = 1
                         ) -> GuardianClient:
         """Tenants declare memory needs at init (§4.2.1: "normal in cloud
         environments, where users buy instances with specific resources").
@@ -234,9 +269,16 @@ class GuardianManager:
         against co-tenants (the native fast path is granted automatically
         — and revoked at drain time — by ``standalone_fast_path``).
 
+        ``weight`` (>= 1) is the tenant's weighted-round-robin share: up
+        to ``weight`` of its ops drain per cycle, and the scheduler's
+        cross-cycle lookahead divides its hold budget by the weight, so a
+        priority tenant is never starved waiting for a fuller batch.
+
         An EVICTED tenant id is refused until explicitly readmitted
         (``manager.quarantine.readmit``) — eviction must survive a
         re-registration attempt."""
+        if weight < 1:
+            raise ValueError(f"tenant weight must be >= 1, got {weight}")
         if policy is FencePolicy.NONE:
             raise ValueError(
                 "per-tenant policy NONE would run unfenced beside "
@@ -262,6 +304,7 @@ class GuardianManager:
         self._suballoc[tenant_id] = IntraPartitionAllocator(part)
         self._queues[tenant_id] = collections.deque()
         self._tenant_policy[tenant_id] = policy
+        self._tenant_weight[tenant_id] = weight
         client = GuardianClient(self, tenant_id)
         self._clients[tenant_id] = client
         return client
@@ -300,6 +343,7 @@ class GuardianManager:
         self._clients.pop(tenant_id, None)
         self._part_scalars.pop(tenant_id, None)
         self._tenant_policy.pop(tenant_id, None)
+        self._tenant_weight.pop(tenant_id, None)
 
     def _purge_symbol_caches(self, part: Partition) -> None:
         """Evict per-tenant compiled state from the jit/symbol caches.
@@ -350,6 +394,10 @@ class GuardianManager:
         """The tenant's configured fence policy (override or default) —
         before standalone fast-path resolution."""
         return self._tenant_policy.get(tenant_id) or self.policy
+
+    def weight_of(self, tenant_id: str) -> int:
+        """The tenant's weighted-round-robin share (1 = plain RR)."""
+        return self._tenant_weight.get(tenant_id, 1)
 
     def fence_table(self) -> Tuple[FenceTable, Dict[str, int]]:
         """Stacked fence rows for every registered tenant, magic table
@@ -510,30 +558,73 @@ class GuardianManager:
             fenced_dyn=fenced_entry,
             checked_dyn=checked_entry,
             modulo_dyn=modulo_entry_dyn,
+            jit_cache=LRUCache(self.jit_cache_capacity),
         )
         self.pointer_to_symbol[name] = entry
 
+    def register_pool(self, name: str, buf: Any) -> PoolArena:
+        """Adopt a framework-plane pool (a pytree of slot-indexed device
+        tensors — a serving engine's KV/state pool) as a manager-owned
+        arena.  Idempotent by name: engines sharing a manager and a model
+        shape converge on one live pool, which is what lets their fused
+        steps address one KV slot space (§4.2.1 applied to the serving
+        plane).  Returns the (possibly pre-existing) :class:`PoolArena`.
+        """
+        pool = self.arenas.get(name)
+        if pool is None:
+            pool = PoolArena(buf)
+            self.arenas[name] = pool
+        return pool
+
     def register_trusted_kernel(self, name: str, fn: Callable,
-                                arena_argnums: Sequence[int] = (0,)) -> None:
+                                arena_argnums: Sequence[int] = (0,),
+                                donate_argnums: Sequence[int] = (),
+                                pool_arena: Optional[str] = None,
+                                ) -> None:
         """Register a *framework-plane* kernel — an engine step that is
         already fenced internally (per-row GuardSpec built from this
         manager's :meth:`fence_table`).
 
-        The jaxpr sandboxer is skipped and the launch executes eagerly and
-        unjitted through the per-launch path: the step is itself a fused
+        The jaxpr sandboxer is skipped: the step is itself a fused
         multi-row program whose rows the engine fences, so wrapping it in
-        the scheduler's row fencing would double-fence.  Trusted kernels
-        still ride the queues and the scheduler drain — ordering,
-        quarantine drops and launch telemetry are shared — they are just
-        never batched with tenant kernels.  Only engine code may register
-        trusted kernels; tenant-supplied callables go through
-        :meth:`register_kernel` (fail-closed sandboxing).
+        the scheduler's row fencing would double-fence.  With
+        ``jit_trusted`` (the default) the launch runs through a compiled
+        step keyed by its operand signature, and compatible trusted steps
+        from *different* serve engines fuse into one device step; with
+        ``jit_trusted=False`` it executes eagerly and unfused (the
+        bit-identical fallback).  Trusted kernels still ride the queues
+        and the scheduler drain — ordering, quarantine drops and launch
+        telemetry are shared — and are never batched with tenant kernels
+        (the signature includes the kernel name).
+
+        ``donate_argnums`` are fn-arg positions (arena = 0) whose buffers
+        the compiled step may consume in place — operands used exactly
+        once per step, like the engine's KV cache; shared operands (the
+        per-run guard) must not be listed.  Ignored where the backend
+        does not implement donation (CPU).
+
+        ``pool_arena`` names a manager pool (see :meth:`register_pool`)
+        threaded through the step: the contract becomes
+        ``fn(arena, pool, *args) -> (arena, pool, out)``, the manager
+        supplies the live pool at dispatch and commits the returned one
+        (the pool is never a caller operand — the manager stays the only
+        entity with device access, §4.2).
+
+        Only engine code may register trusted kernels; tenant-supplied
+        callables go through :meth:`register_kernel` (fail-closed
+        sandboxing).
         """
         if name in self.pointer_to_symbol:
             return
+        if pool_arena is not None and pool_arena not in self.arenas:
+            raise ValueError(f"pool arena {pool_arena!r} not registered "
+                             "(register_pool first)")
         entry = _KernelEntry(
             name=name, fn=fn, arena_argnums=tuple(arena_argnums),
-            native=fn, fenced_dyn=fn, checked_dyn=fn, trusted=True)
+            native=fn, fenced_dyn=fn, checked_dyn=fn, trusted=True,
+            donate_argnums=tuple(donate_argnums),
+            pool_arena=pool_arena,
+            jit_cache=LRUCache(self.jit_cache_capacity))
         self.pointer_to_symbol[name] = entry
 
     def _modulo_exec(self, entry: _KernelEntry, part: Partition) -> Callable:
@@ -549,6 +640,32 @@ class GuardianManager:
 
             entry.modulo_static[key] = modulo_entry
         return entry.modulo_static[key]
+
+    def _trusted_exec(self, entry: _KernelEntry, call_args: Tuple,
+                      arg_sig: Optional[Tuple] = None) -> Callable:
+        """Compiled variant of a trusted step, keyed by the operand
+        signature (kernel × arg structure; the scheduler adds the batch
+        width for fused multi-engine steps).  ``arg_sig`` reuses a
+        signature already computed for the request (the scheduler hot
+        path caches it) instead of re-flattening the operand pytrees.
+        Declared ``donate_argnums`` buffers (plus the arena) alias in
+        place on backends with donation; the cache is LRU-bounded like
+        every fenced jit cache."""
+        key = ("trusted",
+               _arg_signature(call_args) if arg_sig is None else arg_sig)
+        fn = entry.jit_cache.get(key)
+        if fn is None:
+            if not donation_supported():
+                donate = ()
+            elif entry.pool_arena is not None:
+                # arena + threaded pool; declared argnums shift past pool
+                donate = (0, 1, *(i + 1 for i in entry.donate_argnums
+                                  if i > 0))
+            else:
+                donate = (0, *entry.donate_argnums)
+            fn = jax.jit(entry.fn, donate_argnums=tuple(sorted(set(donate))))
+            entry.jit_cache[key] = fn
+        return fn
 
     def launch_kernel(self, tenant_id: str, name: str,
                       ptrs: Sequence[DevicePtr] = (),
@@ -570,7 +687,9 @@ class GuardianManager:
         req = LaunchRequest(tenant_id=tenant_id, name=name,
                             policy=self._effective_policy(tenant_id),
                             entry=entry, part=part,
-                            call_args=(*ptr_args, *args))
+                            call_args=(*ptr_args, *args),
+                            trusted_fusable=entry.trusted
+                            and self.jit_trusted)
         if enqueue or self.mode is SharingMode.SPATIAL:
             self._enqueue(tenant_id, "launch", (req,))
             # the request doubles as the result handle: req.result holds
@@ -591,10 +710,21 @@ class GuardianManager:
         entry, part, policy = req.entry, req.part, req.policy
 
         if entry.trusted:
-            # framework step: internally fenced, executes eagerly (no jit,
-            # no augmentation) — see register_trusted_kernel
+            # framework step: internally fenced, no augmentation — jitted
+            # (keyed by operand signature, pool/arena donated where the
+            # backend supports it) unless jit_trusted is off, in which
+            # case the eager fallback runs — see register_trusted_kernel
             t1 = time.perf_counter_ns()
-            new_arena, out = entry.fn(self.arena.buf, *req.call_args)
+            fn = self._trusted_exec(entry, req.call_args,
+                                    arg_sig=req.signature[2]) \
+                if self.jit_trusted else entry.fn
+            if entry.pool_arena is None:
+                new_arena, out = fn(self.arena.buf, *req.call_args)
+            else:
+                pool = self.arenas[entry.pool_arena]
+                new_arena, new_pool, out = fn(self.arena.buf, pool.buf,
+                                              *req.call_args)
+                pool.buf = new_pool
             self.arena.buf = new_arena
             self.launch_stats.dispatch_ns.append(
                 time.perf_counter_ns() - t1)
@@ -680,23 +810,28 @@ class GuardianManager:
     def run_queued(self) -> None:
         """Drain queues per the sharing mode.
 
-        SPATIAL: round-robin one op per tenant per cycle ("selects GPU calls
-        from different applications in a round-robin fashion"); ops within a
-        tenant stay in-order, tenants interleave.  The launches selected in
-        a cycle are submitted to the batched scheduler and flushed at the
-        end of the cycle — compatible launches from different tenants fuse
-        into one device step (one binary, per-row dynamic bounds).
+        SPATIAL: weighted round-robin — up to ``weight`` ops per tenant
+        per cycle ("selects GPU calls from different applications in a
+        round-robin fashion", grown with per-tenant shares); ops within a
+        tenant stay in-order, tenants interleave.  The launches selected
+        in a cycle are submitted to the batched scheduler and flushed at
+        the end of the cycle — compatible launches from different tenants
+        fuse into one device step (one binary, per-row dynamic bounds).
+        With ``lookahead_cycles`` the cycle-boundary flush may hold an
+        under-filled batch for later cycles; the final flush of the drain
+        (``drain=True``) always executes everything, so every result
+        handle is filled when this returns.
         TIME_SHARE: drain each tenant fully then block (context switch).
         """
         if self.mode is SharingMode.SPATIAL:
             pending = True
             while pending:
                 pending = False
-                for q in self._queues.values():
-                    if q:
+                for t, q in self._queues.items():
+                    for _ in range(min(self.weight_of(t), len(q))):
                         self._run_op(q.popleft())
-                        pending = pending or bool(q)
-                self.scheduler.flush()
+                    pending = pending or bool(q)
+                self.scheduler.flush(drain=not pending)
                 # containment check at the cycle boundary: a tenant crossing
                 # the violation threshold here has its remaining queued ops
                 # dropped while co-tenants keep draining (skipped entirely
@@ -755,6 +890,27 @@ class GuardianManager:
             "tenants": tenants,
             "transfer_violations": list(self.violations),
             "events": list(self.quarantine.events),
+        }
+
+    def jit_cache_stats(self) -> Dict[str, Any]:
+        """Occupancy + eviction counters of every LRU-bounded compiled
+        cache: per-kernel fenced specializations (``entries``) and the
+        scheduler's fused-step binaries (``fused_entries``).  ``evictions``
+        count cold binaries dropped at capacity — each costs one recompile
+        on next use, never correctness (ROADMAP: symbol-cache growth under
+        many-kernel churn)."""
+        per_kernel = {name: len(e.jit_cache)
+                      for name, e in self.pointer_to_symbol.items()}
+        return {
+            "capacity": self.jit_cache_capacity,
+            "entries": sum(per_kernel.values()),
+            "per_kernel": per_kernel,
+            "evictions": sum(e.jit_cache.evictions
+                             for e in self.pointer_to_symbol.values()
+                             if isinstance(e.jit_cache, LRUCache)),
+            "fused_capacity": self.scheduler._fused_cache.capacity,
+            "fused_entries": len(self.scheduler._fused_cache),
+            "fused_evictions": self.scheduler._fused_cache.evictions,
         }
 
     def memory_usage(self) -> Dict[str, Any]:

@@ -40,29 +40,50 @@ into a single **fused device step**:
   (``fence_modulo_magic_dyn``), bit-identical to the per-partition static
   specialization the per-launch path still uses.
 
+* trusted batches fuse too (when the manager jits the trusted path): the
+  serving engines' prefill/decode steps are internally fenced multi-row
+  programs, so N engines sharing one manager have their compatible steps
+  coalesced into **one compiled device step** — the multi-engine fused
+  decode.  Row r simply runs engine r's step; the arena threads through
+  untouched and each engine's per-row guard does the fencing, so the
+  fused program is the sequential composition of the solo steps
+  (bit-identical generations, property-tested in tests/test_system.py).
+
 Non-fusable launches degrade gracefully to the per-launch path:
 
 * NONE      — standalone fast path (§4.2.3): a single tenant gets the
               native binary, no batching machinery on the hot path.
-* trusted   — framework-plane steps (the serving engine's prefill/decode)
-              are internally fenced multi-row launches already; they ride
+* trusted, with ``jit_trusted=False`` — the eager fallback: steps ride
               the same drain for ordering/quarantine but execute eagerly
-              via the per-launch path.
+              and unfused via the per-launch path.
 
 Fairness: requests are taken strictly in arrival order (the manager's
 round-robin cycle order).  A request that cannot join the open batch
 head-of-line blocks its tenant — later ops of that tenant never jump the
 queue — so per-tenant program order is preserved while unrelated tenants
 still fuse.
+
+Cross-cycle lookahead (``lookahead_cycles > 0``): an under-filled fusable
+batch may be *held* across drain-cycle flushes so compatible requests
+from later cycles can join, under a per-request latency budget of
+``lookahead_cycles // tenant_weight`` cycles.  A priority tenant
+(``register_tenant(..., weight=w)``, w > 1) both drains ``w`` ops per
+cycle and shrinks the hold budget of any batch its ops join — weighted
+round-robin that lookahead can never starve (a priority tenant with
+weight >= lookahead_cycles has budget 0, so its ops always dispatch in
+their submission cycle; property-tested).  The
+end-of-drain flush (``drain=True``) executes everything unconditionally,
+so ``run_queued()`` still returns with every result handle filled.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, \
-    Tuple
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional, \
+    Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,15 +92,75 @@ import numpy as np
 from repro.core.fence import FencePolicy, FenceTable
 
 
+def donation_supported() -> bool:
+    """Whether ``jax.jit`` buffer donation does anything on this backend
+    (CPU ignores donation and warns; GPU/TPU alias in place)."""
+    return jax.default_backend() not in ("cpu",)
+
+
+class LRUCache(collections.OrderedDict):
+    """Capacity-bounded dict with least-recently-used eviction.
+
+    The jit/symbol caches (per-kernel specializations, fused-step
+    binaries) grow one entry per (kernel, signature, width) — unbounded
+    under many-kernel churn (ROADMAP: symbol-cache growth).  This keeps
+    dict semantics (the purge paths iterate and ``del`` keys) while
+    refreshing recency on read and evicting the coldest entry past
+    ``capacity``; ``evictions`` counts what was dropped (an evicted
+    binary recompiles on next use — a latency blip, never a correctness
+    event).
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        super().__init__()
+        self.capacity = capacity
+        self.evictions = 0
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        self.move_to_end(key)
+        return val
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.capacity:
+            # not OrderedDict.popitem: its C implementation re-enters the
+            # subclass __getitem__ on the already-removed key
+            super().__delitem__(next(iter(self)))
+            self.evictions += 1
+
+
+def _leaf_sig(leaf: Any) -> Tuple:
+    if isinstance(leaf, (jax.Array, np.ndarray)):
+        return ("a", leaf.shape, leaf.dtype)   # np.dtype: hashable
+    return ("v", leaf)
+
+
 def _arg_signature(args: Sequence[Any]) -> Tuple:
     """Structural signature of post-arena operands: dynamic args by
-    (shape, dtype), static (launch-dim-like) args by value."""
+    (shape, dtype), static (launch-dim-like) args by value.  Pytree
+    operands (the trusted serve steps' params/cache/guard trees) hash by
+    treedef + per-leaf structure, so two engines' steps over the same
+    model shape compare equal and fuse."""
     sig = []
     for a in args:
         if isinstance(a, (jax.Array, np.ndarray)):
             sig.append(("d", a.shape, a.dtype))
-        else:
+        elif isinstance(a, (bool, int, float, complex, str, bytes,
+                            type(None), enum.Enum)):
             sig.append(("s", a))
+        else:
+            leaves, treedef = jax.tree.flatten(a)
+            sig.append(("t", treedef, tuple(_leaf_sig(l) for l in leaves)))
     return tuple(sig)
 
 
@@ -103,6 +184,13 @@ class LaunchRequest:
     #: callers read it after the drain — how the serving engine gets its
     #: step logits back through the shared scheduler)
     result: Any = dataclasses.field(default=None, repr=False)
+    #: trusted entries fuse only when the manager jits the trusted path
+    #: (set at launch time from ``manager.jit_trusted``): fusing means
+    #: tracing N steps into one binary, which the eager fallback must not
+    trusted_fusable: bool = False
+    #: scheduler drain-cycle stamp, set at submit (-1 = never submitted,
+    #: i.e. executed directly through the per-launch path)
+    submit_cycle: int = dataclasses.field(default=-1, repr=False)
 
     _sig: Optional[Tuple] = dataclasses.field(default=None, repr=False)
 
@@ -115,7 +203,7 @@ class LaunchRequest:
     @property
     def fusable(self) -> bool:
         if getattr(self.entry, "trusted", False):
-            return False   # internally-fenced engine steps run standalone
+            return self.trusted_fusable
         return self.policy in (FencePolicy.BITWISE, FencePolicy.CHECK,
                                FencePolicy.MODULO)
 
@@ -143,7 +231,18 @@ class SchedulerStats:
     batched_launches: int = 0       # launches that rode in fused steps
     check_steps: int = 0            # dispatches through the CHECK commit path
     max_batch_width: int = 0
+    #: launches that fused *across* drain cycles: dispatched in a width>1
+    #: step at a later cycle than they were submitted (the lookahead win)
+    lookahead_fused: int = 0
+    #: queue age (dispatch cycle - submit cycle) summed over dispatched
+    #: scheduler launches, + the sample count backing mean_queue_age
+    queue_age_sum: int = 0
+    age_samples: int = 0
     batch_widths: Deque[int] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096))
+    #: per-launch queue ages of the most recent dispatches (latency-budget
+    #: tests; bounded like batch_widths)
+    queue_ages: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
 
     @property
@@ -174,6 +273,14 @@ class SchedulerStats:
         return self.batched_launches / self.total_launches \
             if self.total_launches else 0.0
 
+    @property
+    def mean_queue_age(self) -> float:
+        """Mean drain cycles a launch waited before dispatch (0.0 when
+        idle or when every launch dispatched in its submission cycle —
+        the no-lookahead invariant)."""
+        return self.queue_age_sum / self.age_samples \
+            if self.age_samples else 0.0
+
     def summary(self) -> Dict[str, float]:
         return {
             "total_launches": float(self.total_launches),
@@ -184,6 +291,8 @@ class SchedulerStats:
             "max_batch_width": float(self.max_batch_width),
             "launches_per_step": self.launches_per_step,
             "fused_fraction": self.fused_fraction,
+            "lookahead_fused": float(self.lookahead_fused),
+            "mean_queue_age": self.mean_queue_age,
         }
 
 
@@ -195,14 +304,26 @@ class BatchedLaunchScheduler:
     cycle and flushes at the end of each cycle.
     """
 
-    def __init__(self, manager, max_fuse: int = 8):
+    def __init__(self, manager, max_fuse: int = 8,
+                 lookahead_cycles: int = 0,
+                 fused_cache_capacity: int = 128):
         if max_fuse < 1:
             raise ValueError("max_fuse must be >= 1")
+        if lookahead_cycles < 0:
+            raise ValueError("lookahead_cycles must be >= 0")
         self.manager = manager
         self.max_fuse = max_fuse
+        #: cross-cycle latency budget: an under-filled fusable batch may
+        #: be held up to this many drain cycles (scaled down by the
+        #: tenants' weights) waiting for compatible requests; 0 restores
+        #: the flush-every-cycle behaviour exactly
+        self.lookahead_cycles = lookahead_cycles
+        self._cycle = 0
         self._pending: List[LaunchRequest] = []
-        # (name, policy, arg-sig, T) -> jitted fused step
-        self._fused_cache: Dict[Tuple, Callable] = {}
+        # (name, policy, arg-sig, T) -> jitted fused step; LRU-bounded
+        # (one binary per signature×width — churny under many kernels)
+        self._fused_cache: Dict[Tuple, Callable] = LRUCache(
+            fused_cache_capacity)
         # ((base, mask), ...) -> device-staged FenceTable (re-staging the
         # same tenant set's rows every flush costs a host->device put);
         # bounded: distinct batch compositions are combinatorial in the
@@ -220,6 +341,7 @@ class BatchedLaunchScheduler:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: LaunchRequest) -> None:
+        req.submit_cycle = self._cycle
         self._pending.append(req)
 
     @property
@@ -248,23 +370,51 @@ class BatchedLaunchScheduler:
         for key in [k for k in self._table_cache if bounds in k[0]]:
             del self._table_cache[key]
 
-    def flush(self) -> None:
-        """Coalesce and execute everything pending, oldest first."""
-        while self._pending:
-            batch, self._pending = self._take_batch(self._pending)
-            self._execute(batch)
+    def flush(self, drain: bool = True) -> None:
+        """Coalesce and execute pending requests, oldest first.
+
+        ``drain=False`` is the manager's cycle-boundary flush under
+        lookahead: an under-filled fusable batch whose members still have
+        latency budget (see ``lookahead_cycles``) is **held** so
+        compatible requests from later drain cycles can join.  A held
+        tenant head-of-line blocks its own later requests for the rest of
+        the flush (program order), but unrelated tenants keep executing.
+        ``drain=True`` (the end-of-drain flush, and the only mode when
+        lookahead is off) executes everything unconditionally, so
+        ``run_queued()`` always returns with every result handle filled.
+        """
+        work, self._pending = self._pending, []
+        held: List[LaunchRequest] = []
+        blocked: Set[str] = set()
+        while work:
+            # requests of held tenants defer in submission order
+            while work and work[0].tenant_id in blocked:
+                held.append(work.pop(0))
+            if not work:
+                break
+            batch, work = self._take_batch(work, blocked)
+            if not drain and self._should_hold(batch):
+                held.extend(batch)
+                blocked.update(r.tenant_id for r in batch)
+            else:
+                self._execute(batch)
+        self._pending = held
+        self._cycle += 1
 
     # ------------------------------------------------------------------ #
     def _take_batch(
-        self, pending: List[LaunchRequest]
+        self, pending: List[LaunchRequest],
+        blocked: Iterable[str] = (),
     ) -> Tuple[List[LaunchRequest], List[LaunchRequest]]:
         """Oldest request opens the batch; later compatible requests join
         unless their tenant is head-of-line blocked (an earlier op of the
-        same tenant was deferred — joining would reorder that tenant)."""
+        same tenant was deferred — joining would reorder that tenant).
+        ``blocked`` seeds the block set (tenants already held by the
+        lookahead pass this flush)."""
         head = pending[0]
         batch = [head]
         rest: List[LaunchRequest] = []
-        blocked = set()
+        blocked = set(blocked)
         for req in pending[1:]:
             if (head.fusable and req.fusable
                     and len(batch) < self.max_fuse
@@ -276,14 +426,56 @@ class BatchedLaunchScheduler:
                 blocked.add(req.tenant_id)
         return batch, rest
 
+    def _should_hold(self, batch: List[LaunchRequest]) -> bool:
+        """Cross-cycle lookahead policy: hold an under-filled fusable
+        batch while every member still has latency budget (see
+        :meth:`_hold_budget`).  A priority tenant's op in the batch
+        shrinks the whole batch's wait, so a batch containing a
+        zero-budget tenant always dispatches in its submission cycle
+        (lookahead can never starve it)."""
+        if self.lookahead_cycles <= 0 or len(batch) >= self.max_fuse:
+            return False
+        if not batch[0].fusable:
+            return False
+        budget = min(self._hold_budget(r.tenant_id) for r in batch)
+        if budget <= 0:
+            return False
+        oldest = max(self._cycle - r.submit_cycle for r in batch)
+        return oldest < budget
+
+    def _hold_budget(self, tenant_id: str) -> int:
+        """Max drain cycles a tenant's op may wait for a fuller batch:
+        ``lookahead_cycles // weight`` for best-effort tenants, forced to
+        0 once a *priority* tenant (weight > 1) reaches
+        ``weight >= lookahead_cycles`` — without the cutoff,
+        ``weight == lookahead_cycles`` would leave a budget of 1 and a
+        documented-zero-latency tenant could still wait one cycle.
+        Weight-1 tenants always keep the full ``lookahead_cycles``
+        budget (they are the ones lookahead exists for)."""
+        w = max(self.manager.weight_of(tenant_id), 1)
+        if w == 1:
+            return self.lookahead_cycles
+        if w >= self.lookahead_cycles:
+            return 0
+        return self.lookahead_cycles // w
+
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:
         self.dispatch_log.append(tuple(r.tenant_id for r in batch))
+        for r in batch:
+            if r.submit_cycle >= 0:
+                age = self._cycle - r.submit_cycle
+                self.stats.queue_age_sum += age
+                self.stats.age_samples += 1
+                self.stats.queue_ages.append(age)
+                if age > 0 and len(batch) > 1:
+                    self.stats.lookahead_fused += 1
         if getattr(batch[0].entry, "trusted", False):
-            # internally-fenced engine step (always width 1): the per-launch
-            # path executes it eagerly, whatever its nominal policy
-            self.stats.single_steps += 1
-            self.manager._execute_request(batch[0])
+            # internally-fenced engine step: jitted width-N fusion when the
+            # manager compiles the trusted path, else the eager width-1
+            # per-launch fallback (trusted_fusable=False keeps eager
+            # batches at width 1)
+            self._execute_trusted(batch)
             return
         if batch[0].policy is FencePolicy.CHECK:
             # CHECK always takes the attributing commit path (any width):
@@ -344,6 +536,92 @@ class BatchedLaunchScheduler:
         self.stats.batched_launches += T
         self.stats.max_batch_width = max(self.stats.max_batch_width, T)
         self.stats.batch_widths.append(T)
+
+    # ------------------------------------------------------------------ #
+    def _execute_trusted(self, batch: List[LaunchRequest]) -> None:
+        """Trusted (framework-plane) dispatch.  Width 1 goes through the
+        manager's per-launch path (jitted there when ``jit_trusted``);
+        width N traces every engine's step into one compiled device step —
+        the multi-engine fused decode.  The arena threads through rows
+        untouched (trusted steps carry their own internal fences), so the
+        fused program is exactly the sequential composition of the solo
+        steps."""
+        mgr = self.manager
+        T = len(batch)
+        if T == 1:
+            self.stats.single_steps += 1
+            mgr._execute_request(batch[0])
+            return
+        head = batch[0]
+        entry = head.entry
+        key = ("trusted", *head.signature, T)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            fn = self._build_fused_trusted(entry, len(head.call_args), T)
+            self._fused_cache[key] = fn
+        donate = tuple(i for i in getattr(entry, "donate_argnums", ())
+                       if i > 0)
+        donated = tuple(tuple(r.call_args[i - 1] for i in donate)
+                        for r in batch)
+        rest = tuple(tuple(a for j, a in enumerate(r.call_args, start=1)
+                           if j not in donate)
+                     for r in batch)
+
+        t0 = time.perf_counter_ns()
+        if entry.pool_arena is None:
+            new_arena, outs = fn(mgr.arena.buf, donated, rest)
+        else:
+            pool = mgr.arenas[entry.pool_arena]
+            new_arena, new_pool, outs = fn(mgr.arena.buf, pool.buf,
+                                           donated, rest)
+            pool.buf = new_pool
+        mgr.arena.buf = new_arena
+        mgr.launch_stats.dispatch_ns.append(time.perf_counter_ns() - t0)
+        for req, out in zip(batch, outs):
+            req.result = out
+        self._record_step(T)
+
+    def _build_fused_trusted(self, entry, n_args: int, T: int) -> Callable:
+        """One compiled binary per (trusted kernel, operand signature,
+        width).  Rows execute in submission order inside the trace,
+        threading the arena — and the entry's pool arena, when declared —
+        row to row, so engine r+1's step sees engine r's pool updates
+        exactly as in the per-launch drain.  The donated-operand split
+        lets each row's consumed buffers alias in place on backends that
+        support donation, while shared operands (the per-step guard,
+        reused every step) are never donated."""
+        donate = tuple(i for i in getattr(entry, "donate_argnums", ())
+                       if i > 0)
+
+        def row_args(donated, rest, r):
+            it_d, it_r = iter(donated[r]), iter(rest[r])
+            return [next(it_d) if j in donate else next(it_r)
+                    for j in range(1, n_args + 1)]
+
+        if entry.pool_arena is None:
+            def fused(arena, donated, rest):
+                outs = []
+                for r in range(T):
+                    arena, out = entry.fn(arena,
+                                          *row_args(donated, rest, r))
+                    outs.append(out)
+                return arena, tuple(outs)
+        else:
+            def fused(arena, pool, donated, rest):
+                outs = []
+                for r in range(T):
+                    arena, pool, out = entry.fn(
+                        arena, pool, *row_args(donated, rest, r))
+                    outs.append(out)
+                return arena, pool, tuple(outs)
+
+        if not donation_supported():
+            dn = ()
+        elif entry.pool_arena is not None:
+            dn = (0, 1, 2)
+        else:
+            dn = (0, 1)
+        return jax.jit(fused, donate_argnums=dn)
 
     # ------------------------------------------------------------------ #
     def _execute_check(self, batch: List[LaunchRequest]) -> None:
@@ -477,21 +755,25 @@ class BatchedLaunchScheduler:
 
 
 def round_robin_interleave(
-    by_tenant: Dict[str, List[Any]], limit: Optional[int] = None
+    by_tenant: Dict[str, List[Any]], limit: Optional[int] = None,
+    weights: Optional[Dict[str, int]] = None,
 ) -> List[Any]:
-    """Strict round-robin interleave across per-tenant FIFO queues — the
+    """Weighted round-robin interleave across per-tenant FIFO queues — the
     drain-cycle selection order of §4.2.4, factored out so the serving
     engine's batch-row assignment and the manager's queue drain share one
     fairness policy.  Tenants are visited in sorted-id order; each cycle
-    takes at most one item per tenant; ``limit`` caps the result.
+    takes up to ``weights[t]`` items per tenant (default 1 — strict
+    round-robin); ``limit`` caps the result.
     """
     queues = {t: list(q) for t, q in sorted(by_tenant.items()) if q}
+    weights = weights or {}
     order: List[Any] = []
     while queues and (limit is None or len(order) < limit):
         for t in sorted(queues):
-            if limit is not None and len(order) >= limit:
-                break
-            order.append(queues[t].pop(0))
+            for _ in range(min(max(weights.get(t, 1), 1), len(queues[t]))):
+                if limit is not None and len(order) >= limit:
+                    break
+                order.append(queues[t].pop(0))
             if not queues[t]:
                 del queues[t]
     return order

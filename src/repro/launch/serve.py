@@ -8,17 +8,27 @@ allocator, bounds table and quarantine lifecycle that fence raw kernel
 launches).  The engine owns **no fence table and no row-assignment
 policy of its own**:
 
-* every prefill/decode step is registered as a *trusted kernel* and
-  submitted as a :class:`~repro.core.scheduler.LaunchRequest`, enqueued
-  and drained by the shared :class:`BatchedLaunchScheduler` — serving
-  traffic and raw tenant launches ride one dispatch layer;
+* every prefill/decode step is registered as a *trusted kernel*
+  (built in :mod:`repro.launch.steps`) and submitted as a
+  :class:`~repro.core.scheduler.LaunchRequest`, enqueued and drained by
+  the shared :class:`BatchedLaunchScheduler` — serving traffic and raw
+  tenant launches ride one dispatch layer.  Steps **compile**: the
+  manager's jitted trusted path runs each step as one device program
+  (params/cache/guard are operands, never closure constants), with the
+  eager path kept as a bit-identical ``--no-jit`` fallback;
+* N engines may **share one manager** (``manager=`` / ``name=``): their
+  tenants partition one global slot space, and the scheduler coalesces
+  compatible steps from different engines into one fused device step —
+  the multi-engine fused decode (:func:`serve_engines` drives the
+  lockstep; generations stay bit-identical to solo runs);
 * per-row fence params come from :meth:`GuardianManager.fence_table`
   (bitwise rows + the MODULO magic row table), gathered through a
   tenant-id column: batch row b belongs to tenant t(b), so the slot index
   of row b is fenced with t(b)'s bounds.  Even a corrupted scheduler or a
   forged slot id can only wrap inside the owning tenant's slots;
 * batch-row selection uses the scheduler's shared
-  :func:`~repro.core.scheduler.round_robin_interleave` fairness policy;
+  :func:`~repro.core.scheduler.round_robin_interleave` fairness policy,
+  weighted by the tenants' manager-side round-robin shares;
 * tenants may carry **per-tenant fence policies** (a CHECK canary beside
   MODULO production tenants): the step gathers a per-row policy-code
   column and dispatches per element (``fence.apply_fence_mixed``);
@@ -40,7 +50,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,12 +62,19 @@ from repro.core.manager import GuardianManager
 from repro.core.quarantine import QuarantinePolicy, TenantState
 from repro.core.scheduler import round_robin_interleave
 from repro.core.violations import NUM_KINDS, ViolationKind
+from repro.launch.steps import (
+    build_trusted_serve_steps,
+    join_cache_pool,
+    split_cache_pool,
+)
 from repro.models import get_model
 from repro.models.guard import GuardSpec
 
-#: The engine's own manager tenant: owns the scratch half of the pool where
-#: idle batch rows park (their fenced writes must never land in a tenant's
+#: The engine's own manager tenant: owns the scratch partition where idle
+#: batch rows park (their fenced writes must never land in a tenant's
 #: slots) and is the tenant id under which step launches are enqueued.
+#: Engines sharing a manager suffix it (``__scratch.e1``, ...) so each
+#: engine gets its own scratch partition and launch queue.
 ENGINE_TENANT = "__scratch"
 
 
@@ -71,55 +88,157 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _RunState:
+    """In-flight state of one engine's run: the lockstep driver
+    (:func:`serve_engines`) enqueues one step per engine per drain."""
+
+    rows: List[Request]
+    slot_ids: np.ndarray
+    meta: Any                      # cache meta (pool lives on the manager)
+    guard: Optional[GuardSpec]
+    batch: Optional[Dict]          # prefill inputs; None once prefilled
+    remaining: int
+    nxt: Optional[jax.Array] = None
+    #: any CHECK-policy row in this run? (policies are fixed per tenant at
+    #: registration, so per-step attribution can skip entirely otherwise)
+    has_check: bool = False
+    #: per-step next-token arrays, kept on device until _finalize — the
+    #: decode loop never syncs, tokens materialize in one transfer
+    trail: List[jax.Array] = dataclasses.field(default_factory=list)
+    #: decode-step LaunchRequest signature, computed once per run — the
+    #: operand structure (params/cache/guard trees) is invariant across a
+    #: run's decode steps, so later requests skip the pytree flatten on
+    #: the scheduler hot path
+    decode_sig: Optional[tuple] = None
+
+
+def make_shared_manager(n_engines: int, max_batch: int = 8,
+                        policy: FencePolicy = FencePolicy.BITWISE,
+                        **kw) -> GuardianManager:
+    """A GuardianManager sized so ``n_engines`` engines (each with its
+    scratch partition plus up to one pool's worth of tenant slots) share
+    one global slot space — the multi-engine fused-decode configuration.
+    A guarded shared engine always fences, even while one tenant runs
+    (``standalone_fast_path=False``), so generations are bit-identical
+    solo vs shared."""
+    return GuardianManager(
+        total_slots=n_engines * 2 * _pow2(max_batch), policy=policy,
+        standalone_fast_path=False, **kw)
+
+
 class ServeEngine:
     """Continuous-batching (fixed-slot) multi-tenant server.
 
     A thin client of its :class:`GuardianManager`: request bookkeeping and
     operand marshalling live here; partitioning, fencing rows, launch
-    scheduling and quarantine all live on the manager side.
+    scheduling, step compilation and quarantine all live on the manager
+    side.  Pass ``manager=`` (see :func:`make_shared_manager`) to co-host
+    several engines on one manager — their compatible steps fuse into one
+    device step per lockstep drain (:func:`serve_engines`).
     """
 
     def __init__(self, cfg, *, max_batch: int = 8, max_len: int = 256,
                  policy: FencePolicy = FencePolicy.BITWISE,
                  guard: bool = True, seed: int = 0,
-                 quarantine_policy: Optional[QuarantinePolicy] = None):
+                 quarantine_policy: Optional[QuarantinePolicy] = None,
+                 manager: Optional[GuardianManager] = None,
+                 name: Optional[str] = None,
+                 jit_steps: bool = True):
         self.cfg = cfg
         self.api = get_model(cfg)
-        self.policy = policy
         self.guard_enabled = guard
         self.max_batch = max_batch
         self.max_len = max_len
         self.params = self.api.init(jax.random.PRNGKey(seed))
-        # pool = 2x the batch slots: the upper half is the engine's scratch
-        # partition where idle batch rows park.
-        n_slots = 2 * _pow2(max_batch)
-        if cfg.family == "ssm":
-            self.cache = self.api.init_cache(max_batch, slots=n_slots)
+        if manager is None:
+            # pool = 2x the batch slots: the upper half is the engine's
+            # scratch partition where idle batch rows park.
+            # standalone_fast_path=False: a guarded engine always fences,
+            # even with a single tenant (bit-identical solo vs shared).
+            n_slots = 2 * _pow2(max_batch)
+            self.manager = GuardianManager(
+                total_slots=n_slots, policy=policy,
+                standalone_fast_path=False,
+                quarantine_policy=quarantine_policy,
+                jit_trusted=jit_steps)
+            scratch_slots = n_slots // 2
+            self.engine_tenant = ENGINE_TENANT
         else:
-            self.cache = self.api.init_cache(max_batch, max_len,
-                                             dtype=jnp.float32,
-                                             slots=n_slots)
-        slots = self._pool_slots()
-        # The manager owns the pool's partitioning and the launch path.
-        # standalone_fast_path=False: a guarded engine always fences, even
-        # with a single tenant (bit-identical generations solo vs shared).
-        self.manager = GuardianManager(
-            total_slots=slots, policy=policy,
-            standalone_fast_path=False,
-            quarantine_policy=quarantine_policy)
-        self._client = self.manager.register_tenant(ENGINE_TENANT,
-                                                    slots // 2)
-        self._scratch = self.manager.bounds.lookup(ENGINE_TENANT)
+            # fencing, containment and step compilation are manager-wide
+            # concerns: refuse per-engine overrides instead of silently
+            # ignoring them (configure them on the shared manager)
+            if (policy is not FencePolicy.BITWISE
+                    or quarantine_policy is not None or not jit_steps):
+                raise ValueError(
+                    "policy/quarantine_policy/jit_steps are owned by the "
+                    "shared GuardianManager; configure them on the "
+                    "manager (see make_shared_manager) instead of on a "
+                    "co-hosted ServeEngine")
+            self.manager = manager
+            n_slots = manager.bounds.total_slots
+            scratch_slots = _pow2(max_batch)
+            policy = manager.policy
+            if name is None:
+                name = "e%d" % sum(
+                    1 for t in manager.bounds.tenants()
+                    if t.startswith(ENGINE_TENANT))
+            self.engine_tenant = f"{ENGINE_TENANT}.{name}"
+        self.policy = policy
+        # ONE pool for the manager's full slot space: the pool tensors are
+        # adopted by the manager as a PoolArena (the manager is the only
+        # entity with device access), so co-hosted engines of the same
+        # model shape share one KV pool — globally-partitioned slot ids
+        # address it directly through the shared fence table, and the
+        # per-engine footprint does not grow with the engine count.
+        pool_key = (f"{cfg.name}:{cfg.family}:{cfg.n_layers}x"
+                    f"{cfg.d_model}v{cfg.vocab}:s{n_slots}:l{max_len}")
+        self._steps = build_trusted_serve_steps(self.api, pool_key)
+        # A later co-hosted engine adopts the already-registered pool:
+        # build its cache with a single-slot pool instead (the meta half —
+        # slot ids, seq lens, page tables — is slot-count independent), so
+        # the dominant allocation happens once per pool, not once per
+        # engine.
+        cache_slots = 1 if self._steps.pool_name in self.manager.arenas \
+            else n_slots
+        if cfg.family == "ssm":
+            cache = self.api.init_cache(max_batch, slots=cache_slots)
+        else:
+            cache = self.api.init_cache(max_batch, max_len,
+                                        dtype=jnp.float32,
+                                        slots=cache_slots)
+        pool, self._meta = split_cache_pool(cache)
+        self._client = self.manager.register_tenant(self.engine_tenant,
+                                                    scratch_slots)
+        self._scratch = self.manager.bounds.lookup(self.engine_tenant)
+        #: tenants served through THIS engine (registered or submitted
+        #: here) — scopes the eviction-time pool scrub to the engine that
+        #: owns the evicted tenant's rows
+        self._tenants: set = set()
         self.manager.quarantine.subscribe(self._on_transition)
-        self._register_step_kernels()
+        # idempotent: a co-hosted engine adopts the existing pool (its
+        # single-slot throwaway tensors are dropped before any write)
+        self._pool = self._steps.register(self.manager, pool)
         self.rejected: List[int] = []     # rids dropped by quarantine
         self._requests: List[Request] = []
         self._rid = 0
         self.decode_steps = 0
-        # evictions fired *during* run() scrub the stale self.cache; the
-        # live local cache is re-scrubbed at run()-end from this list
+        # evictions fired *during* run() must survive the run-end cache
+        # commit: the committed cache is re-scrubbed from this list
         self._in_run = False
         self._pending_scrubs: List[tuple] = []
+
+    @property
+    def cache(self):
+        """The engine's full cache view: the manager-owned shared pool
+        joined with this engine's per-batch meta.  Assignment splits the
+        value back (pool half commits to the shared arena — visible to
+        every co-hosted engine)."""
+        return join_cache_pool(self._pool.buf, self._meta)
+
+    @cache.setter
+    def cache(self, value):
+        self._pool.buf, self._meta = split_cache_pool(value)
 
     def _pool_slots(self) -> int:
         c = self.cache
@@ -128,23 +247,6 @@ class ServeEngine:
         if hasattr(c, "pools"):
             return next(iter(c.pools.values())).shape[1]
         return c.kv.k.shape[1]
-
-    def _register_step_kernels(self) -> None:
-        """The engine's steps as trusted manager kernels: internally fenced
-        (per-row GuardSpec from the manager's fence table), executed
-        eagerly by the per-launch path, enqueued/drained like any launch.
-        The flat manager arena is threaded untouched — the serve pool
-        tensors ride in the operands and return through the result."""
-        api, params = self.api, self.params
-
-        def prefill_step(arena, cache, batch, guard):
-            return arena, api.prefill(params, cache, batch, guard=guard)
-
-        def decode_step(arena, cache, toks, guard):
-            return arena, api.decode(params, cache, toks, guard=guard)
-
-        self.manager.register_trusted_kernel("serve.prefill", prefill_step)
-        self.manager.register_trusted_kernel("serve.decode", decode_step)
 
     # ------------------------------------------------------------------ #
     # Tenant lifecycle (all state on the manager)                        #
@@ -159,12 +261,16 @@ class ServeEngine:
         return self.manager.quarantine
 
     def register_tenant(self, name: str, slots: int,
-                        policy: Optional[FencePolicy] = None):
+                        policy: Optional[FencePolicy] = None,
+                        weight: int = 1):
         """Carve a pool partition for ``name``; returns the Partition.
 
         ``policy`` optionally overrides the engine default for this
-        tenant's rows (per-row mixed fencing)."""
-        self.manager.register_tenant(name, slots, policy=policy)
+        tenant's rows (per-row mixed fencing); ``weight`` is the tenant's
+        weighted-round-robin share of batch rows."""
+        self.manager.register_tenant(name, slots, policy=policy,
+                                     weight=weight)
+        self._tenants.add(name)
         return self.manager.bounds.lookup(name)
 
     def quarantine_tenant(self, name: str, reason: str = "") -> List[int]:
@@ -188,17 +294,24 @@ class ServeEngine:
         """Manager-side quarantine events propagate into the serving plane
         (including transitions the engine never initiated, e.g. a
         ViolationLog threshold crossing from raw-launch traffic)."""
-        if tenant_id == ENGINE_TENANT:
+        if tenant_id.startswith(ENGINE_TENANT):
             return
-        if state is TenantState.EVICTED:
-            # fires before partition reclamation: bounds still resolvable
+        if state is TenantState.EVICTED and tenant_id in self._tenants:
+            # fires before partition reclamation: bounds still resolvable.
+            # Scoped to the owning engine: only the engine that served the
+            # tenant ever wrote its slots, and with a shared pool the
+            # co-hosted engines' subscriptions would otherwise each repeat
+            # the same whole-pool scrub.  This zeroing is the KV-leak
+            # barrier — the reclaimed slots must hand over empty.
             part = self.manager.bounds.lookup(tenant_id)
-            self.cache = _scrub_slots(self.cache, part.base, part.size)
             if self._in_run:
-                # run() holds a newer local cache that will overwrite
-                # self.cache at run-end — it must be scrubbed too, or the
-                # evicted tenant's KV leaks into the reclaimed partition
+                # run() holds a newer local cache that overwrites
+                # self.cache at run-end (and, under donation, may have
+                # consumed these very buffers) — scrub the committed
+                # cache at run-end instead
                 self._pending_scrubs.append((part.base, part.size))
+            else:
+                self.cache = _scrub_slots(self.cache, part.base, part.size)
         if not state.admissible:
             dropped = [r.rid for r in self._requests
                        if r.tenant == tenant_id and not r.done]
@@ -209,6 +322,9 @@ class ServeEngine:
     def submit(self, tenant: str, prompt: np.ndarray) -> int:
         self.manager.quarantine.check_admission(tenant, "submit")
         part = self.manager.bounds.lookup(tenant)
+        # a manager-registered tenant becomes this engine's to serve (and
+        # therefore to scrub on eviction) the moment it submits here
+        self._tenants.add(tenant)
         used = {r.slot for r in self._requests if not r.done
                 and r.tenant == tenant}
         free = [s for s in range(part.base, part.end) if s not in used]
@@ -229,7 +345,8 @@ class ServeEngine:
         table, row_of = self.manager.fence_table()
         # tenant-id column: batch row b -> fence-table row of its tenant
         # (idle rows park in the engine's scratch partition)
-        cols = np.full((self.max_batch,), row_of[ENGINE_TENANT], np.int32)
+        cols = np.full((self.max_batch,), row_of[self.engine_tenant],
+                       np.int32)
         pol = np.full((self.max_batch,), self.policy.code, np.int32)
         for i, r in enumerate(rows):
             if r is not None:
@@ -255,9 +372,10 @@ class ServeEngine:
         )
 
     def _select_rows(self) -> List[Request]:
-        """Batch-row assignment through the scheduler's shared round-robin
-        fairness policy (§4.2.4).  Quarantined tenants' requests never
-        occupy a row — their slots re-route to admissible co-tenants."""
+        """Batch-row assignment through the scheduler's shared weighted
+        round-robin fairness policy (§4.2.4).  Quarantined tenants'
+        requests never occupy a row — their slots re-route to admissible
+        co-tenants."""
         by_tenant: Dict[str, List[Request]] = {}
         for r in self._requests:
             if r.done:
@@ -265,7 +383,9 @@ class ServeEngine:
             state = self.manager.quarantine.state_of(r.tenant)
             if state is None or state.admissible:
                 by_tenant.setdefault(r.tenant, []).append(r)
-        return round_robin_interleave(by_tenant, self.max_batch)
+        weights = {t: self.manager.weight_of(t) for t in by_tenant}
+        return round_robin_interleave(by_tenant, self.max_batch,
+                                      weights=weights)
 
     def _attribute(self, rows: List[Request],
                    slot_ids: np.ndarray) -> None:
@@ -297,20 +417,18 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
         """Prefill all pending, then decode until done/limit.  Every step
-        is a LaunchRequest drained by the manager's scheduler."""
+        is a LaunchRequest drained by the manager's scheduler.  Engines
+        sharing a manager should run through :func:`serve_engines`
+        instead, so their steps fuse."""
+        return serve_engines([self], max_new_tokens=max_new_tokens)[0]
+
+    # -- lockstep phases (driven by serve_engines) --------------------- #
+    def _begin(self, max_new_tokens: int) -> Optional[_RunState]:
         rows = self._select_rows()
         if not rows:
-            return {}
+            return None
         self._in_run = True
-        try:
-            return self._run_rows(rows, max_new_tokens)
-        finally:
-            self._in_run = False
-
-    def _run_rows(self, rows: List[Request],
-                  max_new_tokens: int) -> Dict[int, List[int]]:
         B = self.max_batch
-        # build padded prompt batch
         plen = max(len(r.prompt) for r in rows)
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(rows):
@@ -318,8 +436,7 @@ class ServeEngine:
         slot_ids = np.full((B,), self._scratch.base, np.int32)
         for i, r in enumerate(rows):
             slot_ids[i] = r.slot
-        cache = dataclasses.replace(
-            self._cache_with_slots(jnp.asarray(slot_ids)))
+        meta = self._meta_with_slots(jnp.asarray(slot_ids))
         guard = self._guard_for_rows(rows + [None] * (B - len(rows)))
 
         if self.cfg.family == "encdec":
@@ -328,19 +445,54 @@ class ServeEngine:
                 "tgt": jnp.asarray(toks)}
         else:
             batch = {"tokens": jnp.asarray(toks)}
+        has_check = any(
+            self.manager.policy_of(r.tenant) is FencePolicy.CHECK
+            for r in rows)
+        return _RunState(rows=rows, slot_ids=slot_ids, meta=meta,
+                         guard=guard, batch=batch,
+                         remaining=max_new_tokens, has_check=has_check)
 
-        cache, logits = self._step("serve.prefill", (cache, batch, guard),
-                                   rows, slot_ids)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for _ in range(max_new_tokens):
-            for i, r in enumerate(rows):
-                r.generated.append(int(nxt[i]))
-            cache, logits = self._step("serve.decode", (cache, nxt, guard),
-                                       rows, slot_ids)
-            self.decode_steps += 1
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.cache = cache
-        # a mid-run eviction scrubbed the stale cache; re-apply to the one
+    def _enqueue_step(self, st: _RunState):
+        """Attribute CHECK rows, then enqueue this engine's next step as a
+        LaunchRequest (the request doubles as the result handle).  The
+        manager drain — shared with every co-hosted engine — happens in
+        :func:`serve_engines`."""
+        if st.has_check:
+            self._attribute(st.rows, st.slot_ids)
+        if st.batch is not None:       # prefill
+            return self._client.launch_kernel(
+                self._steps.prefill_name,
+                args=(self.params, st.meta, st.batch, st.guard))
+        st.trail.append(st.nxt)        # stays on device until _finalize
+        req = self._client.launch_kernel(
+            self._steps.decode_name,
+            args=(self.params, st.meta, st.nxt, st.guard))
+        if st.decode_sig is None:
+            st.decode_sig = req.signature
+        else:
+            req._sig = st.decode_sig
+        return req
+
+    def _finish_step(self, st: _RunState, req) -> bool:
+        """Consume the drained step's result; True while decodes remain.
+        The step sampled on device — no logits, no host sync here (the
+        pool half of the cache was committed by the manager)."""
+        st.meta, st.nxt = req.result
+        if st.batch is not None:
+            st.batch = None            # prefilled; decodes follow
+            return st.remaining > 0
+        self.decode_steps += 1
+        st.remaining -= 1
+        return st.remaining > 0
+
+    def _finalize(self, st: _RunState) -> Dict[int, List[int]]:
+        self._meta = st.meta           # pool already lives on the manager
+        # one transfer materializes every step's sampled tokens
+        if st.trail:
+            toks = np.asarray(jnp.stack(st.trail))       # (steps, B)
+            for i, r in enumerate(st.rows):
+                r.generated.extend(int(t) for t in toks[:, i])
+        # a mid-run eviction was deferred to here: re-apply to the cache
         # we just committed (zeroing is idempotent, nothing re-registers
         # inside a single-threaded run)
         for base, size in self._pending_scrubs:
@@ -350,26 +502,15 @@ class ServeEngine:
         # dropped + recorded in self.rejected: they must not also be
         # reported as served (their clamped generations are discarded)
         out: Dict[int, List[int]] = {}
-        for r in rows:
+        for r in st.rows:
             state = self.manager.quarantine.state_of(r.tenant)
             if state is None or state.admissible:
                 r.done = True
                 out[r.rid] = r.generated
         return out
 
-    def _step(self, kernel: str, args, rows: List[Request],
-              slot_ids: np.ndarray):
-        """One engine step through the unified path: attribute CHECK rows,
-        enqueue the launch, drain the manager (scheduler flush + the
-        quarantine poll that consumes the attribution), read the result
-        handle."""
-        self._attribute(rows, slot_ids)
-        req = self._client.launch_kernel(kernel, args=args)
-        self.manager.run_queued()
-        return req.result
-
-    def _cache_with_slots(self, slot_ids):
-        c = self.cache
+    def _meta_with_slots(self, slot_ids):
+        c = self._meta
         if hasattr(c, "slot_ids"):
             return dataclasses.replace(c, slot_ids=slot_ids)
         if hasattr(c, "kv"):   # hybrid / encdec
@@ -379,6 +520,37 @@ class ServeEngine:
                 return dataclasses.replace(c, kv=kv, state=st)
             return dataclasses.replace(c, kv=kv)
         return c
+
+
+def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
+                  ) -> List[Dict[int, List[int]]]:
+    """Lockstep driver for engines sharing one GuardianManager: every
+    active engine enqueues its next prefill/decode step, then ONE manager
+    drain dispatches them — compatible steps (same model shape, same
+    phase) fuse into a single compiled device step, so N engines cost one
+    dispatch per lockstep instead of N.  Returns one ``rid -> tokens``
+    dict per engine, in order.  A single-engine call is exactly
+    ``engine.run()``."""
+    if not engines:
+        return []
+    mgr = engines[0].manager
+    if any(e.manager is not mgr for e in engines[1:]):
+        raise ValueError("serve_engines needs engines sharing one "
+                         "GuardianManager (see make_shared_manager)")
+    states = [e._begin(max_new_tokens) for e in engines]
+    try:
+        active = [i for i, s in enumerate(states) if s is not None]
+        while active:
+            reqs = [(i, engines[i]._enqueue_step(states[i]))
+                    for i in active]
+            mgr.run_queued()
+            active = [i for i, req in reqs
+                      if engines[i]._finish_step(states[i], req)]
+        return [engines[i]._finalize(s) if s is not None else {}
+                for i, s in enumerate(states)]
+    finally:
+        for e in engines:
+            e._in_run = False
 
 
 def _pow2(n: int) -> int:
@@ -415,6 +587,12 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--no-guard", action="store_true")
+    ap.add_argument("--no-jit", action="store_true",
+                    help="eager trusted steps (the bit-identical fallback "
+                         "to the compiled step path)")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="co-hosted engines sharing one manager; >1 "
+                         "exercises the multi-engine fused decode")
     ap.add_argument("--policies", default="",
                     help="comma-separated per-tenant fence policies cycled "
                          "across tenants (e.g. 'modulo,check'); empty = "
@@ -424,31 +602,49 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    eng = ServeEngine(cfg, max_batch=8, max_len=256,
-                      guard=not args.no_guard)
+    if args.engines > 1:
+        mgr = make_shared_manager(args.engines, max_batch=8,
+                                  jit_trusted=not args.no_jit)
+        engines = [ServeEngine(cfg, max_batch=8, max_len=256,
+                               guard=not args.no_guard, manager=mgr)
+                   for _ in range(args.engines)]
+    else:
+        engines = [ServeEngine(cfg, max_batch=8, max_len=256,
+                               guard=not args.no_guard,
+                               jit_steps=not args.no_jit)]
     pols = [FencePolicy(p.strip()) for p in args.policies.split(",")
             if p.strip()]
-    per = max(eng._pool_slots() // max(args.tenants, 1) // 2, 2)
-    for t in range(args.tenants):
-        pol = pols[t % len(pols)] if pols else None
-        eng.register_tenant(f"tenant{t}", per, policy=pol)
-        if pol is not None:
-            print(f"tenant{t}: policy={pol.value}")
+    per = max(engines[0]._pool_slots()
+              // max(args.tenants * len(engines), 1) // 2, 2)
+    for e, eng in enumerate(engines):
+        for t in range(args.tenants):
+            pol = pols[t % len(pols)] if pols else None
+            tenant = f"tenant{t}" if len(engines) == 1 \
+                else f"e{e}.tenant{t}"
+            eng.register_tenant(tenant, per, policy=pol)
+            if pol is not None:
+                print(f"{tenant}: policy={pol.value}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        tenant = f"tenant{i % args.tenants}"
-        prompt = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
-        eng.submit(tenant, prompt)
+        t = i % args.tenants
+        for e, eng in enumerate(engines):
+            tenant = f"tenant{t}" if len(engines) == 1 \
+                else f"e{e}.tenant{t}"
+            prompt = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+            eng.submit(tenant, prompt)
     t0 = time.time()
-    out = eng.run(max_new_tokens=args.tokens)
+    outs = serve_engines(engines, max_new_tokens=args.tokens)
     dt = time.time() - t0
-    for rid, toks in sorted(out.items()):
-        print(f"req {rid}: {toks[:8]}...")
-    st = eng.manager.scheduler.stats
-    print(f"{len(out)} requests, {args.tokens} tokens each, "
-          f"{dt:.2f}s total, {eng.decode_steps} decode steps, "
-          f"{int(st.total_launches)} scheduler launches")
-    return out
+    for e, out in enumerate(outs):
+        for rid, toks in sorted(out.items()):
+            print(f"engine{e} req {rid}: {toks[:8]}...")
+    st = engines[0].manager.scheduler.stats
+    n_out = sum(len(o) for o in outs)
+    print(f"{n_out} requests, {args.tokens} tokens each, "
+          f"{dt:.2f}s total, {sum(e.decode_steps for e in engines)} "
+          f"decode steps, {int(st.total_launches)} scheduler launches, "
+          f"mean step width {st.mean_batch_width:.1f}")
+    return outs[0]
 
 
 if __name__ == "__main__":

@@ -252,6 +252,128 @@ _KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32,
               "f8": jnp.float8_e4m3fn}
 
 
+def split_cache_pool(cache) -> Tuple[Dict, Any]:
+    """Split a serve cache pytree into ``(pool, meta)``.
+
+    ``pool`` collects the slot-indexed tensors (KV page pools, SSM state
+    pools, cross-attention pools — everything partitioned on the shared
+    slot axis); ``meta`` is the same cache dataclass with the pool fields
+    stripped (per-batch-row state only: slot ids, seq lens, page tables).
+    The pool half lives as a manager-owned :class:`PoolArena` so N serve
+    engines address ONE slot space; the meta half stays a per-engine step
+    operand.  Inverse of :func:`join_cache_pool`.
+    """
+    if hasattr(cache, "kv"):          # hybrid / encdec: recurse
+        kv_pool, kv_meta = split_cache_pool(cache.kv)
+        pool: Dict[str, Any] = {"kv": kv_pool}
+        repl: Dict[str, Any] = {"kv": kv_meta}
+        if hasattr(cache, "state"):
+            sp, sm = split_cache_pool(cache.state)
+            pool["state"] = sp
+            repl["state"] = sm
+        if hasattr(cache, "cross_k"):
+            pool["cross_k"] = cache.cross_k
+            pool["cross_v"] = cache.cross_v
+            repl["cross_k"] = None
+            repl["cross_v"] = None
+        return pool, dataclasses.replace(cache, **repl)
+    if hasattr(cache, "pools"):
+        return {"pools": cache.pools}, dataclasses.replace(cache, pools={})
+    return {"k": cache.k, "v": cache.v}, \
+        dataclasses.replace(cache, k=None, v=None)
+
+
+def join_cache_pool(pool: Dict, meta) -> Any:
+    """Rebuild the full cache pytree from a pool dict + meta cache."""
+    if hasattr(meta, "kv"):
+        repl: Dict[str, Any] = {"kv": join_cache_pool(pool["kv"], meta.kv)}
+        if hasattr(meta, "state"):
+            repl["state"] = join_cache_pool(pool["state"], meta.state)
+        if hasattr(meta, "cross_k"):
+            repl["cross_k"] = pool["cross_k"]
+            repl["cross_v"] = pool["cross_v"]
+        return dataclasses.replace(meta, **repl)
+    if hasattr(meta, "pools"):
+        return dataclasses.replace(meta, pools=pool["pools"])
+    return dataclasses.replace(meta, k=pool["k"], v=pool["v"])
+
+
+@dataclasses.dataclass(frozen=True)
+class TrustedStepBundle:
+    """The serving engine's prefill/decode as *trusted manager kernels*
+    (see ``GuardianManager.register_trusted_kernel``): internally fenced
+    via a per-row GuardSpec, params/meta/guard passed as operands (never
+    closed over — closures would bake the weights into every compiled
+    step), the flat manager arena AND the shared KV pool arena threaded
+    through (``fn(arena, pool, params, meta, x, guard) ->
+    (arena, pool, (meta, next_ids))``).
+
+    Names carry a pool fingerprint (model shape + pool geometry) so
+    engines serving the *same* model shape share one symbol entry — and
+    therefore one compiled step that the scheduler can fuse across
+    engines, all addressing one manager-owned pool — while engines
+    serving different models stay on separate entries (a shared name with
+    different step functions would silently run the first engine's model
+    for everyone).
+    """
+
+    pool_name: str
+    prefill_name: str
+    decode_name: str
+    prefill_fn: Callable
+    decode_fn: Callable
+
+    def register(self, manager, pool: Dict) -> Any:
+        """Adopt ``pool`` as the manager arena (idempotent — co-hosted
+        engines converge on the first-registered pool) and register both
+        step kernels against it.  Returns the live PoolArena."""
+        arena = manager.register_pool(self.pool_name, pool)
+        manager.register_trusted_kernel(
+            self.prefill_name, self.prefill_fn, pool_arena=self.pool_name)
+        manager.register_trusted_kernel(
+            self.decode_name, self.decode_fn, pool_arena=self.pool_name)
+        return arena
+
+
+def build_trusted_serve_steps(api: ModelAPI,
+                              pool_key: str) -> TrustedStepBundle:
+    """Trusted prefill/decode step functions for one model API.
+
+    The step rebuilds the cache from the manager-threaded pool + the
+    engine's meta operand, runs the model, and splits the result back.
+    Greedy sampling (argmax) happens *inside* the step: the engine's
+    decode loop stays fully asynchronous — per step it receives
+    ``(meta, next_ids)`` and never materializes the ``(B, vocab)``
+    logits on the host.
+
+    ``pool_key`` must identify the pool geometry (slot count, page
+    layout) on top of the model shape — see ``ServeEngine`` — so two
+    engines share a symbol entry iff they can share the pool.
+    """
+
+    def prefill_step(arena, pool, params, meta, batch, guard):
+        cache = join_cache_pool(pool, meta)
+        cache, logits = api.prefill(params, cache, batch, guard=guard)
+        new_pool, new_meta = split_cache_pool(cache)
+        return arena, new_pool, (
+            new_meta, jnp.argmax(logits, -1).astype(jnp.int32))
+
+    def decode_step(arena, pool, params, meta, toks, guard):
+        cache = join_cache_pool(pool, meta)
+        cache, logits = api.decode(params, cache, toks, guard=guard)
+        new_pool, new_meta = split_cache_pool(cache)
+        return arena, new_pool, (
+            new_meta, jnp.argmax(logits, -1).astype(jnp.int32))
+
+    return TrustedStepBundle(
+        pool_name=f"serve.pool[{pool_key}]",
+        prefill_name=f"serve.prefill[{pool_key}]",
+        decode_name=f"serve.decode[{pool_key}]",
+        prefill_fn=prefill_step,
+        decode_fn=decode_step,
+    )
+
+
 def _cache_shape_for(api: ModelAPI, cfg: ModelConfig, shape: ShapeConfig,
                      kv_dtype: str = "bf16"):
     fam = cfg.family

@@ -57,6 +57,18 @@ class GuardSpec:
         return getattr(self, which)
 
 
+# GuardSpec travels as a jit operand on the jitted trusted-step path (the
+# serving engine's prefill/decode launches): the per-space FenceParams are
+# pytree children (themselves splitting array bounds from static ints — see
+# fence._fence_params_flatten), the policy is aux data.
+jax.tree_util.register_pytree_node(
+    GuardSpec,
+    lambda g: ((g.vocab, g.kv, g.state, g.expert, g.page, g.row_policy),
+               g.policy),
+    lambda policy, ch: GuardSpec(policy, *ch),
+)
+
+
 def fence(spec: Optional[GuardSpec], which: str, idx: jax.Array) -> jax.Array:
     """Fence ``idx`` into the partition for index-space ``which``.
 

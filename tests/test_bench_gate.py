@@ -9,7 +9,12 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import Row, compare, parse_rows  # noqa: E402
+from benchmarks.check_regression import (  # noqa: E402
+    Row,
+    compare,
+    parse_rows,
+    trend_csv,
+)
 
 BASELINE = """\
 name,us_per_call,derived
@@ -90,3 +95,81 @@ def test_gate_flags_error_rows():
     base = parse_rows("name,us_per_call,derived\nsched.ERROR,0,boom\n")
     fresh = parse_rows("name,us_per_call,derived\nsched.ERROR,0,boom\n")
     assert any("unusable baseline" in f for f in compare(base, fresh))
+
+
+GATED = """\
+name,us_per_call,derived
+sched.roundrobin.2t,100.00,launches_per_s=1
+fault.detect_latency,2.00,state=quarantined;gate=abs
+fault.cotenant.ratio,1.100,within_10pct=True;gate=skip
+"""
+
+
+def test_gate_skip_rows_never_fire():
+    """gate=skip rows (higher-is-better ratios) are excluded from the
+    us_per_call comparison entirely."""
+    base = parse_rows(GATED)
+    fresh = parse_rows(GATED.replace("1.100", "9.900"))
+    assert compare(base, fresh, normalize="sched.roundrobin.2t") == []
+
+
+def test_gate_abs_rows_compare_unnormalized():
+    """gate=abs rows (deterministic counts — the fault-detection latency)
+    ignore the runner-speed normalization: a slow runner never fires
+    them, a real latency increase always does."""
+    base = parse_rows(GATED)
+    # uniformly 3x slower runner: normalized rows absorb it, the abs row
+    # is a count and did not change -> pass
+    slow = parse_rows(GATED.replace("100.00", "300.00"))
+    assert compare(base, slow, normalize="sched.roundrobin.2t") == []
+    # latency count doubled on an otherwise identical runner -> fail,
+    # even though normalization would have (wrongly) scaled it away if
+    # the reference row had also slowed
+    worse = parse_rows(GATED.replace("2.00", "4.00")
+                            .replace("100.00", "300.00"))
+    fails = compare(base, worse, normalize="sched.roundrobin.2t")
+    assert any("fault.detect_latency" in f for f in fails)
+
+
+def test_gate_median_normalization_absorbs_runner_speed():
+    """--normalize median: a uniformly slower runner cancels via the
+    median fresh/baseline ratio (no single trusted reference row); a
+    subset regression still fires because the bulk anchors the median."""
+    base = parse_rows(BASELINE)
+    assert compare(base, fresh_like(3.0), normalize="median") == []
+    skewed = fresh_like(1.0)
+    skewed["sched.batched.2t"].us_per_call *= 2
+    fails = compare(base, skewed, normalize="median")
+    assert any("sched.batched.2t" in f for f in fails)
+    # every row is gated under median mode (no spared reference row)
+    all_slow = fresh_like(1.0)
+    all_slow["sched.roundrobin.2t"].us_per_call *= 2
+    assert any("sched.roundrobin.2t" in f
+               for f in compare(base, all_slow, normalize="median"))
+
+
+def test_gate_median_ignores_flagged_rows():
+    """gate=skip/abs rows stay out of the median (a huge ratio row must
+    not drag the common-mode estimate)."""
+    from benchmarks.check_regression import median_ratio
+
+    base = parse_rows(GATED)
+    fresh = parse_rows(GATED.replace("1.100", "99.0"))
+    assert median_ratio(base, fresh) == pytest.approx(1.0)
+
+
+def test_trend_csv_reports_ratios():
+    base = parse_rows(BASELINE)
+    fresh = fresh_like(2.0)
+    text = trend_csv(base, fresh, normalize="sched.roundrobin.2t")
+    lines = text.strip().splitlines()
+    assert lines[0] == "name,baseline_us,fresh_us,ratio,normalized_ratio,gate"
+    rows = {ln.split(",")[0]: ln.split(",") for ln in lines[1:]}
+    assert set(rows) == {"sched.roundrobin.2t", "sched.batched.2t",
+                         "sched.modulo.batched.2t"}
+    # raw ratio 2.0, normalized ratio 1.0 (uniform slowdown cancels)
+    assert float(rows["sched.batched.2t"][3]) == pytest.approx(2.0)
+    assert float(rows["sched.batched.2t"][4]) == pytest.approx(1.0)
+    # without a usable reference the normalized column is empty
+    text2 = trend_csv(base, fresh, normalize=None)
+    assert text2.splitlines()[1].split(",")[4] == ""

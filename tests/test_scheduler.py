@@ -1,6 +1,8 @@
 """Batched multi-tenant launch scheduler (Guardian §4.2.3–§4.2.4 at scale):
 cross-tenant isolation of fused batches, coalescing fairness/ordering,
-standalone fast path, and equivalence with the per-launch drain."""
+standalone fast path, equivalence with the per-launch drain, cross-cycle
+lookahead under a latency budget, weighted fairness, and the LRU-bounded
+jit caches."""
 
 import dataclasses
 
@@ -8,11 +10,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import (
     FencePolicy,
     GuardianManager,
     GuardianViolation,
     LaunchRequest,
+    LRUCache,
     SharingMode,
 )
 
@@ -545,6 +549,416 @@ def test_check_policy_unbatched_drain_still_raises():
         mgr.synchronize()
     assert mgr.violations
     assert mgr.violog.counts("a")["scatter"] == 4   # attributed even so
+
+
+# ---------------------------------------------------------------------------
+# Cross-cycle lookahead + weighted fairness
+# ---------------------------------------------------------------------------
+
+
+def test_lookahead_off_is_the_default_and_changes_nothing():
+    """lookahead_cycles=0 (default): every launch dispatches in its
+    submission cycle — mean_queue_age and lookahead_fused stay 0."""
+    mgr, clients = make_manager(3)
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(4)
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+        ptrs.append(p)
+    for _ in range(3):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    st_ = mgr.scheduler.stats
+    assert st_.mean_queue_age == 0.0
+    assert st_.lookahead_fused == 0
+    assert all(a == 0 for a in st_.queue_ages)
+
+
+def test_lookahead_fuses_across_cycles_exact_stats():
+    """2 tenants x 2 compatible ops, lookahead=1: the first cycle's
+    width-2 batch is held, the second cycle's ops join, and ONE width-4
+    step dispatches — with exactly the two held launches counted as
+    lookahead_fused and mean_queue_age = (1+1+0+0)/4."""
+    mgr, clients = make_manager(2, lookahead_cycles=1)
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(4)
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+        ptrs.append(p)
+    mgr.synchronize()
+    for _ in range(2):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    st_ = mgr.scheduler.stats
+    assert st_.fused_steps == 1 and list(st_.batch_widths) == [4]
+    assert st_.lookahead_fused == 2
+    assert st_.queue_age_sum == 2 and st_.age_samples == 4
+    assert st_.mean_queue_age == 0.5
+    assert st_.summary()["lookahead_fused"] == 2.0
+    assert st_.summary()["mean_queue_age"] == 0.5
+    # every result handle filled (run_queued always fully drains)
+    assert mgr.scheduler.pending == 0
+    for c, p in zip(clients, ptrs):
+        np.testing.assert_array_equal(c.memcpy_d2h(p, 4),
+                                      np.full(4, 2.0, np.float32))
+
+
+def test_lookahead_bit_identical_to_eager_drain():
+    """Lookahead changes *when* fused steps dispatch, never what they
+    compute: the final arena equals the no-lookahead (and the unbatched)
+    drain over the same launches."""
+    arenas = []
+    for look, batched in ((3, True), (0, True), (0, False)):
+        mgr, clients = make_manager(3, lookahead_cycles=look,
+                                    batch_launches=batched)
+        for i, c in enumerate(clients):
+            c.module_load("bump", bump)
+            p = c.malloc(8)
+            c.memcpy_h2d(p, np.arange(8, dtype=np.float32) * (i + 1))
+            for _ in range(i + 2):          # unequal load per tenant
+                c.launch_kernel("bump", ptrs=[p], args=(8,))
+        mgr.synchronize()
+        arenas.append(np.asarray(mgr.arena.buf))
+    np.testing.assert_array_equal(arenas[0], arenas[1])
+    np.testing.assert_array_equal(arenas[0], arenas[2])
+
+
+def test_lookahead_latency_budget_bounds_queue_age():
+    """Deterministic sweep: whatever the load pattern, no launch waits
+    more than lookahead_cycles // weight drain cycles (the hold check
+    runs every cycle; the end-of-drain flush executes unconditionally)."""
+    for look in (1, 2, 3):
+        for depths in ((5, 1, 2), (1, 1, 1), (4, 4, 0), (7, 2, 5)):
+            mgr, clients = make_manager(3, lookahead_cycles=look,
+                                        max_fuse=4)
+            for c in clients:
+                c.module_load("bump", bump)
+            ptrs = [c.malloc(4) for c in clients]
+            for c, p in zip(clients, ptrs):
+                c.memcpy_h2d(p, np.zeros(4, np.float32))
+            mgr.synchronize()
+            mgr.scheduler.stats.queue_ages.clear()
+            for c, p, d in zip(clients, ptrs, depths):
+                for _ in range(d):
+                    c.launch_kernel("bump", ptrs=[p], args=(4,))
+            mgr.synchronize()
+            ages = list(mgr.scheduler.stats.queue_ages)
+            assert len(ages) == sum(depths)
+            assert mgr.scheduler.pending == 0
+            assert all(a <= look for a in ages), (look, depths, ages)
+
+
+def test_weighted_priority_tenant_never_held_exact():
+    """A weight-4 tenant (weight > lookahead) zeroes the hold budget of
+    every batch its ops join: its launches always dispatch in their
+    submission cycle while best-effort tenants still fuse via lookahead.
+    Exact dispatch trace: [p,p,p,a,b] at age 0, then [a,a,b,b] with the
+    held pair at age 1."""
+    mgr = GuardianManager(total_slots=512, lookahead_cycles=3)
+    prio = mgr.register_tenant("p", 32, weight=4)
+    others = [mgr.register_tenant(t, 32) for t in ("a", "b")]
+    clients = [prio, *others]
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(4)
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+        ptrs.append(p)
+    mgr.synchronize()
+    mgr.scheduler.dispatch_log.clear()
+    mgr.scheduler.stats.queue_ages.clear()
+    for c, p in zip(clients, ptrs):
+        for _ in range(3):
+            c.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    log = list(mgr.scheduler.dispatch_log)
+    assert log == [("p", "p", "p", "a", "b"), ("a", "b", "a", "b")]
+    assert list(mgr.scheduler.stats.queue_ages) == [0, 0, 0, 0, 0,
+                                                    1, 1, 0, 0]
+    # correctness untouched by priority scheduling
+    for c, p in zip(clients, ptrs):
+        np.testing.assert_array_equal(c.memcpy_d2h(p, 4),
+                                      np.full(4, 3.0, np.float32))
+
+
+def test_weight_equal_to_lookahead_never_waits():
+    """Regression: a priority tenant with weight == lookahead_cycles must
+    have hold budget 0 (not lookahead // weight == 1) — the documented
+    zero-latency guarantee is weight >= lookahead, not weight >."""
+    mgr = GuardianManager(total_slots=512, lookahead_cycles=2)
+    prio = mgr.register_tenant("p", 32, weight=2)
+    best = mgr.register_tenant("a", 32)
+    for c in (prio, best):
+        c.module_load("bump", bump)
+    pp, pa = prio.malloc(4), best.malloc(4)
+    prio.memcpy_h2d(pp, np.zeros(4, np.float32))
+    best.memcpy_h2d(pa, np.zeros(4, np.float32))
+    mgr.synchronize()
+    mgr.scheduler.stats.queue_ages.clear()
+    mgr.scheduler.dispatch_log.clear()
+    prio.launch_kernel("bump", ptrs=[pp], args=(4,))
+    for _ in range(3):
+        best.launch_kernel("bump", ptrs=[pa], args=(4,))
+    mgr.synchronize()
+    log = list(mgr.scheduler.dispatch_log)
+    # p's op dispatches in its submission cycle (with a's first op)
+    assert log[0][:2] == ("p", "a")
+    ages = list(mgr.scheduler.stats.queue_ages)
+    assert ages[0] == 0        # the priority op never waited
+
+
+def _run_lookahead_case(depths, weights, look):
+    """Shared body for the deterministic sweep + hypothesis mirror:
+    returns (scheduler, per-request (tenant, age) pairs)."""
+    mgr = GuardianManager(total_slots=1024, lookahead_cycles=look)
+    clients = []
+    for i, w in enumerate(weights):
+        clients.append(mgr.register_tenant(f"t{i}", 32, weight=w))
+    ptrs = []
+    for c in clients:
+        c.module_load("bump", bump)
+        p = c.malloc(4)
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+        ptrs.append(p)
+    mgr.synchronize()
+    mgr.scheduler.dispatch_log.clear()
+    mgr.scheduler.stats.queue_ages.clear()
+    reqs = []
+    for c, p, d in zip(clients, ptrs, depths):
+        for _ in range(d):
+            reqs.append(c.launch_kernel("bump", ptrs=[p], args=(4,)))
+    mgr.run_queued()
+    sched = mgr.scheduler
+    dispatched = [t for batch in sched.dispatch_log for t in batch]
+    ages = list(sched.stats.queue_ages)
+    # every submitted launch dispatched exactly once (no starvation, no
+    # leftovers) and the age log aligns with the dispatch log
+    assert len(dispatched) == len(ages) == len(reqs) == sum(depths)
+    assert sched.pending == 0
+    return sched, list(zip(dispatched, ages))
+
+
+def _hold_bound(look, w):
+    """Mirror of BatchedLaunchScheduler._hold_budget."""
+    if w <= 1:
+        return look
+    return 0 if w >= look else look // w
+
+
+def _check_lookahead_invariants(depths, weights, look):
+    sched, pairs = _run_lookahead_case(depths, weights, look)
+    for tenant, age in pairs:
+        w = weights[int(tenant[1:])]
+        assert age <= _hold_bound(look, w), (depths, weights, look, pairs)
+
+
+def test_lookahead_weighted_fairness_sweep():
+    """Deterministic mirror of the hypothesis property: every dispatched
+    launch waited at most lookahead // weight cycles — weighted fairness
+    that lookahead can never starve."""
+    cases = [
+        ((3, 3, 3), (4, 1, 1), 3),
+        ((5, 1, 0), (1, 2, 1), 2),
+        ((2, 2, 2), (1, 1, 1), 1),
+        ((4, 0, 4), (3, 1, 3), 3),
+        ((1, 6, 2), (2, 1, 4), 4),
+    ]
+    for depths, weights, look in cases:
+        _check_lookahead_invariants(depths, weights, look)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    depths=st.tuples(*[st.integers(min_value=0, max_value=5)] * 3),
+    weights=st.tuples(*[st.integers(min_value=1, max_value=4)] * 3),
+    look=st.integers(min_value=0, max_value=4),
+)
+def test_lookahead_weighted_fairness_property(depths, weights, look):
+    if sum(depths) == 0:
+        return
+    _check_lookahead_invariants(depths, weights, look)
+
+
+def test_round_robin_interleave_weighted():
+    from repro.core import round_robin_interleave
+
+    by_tenant = {"t0": ["a0", "a1", "a2"], "t1": ["b0", "b1"],
+                 "t2": ["c0"]}
+    order = round_robin_interleave(by_tenant, weights={"t0": 2})
+    assert order == ["a0", "a1", "b0", "c0", "a2", "b1"]
+    assert round_robin_interleave(by_tenant, limit=3,
+                                  weights={"t0": 2}) == ["a0", "a1", "b0"]
+    # weights below 1 degrade to strict round-robin, inputs not consumed
+    assert round_robin_interleave(by_tenant, weights={"t1": 0}) == \
+        ["a0", "b0", "c0", "a1", "b1", "a2"]
+    assert by_tenant["t0"] == ["a0", "a1", "a2"]
+
+
+# ---------------------------------------------------------------------------
+# Trusted-step jit + multi-engine fusion (scheduler level)
+# ---------------------------------------------------------------------------
+
+
+def test_trusted_requests_fuse_when_jitted():
+    """Two tenants' trusted steps with equal signatures coalesce into one
+    compiled device step (the multi-engine fused decode, scheduler
+    view); results land on each request handle."""
+    mgr = GuardianManager(total_slots=64)
+
+    def step(arena, x):
+        return arena, x * 2.0
+
+    mgr.register_trusted_kernel("step", step)
+    a = mgr.register_tenant("a", 8)
+    b = mgr.register_tenant("b", 8)
+    ra = a.launch_kernel("step", args=(jnp.ones((4,), jnp.float32),))
+    rb = b.launch_kernel("step", args=(jnp.full((4,), 3.0, jnp.float32),))
+    mgr.synchronize()
+    st_ = mgr.scheduler.stats
+    assert st_.fused_steps == 1 and list(st_.batch_widths) == [2]
+    np.testing.assert_array_equal(np.asarray(ra.result),
+                                  np.full(4, 2.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(rb.result),
+                                  np.full(4, 6.0, np.float32))
+    # the fused binary is cached under the trusted key
+    assert any(k[0] == "trusted" for k in mgr.scheduler._fused_cache)
+
+
+def test_trusted_requests_stay_single_when_eager():
+    """jit_trusted=False is the eager fallback: trusted steps never fuse
+    and execute unjitted through the per-launch path — same results."""
+    mgr = GuardianManager(total_slots=64, jit_trusted=False)
+
+    def step(arena, x):
+        return arena, x * 2.0
+
+    mgr.register_trusted_kernel("step", step)
+    a = mgr.register_tenant("a", 8)
+    b = mgr.register_tenant("b", 8)
+    ra = a.launch_kernel("step", args=(jnp.ones((4,), jnp.float32),))
+    rb = b.launch_kernel("step", args=(jnp.full((4,), 3.0, jnp.float32),))
+    mgr.synchronize()
+    st_ = mgr.scheduler.stats
+    assert st_.fused_steps == 0 and st_.single_steps == 2
+    np.testing.assert_array_equal(np.asarray(ra.result),
+                                  np.full(4, 2.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(rb.result),
+                                  np.full(4, 6.0, np.float32))
+    entry = mgr.pointer_to_symbol["step"]
+    assert not any(k[0] == "trusted" for k in entry.jit_cache)
+
+
+def test_trusted_jit_matches_eager_results():
+    """The compiled trusted step is bit-identical to the eager fallback —
+    same arena bytes, same outputs (regression for the --no-jit path)."""
+    outs, arenas = [], []
+    for jit in (True, False):
+        mgr = GuardianManager(total_slots=64, jit_trusted=jit)
+
+        def step(arena, x, w):
+            h = jnp.tanh(x @ w) + x
+            return arena, h
+
+        mgr.register_trusted_kernel("step", step)
+        c = mgr.register_tenant("svc", 16)
+        x = jnp.asarray(np.linspace(-1, 1, 32, dtype=np.float32)
+                        .reshape(4, 8))
+        w = jnp.asarray(np.linspace(1, -1, 64, dtype=np.float32)
+                        .reshape(8, 8))
+        req = c.launch_kernel("step", args=(x, w))
+        mgr.synchronize()
+        outs.append(np.asarray(req.result))
+        arenas.append(np.asarray(mgr.arena.buf))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(arenas[0], arenas[1])
+
+
+def test_trusted_pytree_operands_fuse_by_structure():
+    """Trusted signatures hash pytree operands (params/cache/guard trees)
+    by treedef + leaf structure: equal-structure steps fuse, different
+    shapes stay apart."""
+    mgr = GuardianManager(total_slots=64)
+
+    def step(arena, tree):
+        return arena, tree["x"] + tree["y"]
+
+    mgr.register_trusted_kernel("step", step)
+    a = mgr.register_tenant("a", 8)
+    b = mgr.register_tenant("b", 8)
+    t1 = {"x": jnp.ones((4,)), "y": jnp.zeros((4,))}
+    t2 = {"x": jnp.full((4,), 2.0), "y": jnp.ones((4,))}
+    t3 = {"x": jnp.ones((8,)), "y": jnp.zeros((8,))}   # different shape
+    ra = a.launch_kernel("step", args=(t1,))
+    rb = b.launch_kernel("step", args=(t2,))
+    mgr.synchronize()
+    assert mgr.scheduler.stats.fused_steps == 1
+    np.testing.assert_array_equal(np.asarray(ra.result), np.ones(4))
+    np.testing.assert_array_equal(np.asarray(rb.result),
+                                  np.full(4, 3.0))
+    ra2 = a.launch_kernel("step", args=(t1,))
+    rb2 = b.launch_kernel("step", args=(t3,))
+    mgr.synchronize()
+    assert mgr.scheduler.stats.fused_steps == 1   # no second fused step
+    np.testing.assert_array_equal(np.asarray(rb2.result), np.ones(8))
+    np.testing.assert_array_equal(np.asarray(ra2.result), np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# LRU-bounded jit caches
+# ---------------------------------------------------------------------------
+
+
+def test_lru_cache_semantics():
+    lru = LRUCache(2)
+    lru["a"] = 1
+    lru["b"] = 2
+    assert lru["a"] == 1            # refreshes recency
+    lru["c"] = 3                    # evicts b (coldest)
+    assert "b" not in lru and "a" in lru and "c" in lru
+    assert lru.evictions == 1
+    lru["a"] = 10                   # overwrite refreshes, no eviction
+    assert lru["a"] == 10 and lru.evictions == 1
+    del lru["c"]                    # purge-path deletion still works
+    assert list(lru) == ["a"]
+    with pytest.raises(ValueError):
+        LRUCache(0)
+
+
+def test_jit_cache_lru_bound_evicts_and_counts():
+    """jit_cache_capacity bounds each kernel entry's compiled-variant
+    cache: churning operand signatures evicts the coldest binaries (a
+    recompile on reuse, never an error) and the eviction stat reports."""
+    mgr = GuardianManager(total_slots=64, jit_cache_capacity=2)
+
+    def step(arena, x):
+        return arena, x + 1.0
+
+    mgr.register_trusted_kernel("step", step)
+    c = mgr.register_tenant("svc", 16)
+    for n in (2, 4, 8, 16):         # 4 distinct signatures, capacity 2
+        req = c.launch_kernel("step", args=(jnp.zeros((n,), jnp.float32),))
+        mgr.synchronize()
+        np.testing.assert_array_equal(np.asarray(req.result),
+                                      np.ones(n, np.float32))
+    entry = mgr.pointer_to_symbol["step"]
+    assert len(entry.jit_cache) == 2
+    assert entry.jit_cache.evictions == 2
+    stats = mgr.jit_cache_stats()
+    assert stats["capacity"] == 2 and stats["evictions"] == 2
+    assert stats["per_kernel"]["step"] == 2
+    # an evicted signature recompiles transparently
+    req = c.launch_kernel("step", args=(jnp.zeros((2,), jnp.float32),))
+    mgr.synchronize()
+    np.testing.assert_array_equal(np.asarray(req.result),
+                                  np.ones(2, np.float32))
+    assert mgr.jit_cache_stats()["evictions"] == 3
+    # the scheduler's fused-step cache is bounded the same way
+    assert isinstance(mgr.scheduler._fused_cache, LRUCache)
+    assert stats["fused_capacity"] == mgr.scheduler._fused_cache.capacity
 
 
 def test_signature_distinguishes_policies():

@@ -152,6 +152,102 @@ def test_serve_guard_blocks_forged_slots():
     np.testing.assert_array_equal(victim_rows, after)
 
 
+def test_serve_jit_steps_bit_identical_to_eager():
+    """The compiled trusted-step path (jit_steps=True, the default) and
+    the eager fallback (--no-jit) produce bit-identical generations —
+    the tentpole's correctness contract for jitting the serving hot
+    path."""
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(5)
+    prompts = {t: rng.integers(0, cfg.vocab, 10, np.int32)
+               for t in ("a", "b")}
+    outs = []
+    for jit in (True, False):
+        eng = ServeEngine(cfg, max_batch=4, max_len=64, jit_steps=jit)
+        rids = {}
+        for t, p in prompts.items():
+            eng.register_tenant(t, 2)
+            rids[t] = eng.submit(t, p)
+        out = eng.run(max_new_tokens=6)
+        outs.append({t: out[r] for t, r in rids.items()})
+        # the jitted engine compiled its steps; the eager one never did
+        entry = eng.manager.pointer_to_symbol[eng._steps.decode_name]
+        assert any(k[0] == "trusted" for k in entry.jit_cache) == jit
+    assert outs[0] == outs[1]
+
+
+def test_multi_engine_fused_decode_matches_solo():
+    """Two engines sharing one GuardianManager: each lockstep drain fuses
+    the engines' steps into ONE compiled device step (width 2), and every
+    engine's generations are bit-identical to running it solo on its own
+    manager — fusion changes dispatch, never semantics."""
+    from repro.launch.serve import (
+        ServeEngine,
+        make_shared_manager,
+        serve_engines,
+    )
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, 10, np.int32) for _ in range(2)]
+    tokens = 5
+
+    solo_outs = []
+    for i, prompt in enumerate(prompts):
+        eng = ServeEngine(cfg, max_batch=4, max_len=64)
+        eng.register_tenant(f"t{i}", 2)
+        rid = eng.submit(f"t{i}", prompt)
+        solo_outs.append(eng.run(max_new_tokens=tokens)[rid])
+
+    mgr = make_shared_manager(2, max_batch=4)
+    engines = [ServeEngine(cfg, max_batch=4, max_len=64, manager=mgr)
+               for _ in range(2)]
+    rids = []
+    for i, (eng, prompt) in enumerate(zip(engines, prompts)):
+        eng.register_tenant(f"t{i}", 2)
+        rids.append(eng.submit(f"t{i}", prompt))
+    outs = serve_engines(engines, max_new_tokens=tokens)
+
+    for i in range(2):
+        assert outs[i][rids[i]] == solo_outs[i], f"engine {i} perturbed"
+    st = mgr.scheduler.stats
+    # 1 prefill + `tokens` decodes, every lockstep fused at width 2
+    assert st.fused_steps == 1 + tokens
+    assert st.mean_batch_width == 2.0
+    assert st.single_steps == 0
+    # both engines share one symbol entry (same model fingerprint)
+    assert engines[0]._steps.decode_name == engines[1]._steps.decode_name
+
+
+def test_multi_engine_quarantine_stays_scoped():
+    """Quarantining a tenant of one co-hosted engine drops only that
+    engine's requests; the sibling engine keeps serving through the same
+    shared manager."""
+    from repro.launch.serve import (
+        ServeEngine,
+        make_shared_manager,
+        serve_engines,
+    )
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(7)
+    mgr = make_shared_manager(2, max_batch=4)
+    engines = [ServeEngine(cfg, max_batch=4, max_len=64, manager=mgr)
+               for _ in range(2)]
+    rids = []
+    for i, eng in enumerate(engines):
+        eng.register_tenant(f"t{i}", 2)
+        rids.append(eng.submit(f"t{i}",
+                               rng.integers(0, cfg.vocab, 8, np.int32)))
+    dropped = engines[0].quarantine_tenant("t0", reason="abuse")
+    assert dropped == [rids[0]]
+    outs = serve_engines(engines, max_new_tokens=3)
+    assert outs[0] == {}                      # engine 0 had nothing left
+    assert rids[1] in outs[1] and len(outs[1][rids[1]]) == 3
+
+
 def test_dryrun_cli_single_cell(tmp_path):
     """The dry-run entrypoint runs standalone for a small arch."""
     import os
