@@ -1,0 +1,108 @@
+"""Cross-push benchmark-trend history — folds the per-push trend CSV
+(``check_regression --trend-out``) into a cumulative history file so
+sub-gate drift is visible across pushes in ONE artifact instead of N
+per-push ones.
+
+The history is a plain CSV with the trend columns prefixed by a push
+label (commit SHA in CI):
+
+    push,name,baseline_us,fresh_us,ratio,normalized_ratio,gate
+
+Appends are idempotent per label (re-running a push replaces its rows,
+so a CI retry never duplicates) and the file is bounded to the most
+recent ``--keep`` pushes.  Pure string handling, no jax import —
+unit-tested in tests/test_bench_gate.py.
+
+    PYTHONPATH=src python -m benchmarks.aggregate_trend \
+        --trend results/bench.trend.csv \
+        --history results/bench.history.csv --label $GITHUB_SHA
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Tuple
+
+HEADER = "push,name,baseline_us,fresh_us,ratio,normalized_ratio,gate"
+
+
+def parse_history(text: str) -> Tuple[List[str], Dict[str, List[str]]]:
+    """Returns (push labels in first-seen order, label -> its rows)."""
+    order: List[str] = []
+    rows: Dict[str, List[str]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("push,"):
+            continue
+        label = line.split(",", 1)[0]
+        if label not in rows:
+            order.append(label)
+            rows[label] = []
+        rows[label].append(line)
+    return order, rows
+
+
+def fold(history: str, trend: str, label: str, keep: int = 50) -> str:
+    """Fold one push's trend rows into the history text.
+
+    A label already present is *replaced* (CI retries are idempotent);
+    the oldest pushes beyond ``keep`` are dropped.
+    """
+    if keep < 1:
+        raise ValueError("keep must be >= 1")
+    order, rows = parse_history(history)
+    fresh: List[str] = []
+    for line in trend.splitlines():
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        fresh.append(f"{label},{line}")
+    if label in rows:
+        order.remove(label)
+    rows[label] = fresh
+    order.append(label)
+    order = order[-keep:]
+    out = [HEADER]
+    for lb in order:
+        out.extend(rows[lb])
+    return "\n".join(out) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trend", default="results/bench.trend.csv",
+                    help="this push's trend CSV (check_regression "
+                         "--trend-out output)")
+    ap.add_argument("--history", default="results/bench.history.csv",
+                    help="cumulative cross-push history CSV (read if "
+                         "present, rewritten)")
+    ap.add_argument("--label", required=True,
+                    help="push identifier (commit SHA)")
+    ap.add_argument("--keep", type=int, default=50,
+                    help="most recent pushes retained")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.trend):
+        print(f"no trend file at {args.trend}; nothing to fold")
+        return 0
+    with open(args.trend) as f:
+        trend = f.read()
+    history = ""
+    if os.path.exists(args.history):
+        with open(args.history) as f:
+            history = f.read()
+    folded = fold(history, trend, args.label, keep=args.keep)
+    hist_dir = os.path.dirname(args.history)
+    if hist_dir:
+        os.makedirs(hist_dir, exist_ok=True)
+    with open(args.history, "w") as f:
+        f.write(folded)
+    pushes = len(parse_history(folded)[0])
+    print(f"history: {pushes} push(es) -> {args.history}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

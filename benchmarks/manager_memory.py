@@ -40,11 +40,16 @@ def main(out: List[str]):
         shared_exec = _exec_bytes(mgr)
         guardian_total = arena + meta + shared_exec
         per_context_total = arena + n * (shared_exec + (1 << 20))
+        # gate=abs: the value is a deterministic byte count, not a
+        # timing — the CI perf gate compares it unnormalized (a growth
+        # in manager state per tenant is a real regression regardless of
+        # runner speed); ';'-separated k=v so the gate parses the parts
         out.append(
             f"mem.{n}_clients,{guardian_total / 1e6:.2f},"
-            f"guardian_MB={guardian_total / 1e6:.2f}|"
-            f"per_context_model_MB={per_context_total / 1e6:.2f}|"
-            f"ratio={per_context_total / guardian_total:.1f}x")
+            f"guardian_MB={guardian_total / 1e6:.2f};"
+            f"per_context_model_MB={per_context_total / 1e6:.2f};"
+            f"ratio={per_context_total / guardian_total:.1f}x;"
+            f"gate=abs")
         print(out[-1])
 
 

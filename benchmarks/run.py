@@ -39,14 +39,18 @@ SUITES = {
               "batched launch scheduler vs round-robin drain (§4.2.4)"),
     "fault": ("benchmarks.fault_containment",
               "fault containment: detection latency + co-tenant throughput"),
+    "elastic": ("benchmarks.elastic_sharing",
+                "elastic vs static partition packing over a churn trace"),
     "compress": ("benchmarks.compression",
                  "cross-pod int8 gradient compression (beyond-paper)"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
 }
 
 #: the suites a --quick run times (must emit rows whose names intersect
-#: the committed baseline so check_regression has something to compare)
-QUICK_SUITES = ["sched", "fault"]
+#: the committed baseline so check_regression has something to compare).
+#: mem rows gate=abs (deterministic byte counts), elastic rows gate=skip
+#: (the packing ratio is asserted inside the suite itself)
+QUICK_SUITES = ["sched", "fault", "mem", "elastic"]
 
 
 def main() -> None:

@@ -12,13 +12,34 @@ Layering (bottom-up):
                   launches into fused device steps (per-row fence tables);
                   CHECK batches attribute per-row ok + commit selectively
     quarantine  — tenant lifecycle (ACTIVE→QUARANTINED→EVICTED|READMITTED),
-                  pluggable thresholds, partition reclamation
+                  pluggable thresholds, partition reclamation, automatic
+                  readmission probes (probation partitions)
+    pressure    — host-side allocation-pressure telemetry (EWMA +
+                  watermarks, dirty-flag gated) feeding elastic + the
+                  scheduler's adaptive lookahead
+    elastic     — ElasticManager: admission waitlist, live partition
+                  grow/shrink, on-device compaction (dynamic spatial
+                  sharing; WAITLISTED→ACTIVE→RESIZING→COMPACTING)
     manager     — GuardianManager ("grdManager"): sole device owner,
                   validated calls, round-robin spatial multiplexing
     libsim      — simulated closed-source accelerated libraries (Table 6)
 """
 
 from repro.core.arena import Arena, ArenaSpec, make_flat_arena
+from repro.core.elastic import (
+    Admission,
+    AdmissionStatus,
+    ElasticError,
+    ElasticManager,
+    ElasticPolicy,
+    ElasticState,
+    ResizeEvent,
+)
+from repro.core.pressure import (
+    Ewma,
+    PressureTracker,
+    derive_lookahead,
+)
 from repro.core.fence import (
     FenceParams,
     FencePolicy,
@@ -75,6 +96,9 @@ from repro.core.violations import (
 
 __all__ = [
     "Arena", "ArenaSpec", "make_flat_arena",
+    "Admission", "AdmissionStatus", "ElasticError", "ElasticManager",
+    "ElasticPolicy", "ElasticState", "ResizeEvent",
+    "Ewma", "PressureTracker", "derive_lookahead",
     "FenceParams", "FencePolicy", "FenceTable", "apply_fence",
     "apply_fence_mixed", "fence_bitwise", "fence_check", "fence_modulo",
     "fence_modulo_magic", "fence_modulo_magic_dyn",

@@ -37,11 +37,20 @@ class DevicePtr:
     Like a raw CUDA pointer this is *forgeable* by a malicious tenant
     (``dataclasses.replace(ptr, addr=...)``) — the manager treats it as
     untrusted input and validates it on every use.
+
+    ``epoch`` stamps which *elastic relocation epoch* of the tenant's
+    partition minted the handle: the manager's pointer translation is
+    keyed per epoch, so an address reused by a later extent never
+    aliases a stale handle's translation (see
+    ``GuardianManager._resolve_ptr``).  Forging it only selects a
+    different translation table — the result is bounds-validated like
+    any address.
     """
 
     tenant_id: str
     addr: int        # absolute slot index in the flat arena
     length: int      # slots
+    epoch: int = 0   # elastic relocation epoch at mint time
 
     @property
     def end(self) -> int:

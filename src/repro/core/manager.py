@@ -63,11 +63,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import Arena, ArenaSpec, PoolArena, make_flat_arena
+from repro.core.elastic import ElasticManager, ElasticPolicy
 from repro.core.fence import FenceParams, FencePolicy, FenceTable, \
     require_pow2_sizes
 from repro.core.interception import DevicePtr, GuardianClient
 from repro.core.partition import (
     IntraPartitionAllocator,
+    OutOfArenaMemory,
     Partition,
     PartitionBoundsTable,
     UnknownTenant,
@@ -188,6 +190,10 @@ class GuardianManager:
         jit_trusted: bool = True,
         jit_cache_capacity: int = 64,
         lookahead_cycles: int = 0,
+        adaptive_lookahead: bool = False,
+        adaptive_lookahead_cap: int = 8,
+        elastic_policy: Optional[ElasticPolicy] = None,
+        readmit_after: Optional[int] = None,
     ):
         self.policy = policy
         self.mode = mode
@@ -202,14 +208,17 @@ class GuardianManager:
         #: symbol-cache growth under many-kernel churn)
         self.jit_cache_capacity = jit_cache_capacity
         self.scheduler = BatchedLaunchScheduler(
-            self, max_fuse=max_fuse, lookahead_cycles=lookahead_cycles)
+            self, max_fuse=max_fuse, lookahead_cycles=lookahead_cycles,
+            adaptive_lookahead=adaptive_lookahead,
+            adaptive_lookahead_cap=adaptive_lookahead_cap)
 
         # Fault containment: device-side per-tenant violation telemetry
         # (filled by CHECK launches, in-kernel, no host sync) + the host-side
         # lifecycle driver that polls it at drain-cycle boundaries.
         self.violog = ViolationLog(capacity=max_tenants)
         self.quarantine = QuarantineManager(
-            self, policy=quarantine_policy, poll_every=quarantine_poll_every)
+            self, policy=quarantine_policy, poll_every=quarantine_poll_every,
+            readmit_after=readmit_after)
 
         # §4.2.1 — reserve all device memory up front.
         self.arena = Arena(make_flat_arena(total_slots, dtype))
@@ -220,6 +229,18 @@ class GuardianManager:
         self.bounds = PartitionBoundsTable(total_slots)
         self._suballoc: Dict[str, IntraPartitionAllocator] = {}
         self._clients: Dict[str, GuardianClient] = {}
+
+        # Elastic partitions: admission waitlist, watermark-driven
+        # grow/shrink, on-device compaction (core/elastic.py).  Pointer
+        # translation maps an outstanding DevicePtr's minted address to
+        # its post-relocation home — composed per move, resolved at the
+        # next validated use, so tenants never observe their extent
+        # moving.  Maps are keyed per *relocation epoch* (the epoch the
+        # ptr was minted in): an address reused by a later extent never
+        # aliases a stale handle's translation.
+        self.elastic = ElasticManager(self, policy=elastic_policy)
+        self._ptr_remap: Dict[str, Dict[int, Dict[int, int]]] = {}
+        self._ptr_epoch: Dict[str, int] = {}
 
         # §4.2.3 — pointerToSymbol: kernel name -> compiled twins.
         self.pointer_to_symbol: Dict[str, _KernelEntry] = {}
@@ -325,6 +346,8 @@ class GuardianManager:
                 "the quarantine)")
         self._reclaim_partition(tenant_id)
         self.quarantine.forget(tenant_id)
+        # a departure frees slots: re-drive admission from the waitlist
+        self.elastic.notify_capacity_freed()
 
     def _reclaim_partition(self, tenant_id: str) -> None:
         """Scrub + free a tenant's partition and drop every per-tenant
@@ -344,6 +367,9 @@ class GuardianManager:
         self._part_scalars.pop(tenant_id, None)
         self._tenant_policy.pop(tenant_id, None)
         self._tenant_weight.pop(tenant_id, None)
+        self._ptr_remap.pop(tenant_id, None)
+        self._ptr_epoch.pop(tenant_id, None)
+        self.elastic.forget(tenant_id)
 
     def _purge_symbol_caches(self, part: Partition) -> None:
         """Evict per-tenant compiled state from the jit/symbol caches.
@@ -454,18 +480,82 @@ class GuardianManager:
         sub = self._suballoc.get(tenant_id)
         if sub is None:
             raise UnknownTenant(tenant_id)
-        rel = sub.alloc(n_slots)
+        try:
+            rel = sub.alloc(n_slots)
+            self.elastic.pressure.note_alloc(tenant_id)
+        except OutOfArenaMemory:
+            # the partition is hard full: record the pressure event and —
+            # when the elastic policy allows — grow it right here (an
+            # in-place grow is free; a relocation runs only if the tenant
+            # is idle) so the tenant's malloc succeeds instead of failing
+            self.elastic.pressure.note_failure(tenant_id)
+            if not self.elastic.policy.grow_on_failure:
+                raise
+            from repro.core.elastic import ElasticError
+            while True:
+                try:
+                    self.elastic.grow(tenant_id)
+                except (ElasticError, OutOfArenaMemory):
+                    raise OutOfArenaMemory(
+                        f"tenant {tenant_id!r}: no {n_slots} contiguous "
+                        "free slots and the partition cannot grow")
+                try:
+                    rel = sub.alloc(n_slots)
+                    # handled inline: the poll must not grow a second time
+                    self.elastic.pressure.clear_failures(tenant_id)
+                    break
+                except OutOfArenaMemory:
+                    continue
         part = self.bounds.lookup(tenant_id)
         return DevicePtr(tenant_id=tenant_id, addr=part.base + rel,
-                         length=n_slots)
+                         length=n_slots,
+                         epoch=self._ptr_epoch.get(tenant_id, 0))
 
     def free(self, tenant_id: str, ptr: DevicePtr) -> None:
         sub = self._suballoc.get(tenant_id)
         if sub is None:
             raise UnknownTenant(tenant_id)
         part = self.bounds.lookup(tenant_id)
-        self._validate_range(tenant_id, ptr.addr, ptr.length, "cudaFree")
-        sub.free(ptr.addr - part.base)
+        addr = self._resolve_ptr(tenant_id, ptr)
+        self._validate_range(tenant_id, addr, ptr.length, "cudaFree")
+        sub.free(addr - part.base)
+        self._ptr_remap.get(tenant_id, {}).get(ptr.epoch, {}).pop(
+            ptr.addr, None)
+        self.elastic.pressure.note_free(tenant_id)
+
+    # -- elastic pointer translation ------------------------------------ #
+    def _resolve_ptr(self, tenant_id: str, ptr: DevicePtr) -> int:
+        """Translate a DevicePtr minted before an elastic relocation to
+        its current home.  Identity for never-moved tenants (one dict
+        miss).  The lookup is keyed by the ptr's mint epoch, so a ptr
+        minted *after* a move never aliases a stale entry even when a
+        later extent reuses the address; forged/interior addresses
+        translate only on an exact mint-base match — anything else is
+        validated as-is and fails closed like before."""
+        return self._ptr_remap.get(tenant_id, {}).get(
+            ptr.epoch, {}).get(ptr.addr, ptr.addr)
+
+    def _compose_ptr_remap(self, tenant_id: str,
+                           mapping: Dict[int, int]) -> None:
+        """Fold a relocation's ``current_abs -> new_abs`` map into every
+        epoch's translation table (chasing prior entries so a ptr minted
+        N moves ago still resolves in one lookup) and open a fresh epoch
+        for post-move mints.
+
+        The fold hits EVERY epoch up to and including the current one: a
+        ptr minted in an old epoch at an address no intermediate move
+        touched has no entry there — its block sat still until now, so
+        the current move's ``old -> new`` applies to it verbatim
+        (setdefault: chained entries, already composed above, win)."""
+        maps = self._ptr_remap.setdefault(tenant_id, {})
+        epoch = self._ptr_epoch.get(tenant_id, 0)
+        maps.setdefault(epoch, {})
+        for em in maps.values():
+            for k in list(em):
+                em[k] = mapping.get(em[k], em[k])
+            for old, new in mapping.items():
+                em.setdefault(old, new)
+        self._ptr_epoch[tenant_id] = epoch + 1
 
     def _validate_range(self, tenant_id: str, addr: int, length: int,
                         api: str) -> Partition:
@@ -487,30 +577,35 @@ class GuardianManager:
                    host: np.ndarray) -> None:
         flat = np.asarray(host).reshape(-1).astype(
             self.arena.spec.dtype)
-        self._validate_range(tenant_id, ptr.addr, flat.size, "cudaMemcpyH2D")
+        addr = self._resolve_ptr(tenant_id, ptr)
+        self._validate_range(tenant_id, addr, flat.size, "cudaMemcpyH2D")
         if self.mode is SharingMode.SPATIAL:
-            self._enqueue(tenant_id, "h2d", (ptr.addr, flat))
+            self._enqueue(tenant_id, "h2d", (addr, flat))
         else:
-            self.arena.unsafe_write_range(ptr.addr, jnp.asarray(flat))
+            self.arena.unsafe_write_range(addr, jnp.asarray(flat))
 
     def memcpy_d2h(self, tenant_id: str, ptr: DevicePtr,
                    n_slots: Optional[int] = None) -> np.ndarray:
         n = ptr.length if n_slots is None else n_slots
-        self._validate_range(tenant_id, ptr.addr, n, "cudaMemcpyD2H")
+        addr = self._resolve_ptr(tenant_id, ptr)
+        self._validate_range(tenant_id, addr, n, "cudaMemcpyD2H")
         self.run_queued()  # reads are synchronizing, like cudaMemcpy
-        return np.asarray(self.arena.unsafe_read_range(ptr.addr, n))
+        addr = self._resolve_ptr(tenant_id, ptr)   # the drain may move
+        return np.asarray(self.arena.unsafe_read_range(addr, n))
 
     def memcpy_d2d(self, tenant_id: str, dst: DevicePtr, src: DevicePtr,
                    n_slots: int) -> None:
         # check destination AND source (§4.2.2: "we check the destination
         # and/or the source pointers")
-        self._validate_range(tenant_id, src.addr, n_slots, "cudaMemcpyD2D")
-        self._validate_range(tenant_id, dst.addr, n_slots, "cudaMemcpyD2D")
+        src_addr = self._resolve_ptr(tenant_id, src)
+        dst_addr = self._resolve_ptr(tenant_id, dst)
+        self._validate_range(tenant_id, src_addr, n_slots, "cudaMemcpyD2D")
+        self._validate_range(tenant_id, dst_addr, n_slots, "cudaMemcpyD2D")
         if self.mode is SharingMode.SPATIAL:
-            self._enqueue(tenant_id, "d2d", (dst.addr, src.addr, n_slots))
+            self._enqueue(tenant_id, "d2d", (dst_addr, src_addr, n_slots))
         else:
-            data = self.arena.unsafe_read_range(src.addr, n_slots)
-            self.arena.unsafe_write_range(dst.addr, data)
+            data = self.arena.unsafe_read_range(src_addr, n_slots)
+            self.arena.unsafe_write_range(dst_addr, data)
 
     # ------------------------------------------------------------------ #
     # Kernel registration & launch (§4.2.3, §4.3)                        #
@@ -683,7 +778,12 @@ class GuardianManager:
         t1 = time.perf_counter_ns()
         self.launch_stats.lookup_ns.append(t1 - t0)
 
-        ptr_args = tuple(p.addr_device for p in ptrs)
+        remap = self._ptr_remap.get(tenant_id)
+        ptr_args = tuple(
+            p.addr_device if not remap
+            or p.addr not in remap.get(p.epoch, ())
+            else jnp.int32(remap[p.epoch][p.addr])
+            for p in ptrs)
         req = LaunchRequest(tenant_id=tenant_id, name=name,
                             policy=self._effective_policy(tenant_id),
                             entry=entry, part=part,
@@ -696,6 +796,27 @@ class GuardianManager:
             # the kernel output once a drain dispatches it
             return req
         self._execute_request(req)
+        return req.result
+
+    def _dispatch_trusted_direct(self, tenant_id: str, name: str) -> Any:
+        """Dispatch a trusted kernel *now* through the scheduler's
+        execution path, outside the queue discipline — the elastic
+        relocation path, which runs at drain-cycle boundaries when the
+        moving tenant has nothing queued (so interleaving with tenant
+        work is impossible by construction).  ``_execute`` is entered
+        directly rather than submit+flush: a relocation is maintenance,
+        not traffic — it must neither count as a tenant arrival for the
+        adaptive-lookahead EWMA nor force-drain batches the lookahead is
+        deliberately holding.  Same trusted execution path, stats and
+        jit caches as any scheduled step."""
+        entry = self.pointer_to_symbol[name]
+        part = self.bounds.lookup(tenant_id)
+        req = LaunchRequest(
+            tenant_id=tenant_id, name=name,
+            policy=self._effective_policy(tenant_id),
+            entry=entry, part=part, call_args=(),
+            trusted_fusable=entry.trusted and self.jit_trusted)
+        self.scheduler._execute([req])
         return req.result
 
     def _execute_request(self, req: LaunchRequest) -> Any:
@@ -837,6 +958,10 @@ class GuardianManager:
                 # dropped while co-tenants keep draining (skipped entirely
                 # while the log is clean — no sync on fenced-only traffic)
                 self.quarantine.maybe_poll()
+                # elastic boundary work: pressure-driven grow/shrink and
+                # waitlist admission (one flag read when nothing changed —
+                # host arithmetic only, never a device sync)
+                self.elastic.maybe_poll()
         else:
             for q in self._queues.values():
                 while q:
@@ -844,6 +969,7 @@ class GuardianManager:
                 # context switch: full device sync between tenants
                 jax.block_until_ready(self.arena.buf)
             self.quarantine.maybe_poll()
+            self.elastic.maybe_poll()
 
     def synchronize(self, tenant_id: Optional[str] = None) -> None:
         self.run_queued()

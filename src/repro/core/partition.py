@@ -150,8 +150,78 @@ class BuddyAllocator:
                 break
         bisect.insort(self._free[order], base)
 
+    # -- elastic resizing (core/elastic.py) ------------------------------ #
+    def grow_in_place(self, base: int) -> Optional[int]:
+        """Double an allocated block in place when its right-hand buddy is
+        free: ``[base, base+size)`` becomes ``[base, base+2*size)``.
+
+        Returns the new size, or None when the block cannot grow without
+        moving (base not aligned to 2*size — the buddy lies *below* and
+        absorbing it would change the base — or the buddy is occupied).
+        The caller relocates instead (:mod:`repro.core.elastic`).
+        """
+        if base not in self._allocated:
+            raise KeyError(f"grow of unallocated base {base}")
+        order = self._allocated[base]
+        if order >= self._max_order:
+            return None
+        if base % (1 << (order + 1)) != 0:
+            return None                      # buddy is below: base would move
+        buddy = base + (1 << order)
+        lst = self._free[order]
+        i = bisect.bisect_left(lst, buddy)
+        if i >= len(lst) or lst[i] != buddy:
+            return None                      # buddy occupied or split
+        lst.pop(i)
+        self._allocated[base] = order + 1
+        return 1 << (order + 1)
+
+    def shrink_in_place(self, base: int, new_size: int) -> int:
+        """Shrink an allocated block to ``new_size`` (pow2, <= current),
+        keeping its base and freeing the vacated upper buddies.  Returns
+        the new size.  Invariants I1/I2 hold by construction: ``base`` was
+        aligned to the old (larger) size, hence to every smaller one."""
+        if base not in self._allocated:
+            raise KeyError(f"shrink of unallocated base {base}")
+        if not is_pow2(new_size):
+            raise ValueError(f"shrink target {new_size} not a power of two")
+        order = self._allocated[base]
+        new_order = new_size.bit_length() - 1
+        if new_order > order:
+            raise ValueError(
+                f"shrink target {new_size} exceeds block size {1 << order}")
+        while order > new_order:
+            order -= 1
+            # free the upper half at each level (coalesce-safe: its buddy
+            # — the kept lower half — stays allocated)
+            bisect.insort(self._free[order], base + (1 << order))
+        self._allocated[base] = new_order
+        return new_size
+
     def free_slots(self) -> int:
         return sum(len(v) << o for o, v in self._free.items())
+
+    def largest_free_block(self) -> int:
+        """Size of the largest currently-free block — what the *next*
+        allocation can get without anyone moving (the admission
+        controller's fragmentation probe)."""
+        for o in range(self._max_order, -1, -1):
+            if self._free[o]:
+                return 1 << o
+        return 0
+
+    def peek_alloc(self, size: int) -> Optional[int]:
+        """The base :meth:`alloc` *would* return for ``size``, without
+        allocating: the lowest free base at the smallest adequate order
+        (splitting keeps the popped base).  None when no block fits —
+        the compaction planner's read-only placement probe."""
+        order = self._order_for(size)
+        if order > self._max_order:
+            return None
+        for o in range(order, self._max_order + 1):
+            if self._free[o]:
+                return self._free[o][0]
+        return None
 
 
 class PartitionBoundsTable:
@@ -198,6 +268,58 @@ class PartitionBoundsTable:
 
     def free_slots(self) -> int:
         return self._alloc.free_slots()
+
+    def largest_free_block(self) -> int:
+        return self._alloc.largest_free_block()
+
+    # -- elastic resizing (core/elastic.py) ------------------------------ #
+    def grow(self, tenant_id: str) -> Optional[Partition]:
+        """Double a tenant's partition in place (buddy absorb).  Returns
+        the new Partition, or None when in-place growth is impossible
+        (the elastic manager relocates instead)."""
+        with self._lock:
+            part = self.lookup(tenant_id)
+            new_size = self._alloc.grow_in_place(part.base)
+            if new_size is None:
+                return None
+            new = Partition(tenant_id=tenant_id, base=part.base,
+                            size=new_size)
+            self._parts[tenant_id] = new
+            return new
+
+    def shrink(self, tenant_id: str, new_slots: int) -> Partition:
+        """Shrink a tenant's partition in place to ``next_pow2(new_slots)``
+        slots, keeping its base.  The caller guarantees the tenant's live
+        data already fits below the new boundary (repacked first)."""
+        with self._lock:
+            part = self.lookup(tenant_id)
+            size = next_pow2(max(new_slots, 1))
+            if size >= part.size:
+                return part
+            self._alloc.shrink_in_place(part.base, size)
+            new = Partition(tenant_id=tenant_id, base=part.base, size=size)
+            self._parts[tenant_id] = new
+            return new
+
+    def relocate(self, tenant_id: str, new_slots: int
+                 ) -> Tuple[Partition, Partition]:
+        """Move a tenant to a freshly-allocated extent of
+        ``next_pow2(new_slots)`` slots.  Both extents are allocated while
+        this returns — the caller copies device data old -> new, then
+        commits with :meth:`release_old` (or rolls back by freeing the
+        new base).  Returns ``(old, new)``."""
+        with self._lock:
+            old = self.lookup(tenant_id)
+            base, size = self._alloc.alloc(new_slots)
+            new = Partition(tenant_id=tenant_id, base=base, size=size)
+            self._parts[tenant_id] = new
+            return old, new
+
+    def release_old(self, old: Partition) -> None:
+        """Return a relocated-away extent to the allocator (the device
+        copy landed; the old slots were scrubbed)."""
+        with self._lock:
+            self._alloc.free(old.base)
 
     def bounds_arrays(self) -> Dict[str, np.ndarray]:
         """Dense arrays (one row per tenant, sorted by id) — for batched
@@ -254,3 +376,65 @@ class IntraPartitionAllocator:
 
     def live_bytes(self) -> int:
         return sum(self._live.values())
+
+    def live_span(self) -> int:
+        """One past the highest live slot (0 when nothing is live) — the
+        minimum in-place partition size that loses no data."""
+        return max((b + n for b, n in self._live.items()), default=0)
+
+    def repack_plan(self) -> List[Tuple[int, int, int]]:
+        """Compaction plan: ``(old_rel, new_rel, len)`` moves that pack
+        every live allocation to the front of the partition, in ascending
+        offset order.  Ascending order with ``new <= old`` per move makes
+        the sequential device copy overlap-safe (a later move's source is
+        never clobbered by an earlier move's destination).  No state is
+        mutated — apply with :meth:`commit_repack`."""
+        moves: List[Tuple[int, int, int]] = []
+        cursor = 0
+        for b in sorted(self._live):
+            n = self._live[b]
+            if b != cursor:
+                moves.append((b, cursor, n))
+            cursor += n
+        return moves
+
+    def commit_repack(self, part: Partition,
+                      moves: List[Tuple[int, int, int]]) -> None:
+        """Apply a repack plan (device copy already landed) and rebase the
+        allocator onto ``part`` — the tenant's (possibly resized /
+        relocated) partition.  Live offsets shift per the plan; the free
+        list becomes one tail extent."""
+        remap = {old: new for old, new, _ in moves}
+        self._live = {remap.get(b, b): n for b, n in self._live.items()}
+        self.part = part
+        used = sum(self._live.values())
+        if used > part.size:
+            raise OutOfArenaMemory(
+                f"tenant {part.tenant_id!r}: {used} live slots exceed "
+                f"resized partition ({part.size})")
+        self._free = [(used, part.size - used)] if used < part.size else []
+
+    def rebase(self, part: Partition) -> None:
+        """Adopt a resized partition without moving live data (in-place
+        grow/shrink, or a relocation that preserved relative offsets).
+        Free space is recomputed against the new size."""
+        if self.live_span() > part.size:
+            raise OutOfArenaMemory(
+                f"tenant {part.tenant_id!r}: live span {self.live_span()} "
+                f"exceeds resized partition ({part.size})")
+        old_size = self.part.size
+        self.part = part
+        if part.size > old_size:
+            self._free.append((old_size, part.size - old_size))
+        else:
+            self._free = [(b, min(ln, part.size - b))
+                          for b, ln in self._free if b < part.size]
+        # coalesce (mirrors free())
+        self._free.sort()
+        merged: List[Tuple[int, int]] = []
+        for b, ln in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == b:
+                merged[-1] = (merged[-1][0], merged[-1][1] + ln)
+            else:
+                merged.append((b, ln))
+        self._free = merged

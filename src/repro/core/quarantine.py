@@ -84,6 +84,12 @@ class TenantRecord:
     #: final per-kind counts snapshotted when the log row was recycled
     final_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     reason: str = ""
+    #: automatic-readmission probe state: drain cycles spent QUARANTINED
+    #: (the tenant's ops are dropped, so every cycle is clean by
+    #: construction) and whether the tenant currently serves on
+    #: probation — first logged violation on probation evicts
+    clean_cycles: int = 0
+    probation: bool = False
 
 
 class QuarantineStateMachine:
@@ -221,13 +227,22 @@ class QuarantineManager:
     """
 
     def __init__(self, manager, policy: Optional[QuarantinePolicy] = None,
-                 poll_every: int = 1):
+                 poll_every: int = 1,
+                 readmit_after: Optional[int] = None):
         if poll_every < 1:
             raise ValueError("poll_every must be >= 1")
+        if readmit_after is not None and readmit_after < 1:
+            raise ValueError("readmit_after must be >= 1 (or None)")
         self.manager = manager
         self.policy = policy if policy is not None else ThresholdPolicy()
         self.machine = QuarantineStateMachine()
         self.poll_every = poll_every
+        #: automatic readmission probes: a QUARANTINED tenant is
+        #: re-admitted after this many clean drain cycles into a
+        #: *probation* partition sized by the elastic admission
+        #: controller; its first logged violation on probation evicts.
+        #: None (default) keeps readmission operator-only.
+        self.readmit_after = readmit_after
         self._cycles_since_poll = 0
         self.events: List[str] = []   # human-readable transition trail
         # transition observers: (tenant_id, new_state) callbacks fired on
@@ -254,12 +269,43 @@ class QuarantineManager:
     # -- polling --------------------------------------------------------- #
     def maybe_poll(self) -> None:
         """Cheap cadence gate for the drain loop.  ``dirty`` latches until
-        poll() consumes it, so the counter only advances on dirty cycles."""
+        poll() consumes it, so the counter only advances on dirty cycles.
+        Readmission probes advance unconditionally — their clock is clean
+        cycles, which are exactly the cycles the dirty gate skips."""
+        self._advance_probes()
         if not self.manager.violog.dirty:
             return
         self._cycles_since_poll += 1
         if self._cycles_since_poll >= self.poll_every:
             self.poll()
+
+    def _advance_probes(self) -> None:
+        """Count QUARANTINED tenants' clean cycles (their ops are dropped,
+        so every quarantined cycle is violation-free by construction) and
+        probe-readmit those past ``readmit_after``."""
+        if self.readmit_after is None:
+            return
+        for rec in self.machine.records():
+            if rec.state is not TenantState.QUARANTINED:
+                continue
+            rec.clean_cycles += 1
+            if rec.clean_cycles >= self.readmit_after:
+                self.readmit_probe(rec.tenant_id)
+
+    def readmit_probe(self, tenant_id: str) -> None:
+        """Automatic probation readmission: counters wiped like a manual
+        readmit, but the tenant comes back into a *probation* partition
+        sized by the elastic admission controller (the smallest pow2
+        extent holding its live data, floored at the policy minimum) and
+        its next logged violation evicts — no second quarantine."""
+        self.readmit(tenant_id)
+        rec = self.machine.record_of(tenant_id)
+        rec.probation = True
+        rec.clean_cycles = 0
+        elastic = getattr(self.manager, "elastic", None)
+        if elastic is not None:
+            elastic.apply_probation(tenant_id)
+        self.events.append(f"probe-readmit {tenant_id} (probation)")
 
     def poll(self) -> List[str]:
         """Read the log once and apply the policy.  Returns the tenant ids
@@ -274,6 +320,18 @@ class QuarantineManager:
             if rec is None:
                 continue
             counts = log.counts(tenant_id, snap=snap)
+            if (rec.probation and rec.state.admissible
+                    and sum(counts.values()) > 0):
+                # probation (probe-readmitted) tenants get no second
+                # threshold: the first logged violation evicts (via the
+                # legal QUARANTINED hop — EVICTED is never entered from
+                # an admissible state directly)
+                self.quarantine(
+                    tenant_id,
+                    reason=f"probation violation ({self._fmt(counts)})")
+                self.evict(tenant_id, reason="probation violation")
+                transitioned.append(tenant_id)
+                continue
             if rec.state.admissible and self.policy.should_quarantine(
                     tenant_id, counts, rec):
                 self.quarantine(
@@ -309,7 +367,8 @@ class QuarantineManager:
     # -- transitions with device-side actions ---------------------------- #
     def quarantine(self, tenant_id: str, reason: str = "") -> None:
         """QUARANTINED: drop queued ops, reject new calls; data survives."""
-        self.machine.quarantine(tenant_id, reason=reason)
+        rec = self.machine.quarantine(tenant_id, reason=reason)
+        rec.clean_cycles = 0            # the probe clock starts now
         self.manager._drop_tenant_ops(tenant_id)
         self.events.append(f"quarantine {tenant_id}: {reason}")
         self._notify(tenant_id, TenantState.QUARANTINED)
@@ -318,17 +377,25 @@ class QuarantineManager:
         """EVICTED: scrub + free the partition, purge compiled entries."""
         log: ViolationLog = self.manager.violog
         rec = self.machine.evict(tenant_id, reason=reason)
+        rec.probation = False
         if log.row_of(tenant_id) is not None:
             rec.final_counts = log.counts(tenant_id)
         self._notify(tenant_id, TenantState.EVICTED)   # bounds still live
         self.manager._evict_tenant(tenant_id)
         self.events.append(f"evict {tenant_id}")
+        # an eviction frees slots: the elastic waitlist re-drives admission
+        elastic = getattr(self.manager, "elastic", None)
+        if elastic is not None:
+            elastic.notify_capacity_freed()
 
     def readmit(self, tenant_id: str) -> None:
         """Back to service.  A QUARANTINED tenant keeps its partition; an
         EVICTED one must register again for a fresh one.  Counters reset —
-        re-admission wipes the slate."""
-        self.machine.readmit(tenant_id)
+        re-admission wipes the slate (an operator readmit also clears any
+        probation: it is an explicit trust statement)."""
+        rec = self.machine.readmit(tenant_id)
+        rec.probation = False
+        rec.clean_cycles = 0
         self.manager.violog.reset(tenant_id)
         self.events.append(f"readmit {tenant_id}")
         self._notify(tenant_id, TenantState.READMITTED)

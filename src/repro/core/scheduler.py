@@ -90,6 +90,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fence import FencePolicy, FenceTable
+from repro.core.pressure import Ewma, derive_lookahead
 
 
 def donation_supported() -> bool:
@@ -238,6 +239,9 @@ class SchedulerStats:
     #: scheduler launches, + the sample count backing mean_queue_age
     queue_age_sum: int = 0
     age_samples: int = 0
+    #: the adaptive scheduler's current cross-cycle budget (0 when
+    #: adaptation is off or the scheduler is cold)
+    lookahead_budget: int = 0
     batch_widths: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
     #: per-launch queue ages of the most recent dispatches (latency-budget
@@ -293,6 +297,7 @@ class SchedulerStats:
             "fused_fraction": self.fused_fraction,
             "lookahead_fused": float(self.lookahead_fused),
             "mean_queue_age": self.mean_queue_age,
+            "lookahead_budget": float(self.lookahead_budget),
         }
 
 
@@ -306,11 +311,15 @@ class BatchedLaunchScheduler:
 
     def __init__(self, manager, max_fuse: int = 8,
                  lookahead_cycles: int = 0,
-                 fused_cache_capacity: int = 128):
+                 fused_cache_capacity: int = 128,
+                 adaptive_lookahead: bool = False,
+                 adaptive_lookahead_cap: int = 8):
         if max_fuse < 1:
             raise ValueError("max_fuse must be >= 1")
         if lookahead_cycles < 0:
             raise ValueError("lookahead_cycles must be >= 0")
+        if adaptive_lookahead_cap < 0:
+            raise ValueError("adaptive_lookahead_cap must be >= 0")
         self.manager = manager
         self.max_fuse = max_fuse
         #: cross-cycle latency budget: an under-filled fusable batch may
@@ -318,6 +327,17 @@ class BatchedLaunchScheduler:
         #: tenants' weights) waiting for compatible requests; 0 restores
         #: the flush-every-cycle behaviour exactly
         self.lookahead_cycles = lookahead_cycles
+        #: adaptive mode (ROADMAP: budget from observed arrival rates):
+        #: when the static knob is 0, the effective budget is derived per
+        #: cycle from per-tenant EWMA arrival rates —
+        #: ``ceil((max_fuse - 1) / total_rate)`` clamped to the cap (see
+        #: pressure.derive_lookahead).  A nonzero ``lookahead_cycles``
+        #: overrides adaptation entirely (the static knob wins).
+        self.adaptive_lookahead = adaptive_lookahead
+        self.adaptive_lookahead_cap = adaptive_lookahead_cap
+        self._arrival_ewma: Dict[str, Ewma] = {}
+        self._cycle_arrivals: Dict[str, int] = {}
+        self._adaptive_budget = 0
         self._cycle = 0
         self._pending: List[LaunchRequest] = []
         # (name, policy, arg-sig, T) -> jitted fused step; LRU-bounded
@@ -342,7 +362,34 @@ class BatchedLaunchScheduler:
     # ------------------------------------------------------------------ #
     def submit(self, req: LaunchRequest) -> None:
         req.submit_cycle = self._cycle
+        if self.adaptive_lookahead:
+            self._cycle_arrivals[req.tenant_id] = \
+                self._cycle_arrivals.get(req.tenant_id, 0) + 1
         self._pending.append(req)
+
+    @property
+    def current_lookahead(self) -> int:
+        """The effective cross-cycle budget this drain cycle: the static
+        knob when set, else the arrival-rate-derived adaptive budget."""
+        if self.lookahead_cycles > 0 or not self.adaptive_lookahead:
+            return self.lookahead_cycles
+        return self._adaptive_budget
+
+    def _update_arrival_rates(self) -> None:
+        """End-of-cycle EWMA update over this cycle's submissions (every
+        known tenant decays with an explicit 0 on idle cycles, so a
+        burst's influence fades) + re-derivation of the adaptive
+        budget."""
+        for t in set(self._arrival_ewma) | set(self._cycle_arrivals):
+            ew = self._arrival_ewma.get(t)
+            if ew is None:
+                ew = self._arrival_ewma[t] = Ewma(alpha=0.5)
+            ew.update(self._cycle_arrivals.get(t, 0))
+        self._cycle_arrivals.clear()
+        self._adaptive_budget = derive_lookahead(
+            (ew.value for ew in self._arrival_ewma.values()),
+            self.max_fuse, self.adaptive_lookahead_cap)
+        self.stats.lookahead_budget = self._adaptive_budget
 
     @property
     def pending(self) -> int:
@@ -359,9 +406,13 @@ class BatchedLaunchScheduler:
     def invalidate_tenant_rows(self, tenant_id: str) -> None:
         """Drop staged row-id vectors naming the tenant — its ViolationLog
         row is being recycled and a later same-id registration may land on
-        a different row."""
+        a different row.  The tenant's arrival-rate history goes with it
+        (a departed tenant must not keep inflating the adaptive
+        budget)."""
         for key in [k for k in self._vrow_cache if tenant_id in k]:
             del self._vrow_cache[key]
+        self._arrival_ewma.pop(tenant_id, None)
+        self._cycle_arrivals.pop(tenant_id, None)
 
     def invalidate_table_rows(self, bounds: Tuple[int, int]) -> None:
         """Drop staged FenceTables referencing a dead partition's
@@ -383,6 +434,11 @@ class BatchedLaunchScheduler:
         lookahead is off) executes everything unconditionally, so
         ``run_queued()`` always returns with every result handle filled.
         """
+        if self.adaptive_lookahead:
+            # fold this cycle's arrivals into the EWMA before deciding
+            # holds: the budget always reflects traffic through *this*
+            # cycle (deterministic — mirrored in tests/test_scheduler.py)
+            self._update_arrival_rates()
         work, self._pending = self._pending, []
         held: List[LaunchRequest] = []
         blocked: Set[str] = set()
@@ -433,7 +489,7 @@ class BatchedLaunchScheduler:
         shrinks the whole batch's wait, so a batch containing a
         zero-budget tenant always dispatches in its submission cycle
         (lookahead can never starve it)."""
-        if self.lookahead_cycles <= 0 or len(batch) >= self.max_fuse:
+        if self.current_lookahead <= 0 or len(batch) >= self.max_fuse:
             return False
         if not batch[0].fusable:
             return False
@@ -445,19 +501,21 @@ class BatchedLaunchScheduler:
 
     def _hold_budget(self, tenant_id: str) -> int:
         """Max drain cycles a tenant's op may wait for a fuller batch:
-        ``lookahead_cycles // weight`` for best-effort tenants, forced to
-        0 once a *priority* tenant (weight > 1) reaches
-        ``weight >= lookahead_cycles`` — without the cutoff,
-        ``weight == lookahead_cycles`` would leave a budget of 1 and a
-        documented-zero-latency tenant could still wait one cycle.
-        Weight-1 tenants always keep the full ``lookahead_cycles``
-        budget (they are the ones lookahead exists for)."""
+        ``lookahead // weight`` for best-effort tenants, forced to 0 once
+        a *priority* tenant (weight > 1) reaches ``weight >= lookahead``
+        — without the cutoff, ``weight == lookahead`` would leave a
+        budget of 1 and a documented-zero-latency tenant could still
+        wait one cycle.  Weight-1 tenants always keep the full budget
+        (they are the ones lookahead exists for).  ``lookahead`` is the
+        *effective* budget — the static knob, or the adaptive
+        arrival-rate derivation when the knob is 0."""
+        look = self.current_lookahead
         w = max(self.manager.weight_of(tenant_id), 1)
         if w == 1:
-            return self.lookahead_cycles
-        if w >= self.lookahead_cycles:
+            return look
+        if w >= look:
             return 0
-        return self.lookahead_cycles // w
+        return look // w
 
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:

@@ -57,12 +57,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.elastic import ElasticError, ResizeEvent
 from repro.core.fence import FenceParams, FencePolicy
 from repro.core.manager import GuardianManager
+from repro.core.partition import OutOfArenaMemory
 from repro.core.quarantine import QuarantinePolicy, TenantState
 from repro.core.scheduler import round_robin_interleave
 from repro.core.violations import NUM_KINDS, ViolationKind
 from repro.launch.steps import (
+    build_pool_relocation_step,
     build_trusted_serve_steps,
     join_cache_pool,
     split_cache_pool,
@@ -216,6 +219,10 @@ class ServeEngine:
         #: owns the evicted tenant's rows
         self._tenants: set = set()
         self.manager.quarantine.subscribe(self._on_transition)
+        # elastic resizes propagate into the serving plane: a tenant's
+        # (or this engine's scratch) extent moving means its KV pool
+        # slots move with it and its pending requests re-address
+        self.manager.elastic.subscribe(self._on_resize)
         # idempotent: a co-hosted engine adopts the existing pool (its
         # single-slot throwaway tensors are dropped before any write)
         self._pool = self._steps.register(self.manager, pool)
@@ -290,6 +297,34 @@ class ServeEngine:
     def readmit_tenant(self, name: str) -> None:
         self.manager.quarantine.readmit(name)
 
+    def _on_resize(self, ev: ResizeEvent) -> None:
+        """Elastic extent changes propagate into the serving plane: when
+        a tenant served here (or this engine's scratch partition) moves,
+        its KV/state pool slots move with it — a pool relocation step
+        dispatched through the same trusted scheduler path as the
+        prefill/decode steps — and its pending requests re-address.
+        In-place grows change no addresses, so only the bookkeeping
+        refreshes.  Data-moving resizes only fire while the engine is
+        idle (the elastic manager holds during serve runs), so no staged
+        guard or slot-id operand can go stale."""
+        mine = ev.tenant_id in self._tenants \
+            or ev.tenant_id == self.engine_tenant
+        if not mine:
+            return
+        if ev.moved:
+            size = min(ev.old_size, ev.new_size)
+            name = (f"elastic.pool[{self._steps.pool_name}]:"
+                    f"{ev.old_base}->{ev.new_base}x{size}")
+            self.manager.elastic.dispatch_relocation(
+                ev.tenant_id, name,
+                build_pool_relocation_step(ev.old_base, ev.new_base, size),
+                pool_arena=self._steps.pool_name)
+            for r in self._requests:
+                if r.tenant == ev.tenant_id and not r.done:
+                    r.slot = ev.new_base + (r.slot - ev.old_base)
+        if ev.tenant_id == self.engine_tenant:
+            self._scratch = self.manager.bounds.lookup(self.engine_tenant)
+
     def _on_transition(self, tenant_id: str, state: TenantState) -> None:
         """Manager-side quarantine events propagate into the serving plane
         (including transitions the engine never initiated, e.g. a
@@ -329,12 +364,29 @@ class ServeEngine:
                 and r.tenant == tenant}
         free = [s for s in range(part.base, part.end) if s not in used]
         if not free:
-            raise RuntimeError(f"tenant {tenant}: no free slots")
+            # the pool partition is hard full: grow it through the
+            # elastic control plane (KV pools resize with their tenant —
+            # the listener moves the slots if the extent relocates) and
+            # retry once
+            try:
+                part = self.manager.elastic.grow(tenant)
+            except (ElasticError, OutOfArenaMemory):
+                raise RuntimeError(f"tenant {tenant}: no free slots")
+            used = {r.slot for r in self._requests if not r.done
+                    and r.tenant == tenant}
+            free = [s for s in range(part.base, part.end)
+                    if s not in used]
+            if not free:
+                raise RuntimeError(f"tenant {tenant}: no free slots")
         rid = self._rid
         self._rid += 1
         self._requests.append(Request(tenant=tenant, rid=rid,
                                       prompt=np.asarray(prompt),
                                       slot=free[0]))
+        # occupancy report: the pressure tracker sees serve tenants too
+        # (non-shrinkable — the engine owns slot placement)
+        self.manager.elastic.pressure.observe(
+            tenant, len(used) + 1, part.size)
         return rid
 
     # ------------------------------------------------------------------ #
@@ -537,6 +589,9 @@ def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
     if any(e.manager is not mgr for e in engines[1:]):
         raise ValueError("serve_engines needs engines sharing one "
                          "GuardianManager (see make_shared_manager)")
+    # elastic resizes that move data defer for the whole run: the staged
+    # guards / slot-id operands of in-flight steps must never go stale
+    mgr.elastic.hold()
     states = [e._begin(max_new_tokens) for e in engines]
     try:
         active = [i for i, s in enumerate(states) if s is not None]
@@ -549,6 +604,7 @@ def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
         return [engines[i]._finalize(s) if s is not None else {}
                 for i, s in enumerate(states)]
     finally:
+        mgr.elastic.release()
         for e in engines:
             e._in_run = False
 

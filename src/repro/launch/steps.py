@@ -374,6 +374,93 @@ def build_trusted_serve_steps(api: ModelAPI,
     )
 
 
+# ---------------------------------------------------------------------------
+# Elastic relocation steps (core/elastic.py)
+# ---------------------------------------------------------------------------
+
+
+def build_flat_relocation_step(moves: Tuple[Tuple[int, int, int], ...],
+                               zeros: Tuple[Tuple[int, int], ...],
+                               src_extent: Tuple[int, int],
+                               dst_extent: Tuple[int, int]) -> Callable:
+    """On-device compaction step for the flat arena — a *trusted* kernel
+    (``fn(arena) -> (arena, None)``) the elastic manager registers and
+    dispatches through the BatchedLaunchScheduler between drain cycles.
+
+    ``moves`` are absolute ``(src, dst, len)`` slot copies, applied in
+    order (the elastic planner emits them ascending with ``dst <= src``
+    per move, so in-place packing never reads a clobbered source);
+    ``zeros`` scrub the vacated ranges afterwards (no stale tenant bytes
+    in reclaimed slots).  Reads are fenced against the tenant's source
+    extent and writes against its destination extent, and the scrub
+    ranges — static ints — are validated here against the union of the
+    two extents before the step exists at all: the relocation step obeys
+    the same bounds discipline as any tenant kernel, so a bug in the
+    planner cannot touch a co-tenant's slots.
+    """
+    src_fp = FenceParams(base=src_extent[0], size=src_extent[1])
+    dst_fp = FenceParams(base=dst_extent[0], size=dst_extent[1])
+    for start, ln in zeros:
+        in_src = (src_extent[0] <= start
+                  and start + ln <= src_extent[0] + src_extent[1])
+        in_dst = (dst_extent[0] <= start
+                  and start + ln <= dst_extent[0] + dst_extent[1])
+        if ln < 0 or not (in_src or in_dst):
+            raise ValueError(
+                f"relocation scrub range [{start},{start + ln}) leaves "
+                f"the moving tenant's extents {src_extent}/{dst_extent}")
+
+    def relocate(arena):
+        from repro.core.fence import (
+            guarded_dynamic_slice,
+            guarded_dynamic_update_slice,
+        )
+        for src, dst, ln in moves:
+            data = guarded_dynamic_slice(
+                arena, jnp.int32(src), ln, src_fp, FencePolicy.BITWISE)
+            arena = guarded_dynamic_update_slice(
+                arena, jnp.int32(dst), data, dst_fp, FencePolicy.BITWISE)
+        for start, ln in zeros:
+            z = jnp.zeros((ln, *arena.shape[1:]), arena.dtype)
+            arena = jax.lax.dynamic_update_slice_in_dim(
+                arena, z, start, axis=0)
+        return arena, None
+
+    return relocate
+
+
+def build_pool_relocation_step(src: int, dst: int, size: int) -> Callable:
+    """Slot-extent move for a manager-owned serve pool — a trusted kernel
+    with ``pool_arena`` threading (``fn(arena, pool) -> (arena, pool,
+    None)``) so a tenant's KV/state slots follow its partition when the
+    elastic manager grows or relocates it.
+
+    Every slot-indexed pool tensor (axis 1 — see
+    ``kvcache.PagedKVCache``) has ``[src, src+size)`` copied wholesale to
+    ``[dst, dst+size)`` and the vacated source range zeroed; per-slot
+    page tables live in the engines' meta halves and are slot-relative,
+    so they survive the move untouched.  Distinct buddy extents never
+    overlap (pow2 blocks nest or are disjoint), which makes
+    copy-then-zero exact.
+    """
+
+    def move(arr):
+        if arr.ndim < 2 or arr.shape[1] < max(src, dst) + size:
+            # meta-shaped straggler: too short to be slot-indexed over
+            # BOTH extents — touching it would clamp the copy into the
+            # wrong rows, so it passes through untouched
+            return arr
+        data = jax.lax.dynamic_slice_in_dim(arr, src, size, axis=1)
+        arr = jax.lax.dynamic_update_slice_in_dim(arr, data, dst, axis=1)
+        z = jnp.zeros_like(data)
+        return jax.lax.dynamic_update_slice_in_dim(arr, z, src, axis=1)
+
+    def relocate(arena, pool):
+        return arena, jax.tree.map(move, pool), None
+
+    return relocate
+
+
 def _cache_shape_for(api: ModelAPI, cfg: ModelConfig, shape: ShapeConfig,
                      kv_dtype: str = "bf16"):
     fam = cfg.family

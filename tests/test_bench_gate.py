@@ -173,3 +173,46 @@ def test_trend_csv_reports_ratios():
     # without a usable reference the normalized column is empty
     text2 = trend_csv(base, fresh, normalize=None)
     assert text2.splitlines()[1].split(",")[4] == ""
+
+
+# ---------------------------------------------------------------------------
+# Cross-push trend history aggregation (benchmarks/aggregate_trend.py)
+# ---------------------------------------------------------------------------
+
+TREND_A = """name,baseline_us,fresh_us,ratio,normalized_ratio,gate
+sched.batched.2t,100.00,110.00,1.1000,1.0000,
+mem.4_clients,0.30,0.30,1.0000,,abs
+"""
+
+TREND_B = TREND_A.replace("110.00", "220.00").replace("1.1000", "2.2000")
+
+
+def test_history_fold_appends_and_labels():
+    from benchmarks.aggregate_trend import HEADER, fold, parse_history
+
+    h1 = fold("", TREND_A, "sha1")
+    order, rows = parse_history(h1)
+    assert h1.splitlines()[0] == HEADER
+    assert order == ["sha1"] and len(rows["sha1"]) == 2
+    assert rows["sha1"][0].startswith("sha1,sched.batched.2t,")
+    h2 = fold(h1, TREND_B, "sha2")
+    order, rows = parse_history(h2)
+    assert order == ["sha1", "sha2"]
+    assert "sha2,sched.batched.2t,100.00,220.00" in h2
+
+
+def test_history_fold_idempotent_per_label_and_bounded():
+    from benchmarks.aggregate_trend import fold, parse_history
+
+    h = fold("", TREND_A, "sha1")
+    h = fold(h, TREND_B, "sha1")       # CI retry: replaced, not doubled
+    order, rows = parse_history(h)
+    assert order == ["sha1"] and len(rows["sha1"]) == 2
+    assert "220.00" in h and "110.00" not in h
+    # bounded to the most recent `keep` pushes
+    for i in range(5):
+        h = fold(h, TREND_A, f"sha{i}", keep=3)
+    order, _ = parse_history(h)
+    assert order == ["sha2", "sha3", "sha4"]
+    with pytest.raises(ValueError):
+        fold("", TREND_A, "x", keep=0)

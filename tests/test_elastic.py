@@ -1,0 +1,731 @@
+"""Elastic partition subsystem (core/elastic.py + core/pressure.py):
+admission waitlist, live grow/shrink, on-device compaction — and the
+churn proof: a fragmented arena rejects a tenant before compaction and
+admits it after, with surviving tenants' data and serve generations
+byte-identical to a no-compaction run."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    AdmissionStatus,
+    ElasticError,
+    ElasticPolicy,
+    ElasticState,
+    Ewma,
+    FencePolicy,
+    GuardianManager,
+    PressureTracker,
+)
+from repro.core.partition import (
+    BuddyAllocator,
+    IntraPartitionAllocator,
+    OutOfArenaMemory,
+    Partition,
+)
+
+
+def bump(arena, ptr, n):
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals + 1.0), None
+
+
+# ---------------------------------------------------------------------------
+# Buddy/bounds elastic primitives
+# ---------------------------------------------------------------------------
+
+
+def test_buddy_grow_in_place_requires_free_aligned_buddy():
+    alloc = BuddyAllocator(64)
+    a, _ = alloc.alloc(16)            # [0,16)
+    b, _ = alloc.alloc(16)            # [16,32)
+    assert alloc.grow_in_place(a) is None      # buddy [16,32) occupied
+    alloc.free(b)
+    assert alloc.grow_in_place(a) == 32        # absorbs [16,32)
+    # [32,64) is free; but a is now 32-sized at base 0 -> buddy free
+    assert alloc.grow_in_place(a) == 64
+    assert alloc.grow_in_place(a) is None      # whole arena: no further
+    c_base = a
+    alloc.free(c_base)
+    assert alloc.free_slots() == 64
+
+
+def test_buddy_grow_refuses_misaligned_base():
+    alloc = BuddyAllocator(64)
+    alloc.alloc(16)                   # [0,16)
+    b, _ = alloc.alloc(16)            # [16,32): base not aligned to 32
+    assert alloc.grow_in_place(b) is None
+    assert alloc._allocated[b] == 4   # untouched
+
+
+def test_buddy_shrink_in_place_frees_upper_buddies():
+    alloc = BuddyAllocator(64)
+    a, _ = alloc.alloc(32)            # [0,32)
+    assert alloc.shrink_in_place(a, 8) == 8
+    assert alloc.free_slots() == 64 - 8
+    # the vacated [8,16) and [16,32) coalesce with nothing illegal:
+    # a fresh 16-alloc lands in [16,32)
+    b, got = alloc.alloc(16)
+    assert (b, got) == (16, 16)
+    assert alloc.largest_free_block() == 32    # [32,64)
+
+
+def test_bounds_grow_shrink_relocate_preserve_invariants():
+    """I1 (pow2 size) and I2 (size-aligned base) survive every elastic
+    resize — the Partition constructor enforces them, so constructing
+    the resized partitions at all is the assertion."""
+    from repro.core.partition import PartitionBoundsTable
+    table = PartitionBoundsTable(256)
+    table.create("a", 16)
+    table.create("b", 16)
+    assert table.grow("a") is None             # b occupies the buddy
+    new = table.grow("b")                      # relocation is elastic's job
+    assert new is None or new.base % new.size == 0
+    shrunk = table.shrink("a", 4)
+    assert (shrunk.base, shrunk.size) == (0, 4)
+    old, moved = table.relocate("a", 8)
+    assert moved.size == 8 and moved.base % 8 == 0
+    assert old.base == 0
+    table.release_old(old)
+    assert table.lookup("a") is moved
+
+
+def _repack_case(allocs, frees):
+    part = Partition(tenant_id="t", base=0, size=64)
+    sub = IntraPartitionAllocator(part)
+    ptrs = [sub.alloc(n) for n in allocs]
+    for i in frees:
+        sub.free(ptrs[i])
+    return sub, [p for i, p in enumerate(ptrs) if i not in frees], \
+        [n for i, n in enumerate(allocs) if i not in frees]
+
+
+def _check_repack(allocs, frees):
+    sub, live_bases, live_lens = _repack_case(allocs, frees)
+    plan = sub.repack_plan()
+    # moves ascend and pack downward: sequential copy is overlap-safe
+    prev_new = -1
+    for old, new, ln in plan:
+        assert new <= old
+        assert new > prev_new
+        prev_new = new
+    remap = {o: n for o, n, _ in plan}
+    total = sum(live_lens)
+    # the packed layout is contiguous from 0
+    cursor = 0
+    for b, ln in sorted(zip([remap.get(b, b) for b in live_bases],
+                            live_lens)):
+        assert b == cursor
+        cursor += ln
+    assert cursor == total
+    sub.commit_repack(sub.part, plan)
+    assert sub.live_span() == total
+    # post-repack allocator still serves from the reclaimed tail
+    if total < 64:
+        assert sub.alloc(64 - total) == total
+
+
+def test_repack_plan_sweep():
+    cases = [
+        ((8, 8, 8), (1,)),
+        ((4, 4, 4, 4), (0, 2)),
+        ((16, 8, 4), ()),
+        ((2, 2, 2, 2, 2), (0, 1, 3)),
+        ((10, 6, 10), (1,)),
+    ]
+    for allocs, frees in cases:
+        _check_repack(allocs, frees)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    allocs=st.lists(st.integers(min_value=1, max_value=8), min_size=1,
+                    max_size=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_repack_plan_property(allocs, seed):
+    if sum(allocs) > 64:
+        return
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(0, len(allocs) + 1))
+    frees = tuple(sorted(rng.choice(len(allocs), size=k,
+                                    replace=False).tolist()))
+    _check_repack(tuple(allocs), frees)
+
+
+# ---------------------------------------------------------------------------
+# Pressure substrate
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_seeds_then_smooths():
+    ew = Ewma(alpha=0.5)
+    assert ew.update(4.0) == 4.0               # seeded, not biased to 0
+    assert ew.update(0.0) == 2.0
+    assert ew.update(2.0) == 2.0
+
+
+def test_pressure_tracker_dirty_gate_and_shrinkability():
+    tr = PressureTracker()
+    assert tr.sample(lambda t: None) == []     # clean: no per-tenant work
+    tr.note_alloc("a")
+    tr.observe("srv", 3, 8)
+    samples = {s.tenant_id: s for s in tr.sample(
+        lambda t: (4, 16) if t == "a" else None)}
+    assert samples["a"].shrinkable and samples["a"].utilization == 0.25
+    assert not samples["srv"].shrinkable
+    assert samples["srv"].live == 3 and samples["srv"].size == 8
+    assert not tr.dirty and tr.sample(lambda t: (4, 16)) == []
+
+
+def test_pressure_failures_reported_once():
+    tr = PressureTracker()
+    tr.note_failure("a")
+    (s,) = tr.sample(lambda t: (16, 16))
+    assert s.failures == 1
+    tr.note_alloc("a")
+    (s,) = tr.sample(lambda t: (16, 16))
+    assert s.failures == 0                     # consumed by the first sample
+
+
+# ---------------------------------------------------------------------------
+# Admission control + waitlist
+# ---------------------------------------------------------------------------
+
+
+def test_admit_waitlists_instead_of_failing_and_readmits_on_departure():
+    mgr = GuardianManager(total_slots=64)
+    a = mgr.elastic.admit("a", 32)
+    b = mgr.elastic.admit("b", 32)
+    assert a.status is AdmissionStatus.ADMITTED
+    assert b.status is AdmissionStatus.ADMITTED
+    c = mgr.elastic.admit("c", 16)
+    assert c.status is AdmissionStatus.WAITLISTED
+    assert c.client is None
+    assert mgr.elastic.state_of("c") is ElasticState.WAITLISTED
+    # a departure re-drives admission from the waitlist
+    mgr.remove_tenant("b")
+    assert c.status is AdmissionStatus.ADMITTED
+    assert c.client is not None
+    assert mgr.elastic.state_of("c") is ElasticState.ACTIVE
+    assert mgr.bounds.lookup("c").size == 16
+
+
+def test_waitlist_backfill_fills_holes_the_head_cannot_use():
+    """FIFO with backfill: the head keeps first claim on freed capacity
+    (and exclusive compaction rights), but a small tenant is never
+    head-of-line blocked behind a large one when a hole the head cannot
+    use is available."""
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("a", 32)
+    mgr.elastic.admit("b", 16)                 # 16 slots left free
+    big = mgr.elastic.admit("big", 32)         # does not fit: head
+    small = mgr.elastic.admit("small", 8)      # fits in the leftover 16
+    assert big.status is AdmissionStatus.WAITLISTED
+    assert small.status is AdmissionStatus.ADMITTED   # backfilled
+    mgr.remove_tenant("a")                     # head claims the 32 first
+    assert big.status is AdmissionStatus.ADMITTED
+    assert mgr.bounds.lookup("big").size == 32
+
+
+def test_quarantine_eviction_triggers_waitlist_readmission():
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("good", 32)
+    rogue = mgr.elastic.admit("rogue", 32)
+    assert rogue.status is AdmissionStatus.ADMITTED
+    waiting = mgr.elastic.admit("waiting", 32)
+    assert waiting.status is AdmissionStatus.WAITLISTED
+    mgr.quarantine.quarantine("rogue", reason="test")
+    assert waiting.status is AdmissionStatus.WAITLISTED  # partition kept
+    mgr.quarantine.evict("rogue")
+    assert waiting.status is AdmissionStatus.ADMITTED
+
+
+def test_admission_shrinks_idle_reservations_below_low_watermark():
+    mgr = GuardianManager(
+        total_slots=64,
+        elastic_policy=ElasticPolicy(min_slots=4, low_watermark=0.25))
+    idle = mgr.elastic.admit("idle", 32)
+    mgr.elastic.admit("busy", 32)
+    p = idle.client.malloc(2)                  # 2/32 live: deeply idle
+    idle.client.memcpy_h2d(p, np.full(2, 5.0, np.float32))
+    idle.client.synchronize()
+    # EWMA needs a sample history before admission may steal the reserve
+    mgr.elastic.poll()
+    adm = mgr.elastic.admit("newcomer", 16)
+    assert adm.status is AdmissionStatus.ADMITTED
+    assert mgr.bounds.lookup("idle").size < 32
+    np.testing.assert_array_equal(idle.client.memcpy_d2h(p, 2),
+                                  np.full(2, 5.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Live grow/shrink + pointer translation
+# ---------------------------------------------------------------------------
+
+
+def test_malloc_grows_partition_on_failure_and_old_ptrs_survive():
+    mgr = GuardianManager(
+        total_slots=128,
+        elastic_policy=ElasticPolicy(grow_on_failure=True))
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    p1 = a.malloc(12)
+    a.memcpy_h2d(p1, np.arange(12, dtype=np.float32))
+    a.synchronize()
+    p2 = a.malloc(10)                          # 22 > 16: grows (relocates)
+    part = mgr.bounds.lookup("a")
+    assert part.size == 32
+    a.memcpy_h2d(p2, np.full(10, 7.0, np.float32))
+    # ptr minted before the move still resolves (translated at use)
+    np.testing.assert_array_equal(a.memcpy_d2h(p1, 12),
+                                  np.arange(12, dtype=np.float32))
+    np.testing.assert_array_equal(a.memcpy_d2h(p2, 10),
+                                  np.full(10, 7.0, np.float32))
+
+
+def test_launch_with_pre_move_ptr_lands_in_new_extent():
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    a.module_load("bump", bump)
+    p = a.malloc(4)
+    a.memcpy_h2d(p, np.zeros(4, np.float32))
+    a.synchronize()
+    mgr.elastic.relocate("a", 16)
+    a.launch_kernel("bump", ptrs=[p], args=(4,))   # pre-move handle
+    a.synchronize()
+    np.testing.assert_array_equal(a.memcpy_d2h(p, 4),
+                                  np.ones(4, np.float32))
+    # and the write landed inside the NEW extent, not the old one
+    part = mgr.bounds.lookup("a")
+    own = np.asarray(mgr.arena.unsafe_read_range(part.base, part.size))
+    assert (own == 1.0).sum() == 4
+
+
+def test_malloc_raises_by_default_without_grow_opt_in():
+    """No elastic opt-in: the paper's reserve-at-init semantics hold —
+    over-malloc fails instead of silently consuming arena headroom."""
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 16)
+    a.malloc(16)
+    with pytest.raises(OutOfArenaMemory):
+        a.malloc(1)
+    assert mgr.bounds.lookup("a").size == 16
+
+
+def test_ptr_epochs_prevent_reused_address_aliasing():
+    """A repack can hand a NEW allocation the address an old handle was
+    minted at.  Translation is keyed by mint epoch, so the fresh ptr
+    resolves to itself while the stale handle still chases its moved
+    data — no aliasing."""
+    mgr = GuardianManager(total_slots=64)
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    x = a.malloc(4)                            # rel 0
+    y = a.malloc(4)                            # rel 4
+    a.memcpy_h2d(y, np.full(4, 2.0, np.float32))
+    a.synchronize()
+    a.free(x)
+    mgr.elastic.shrink("a", 8)                 # repack: y moves rel 4 -> 0
+    z = a.malloc(4)                            # rel 4: y's MINTED address
+    assert z.addr == y.addr and z.epoch != y.epoch
+    a.memcpy_h2d(z, np.full(4, 9.0, np.float32))
+    # each handle reaches its own storage
+    np.testing.assert_array_equal(a.memcpy_d2h(y, 4),
+                                  np.full(4, 2.0, np.float32))
+    np.testing.assert_array_equal(a.memcpy_d2h(z, 4),
+                                  np.full(4, 9.0, np.float32))
+
+
+def test_auto_resize_poll_grows_under_pressure_and_shrinks_idle():
+    mgr = GuardianManager(
+        total_slots=256,
+        elastic_policy=ElasticPolicy(auto_resize=True, min_slots=8,
+                                     high_watermark=0.85,
+                                     low_watermark=0.25))
+    a = mgr.register_tenant("a", 32)
+    mgr.register_tenant("b", 32)
+    ptrs = [a.malloc(8) for _ in range(4)]     # 32/32 live
+    for _ in range(3):
+        mgr.elastic.poll()
+        mgr.elastic.pressure.note_alloc("a")
+    assert mgr.bounds.lookup("a").size > 32    # grew under pressure
+    for p in ptrs[1:]:
+        a.free(p)                              # 8 live of >= 64
+    for _ in range(8):
+        mgr.elastic.poll()
+        mgr.elastic.pressure.note_free("a")
+    # shrank (halving per poll) until utilization left the idle band:
+    # 8 live of 16 = 0.5 >= low watermark, so 16 is the fixpoint
+    assert mgr.bounds.lookup("a").size == 16
+    np.testing.assert_array_equal(
+        a.memcpy_d2h(ptrs[0], 8), np.zeros(8, np.float32))
+
+
+def test_resize_refused_while_tenant_has_queued_work():
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    a.module_load("bump", bump)
+    p = a.malloc(4)
+    a.memcpy_h2d(p, np.zeros(4, np.float32))   # queued (SPATIAL): busy
+    with pytest.raises(ElasticError):
+        mgr.elastic.relocate("a", 32)
+    a.synchronize()
+    assert mgr.elastic.relocate("a", 32).size == 32
+
+
+def test_grow_in_place_never_needs_idle_tenant():
+    """An in-place grow moves no data, so it is legal even with work
+    queued — the base never changes, staged operands stay valid."""
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 16)           # [0,16), buddy [16,32) free
+    a.module_load("bump", bump)
+    p = a.malloc(4)
+    a.memcpy_h2d(p, np.zeros(4, np.float32))   # queued: tenant busy
+    new = mgr.elastic.grow("a")
+    assert (new.base, new.size) == (0, 32)
+    a.synchronize()
+    np.testing.assert_array_equal(a.memcpy_d2h(p, 4),
+                                  np.zeros(4, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Compaction churn proof (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_churn_compaction_admits_after_reject_raw_launch_plane():
+    """admit/depart/grow across 4 tenants fragments the arena; a static
+    register is rejected; one compaction pass admits it — and the
+    surviving tenants' arena bytes are exactly what a no-compaction run
+    produced (relocation is invisible)."""
+    def run(compaction: bool):
+        mgr = GuardianManager(total_slots=64)
+        clients = {}
+        for t, n in (("a", 16), ("b", 16), ("c", 16)):
+            clients[t] = mgr.elastic.admit(t, n).client
+            clients[t].module_load("bump", bump)
+        ptrs = {}
+        for i, (t, c) in enumerate(clients.items()):
+            ptrs[t] = c.malloc(8)
+            c.memcpy_h2d(ptrs[t], np.full(8, float(i + 1), np.float32))
+            c.launch_kernel("bump", ptrs=[ptrs[t]], args=(8,))
+        mgr.synchronize()
+        mgr.remove_tenant("b")                 # free [16,32) + [48,64)
+        del clients["b"], ptrs["b"]
+        if compaction:
+            with pytest.raises(OutOfArenaMemory):
+                mgr.bounds.create("d", 32)     # fragmented: static reject
+            adm = mgr.elastic.admit("d", 32)   # shrink/compact makes room
+            assert adm.status is AdmissionStatus.ADMITTED
+            assert mgr.elastic.stats["compactions"] >= 1
+        # surviving tenants' data, read back through their (possibly
+        # translated) handles
+        return {t: np.asarray(c.memcpy_d2h(ptrs[t], 8))
+                for t, c in clients.items()}
+
+    with_c = run(compaction=True)
+    without = run(compaction=False)
+    assert set(with_c) == {"a", "c"}
+    for t in with_c:
+        np.testing.assert_array_equal(with_c[t], without[t])
+        np.testing.assert_array_equal(
+            with_c[t], np.full(8, float({"a": 1, "c": 3}[t]) + 1.0,
+                               np.float32))
+
+
+def test_compaction_scrubs_vacated_extents():
+    mgr = GuardianManager(total_slots=64)
+    a = mgr.elastic.admit("a", 16).client
+    b = mgr.elastic.admit("b", 16).client
+    c = mgr.elastic.admit("c", 16).client
+    pc = c.malloc(16)
+    c.memcpy_h2d(pc, np.full(16, 9.0, np.float32))
+    c.synchronize()
+    mgr.remove_tenant("b")
+    old = mgr.bounds.lookup("c")
+    assert mgr.elastic.compact() == 1          # c moves down into b's hole
+    new = mgr.bounds.lookup("c")
+    assert new.base < old.base
+    # the vacated extent handed back zeroed (no cross-tenant leak)
+    left = np.asarray(mgr.arena.unsafe_read_range(old.base, old.size))
+    np.testing.assert_array_equal(left, np.zeros(old.size, np.float32))
+    np.testing.assert_array_equal(c.memcpy_d2h(pc, 16),
+                                  np.full(16, 9.0, np.float32))
+
+
+def test_churn_compaction_serve_generations_byte_identical():
+    """The serving-plane churn proof: tenants admit/depart/grow on a
+    shared KV pool; the fragmented pool rejects a tenant until a
+    compaction pass relocates a survivor's slots (pool moved through the
+    trusted relocation step); the survivors' subsequent generations are
+    byte-identical to a run that never compacted."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(11)
+    prompts = {t: rng.integers(0, cfg.vocab, 10, np.int32)
+               for t in ("t0", "t1", "t2")}
+    round2 = {t: rng.integers(0, cfg.vocab, 10, np.int32)
+              for t in ("t0", "t2", "t3")}
+
+    def run(compaction: bool):
+        eng = ServeEngine(cfg, max_batch=8, max_len=64)
+        for t in ("t0", "t1", "t2"):
+            eng.register_tenant(t, 2)
+        rids = {t: eng.submit(t, p) for t, p in prompts.items()}
+        out1 = eng.run(max_new_tokens=4)
+        gens = {t: out1[r] for t, r in rids.items()}
+        eng.manager.remove_tenant("t1")        # fragment: [free][t2][free]
+        if compaction:
+            with pytest.raises(OutOfArenaMemory):
+                eng.manager.bounds.create("t3", 4)   # static reject
+            adm = eng.manager.elastic.admit("t3", 4)
+            assert adm.status is AdmissionStatus.ADMITTED
+            assert eng.manager.elastic.stats["relocations"] >= 1
+            eng._tenants.add("t3")
+            rid3 = eng.submit("t3", round2["t3"])
+        rids2 = {t: eng.submit(t, round2[t]) for t in ("t0", "t2")}
+        out2 = eng.run(max_new_tokens=4)
+        gens2 = {t: out2[r] for t, r in rids2.items()}
+        if compaction:
+            assert len(out2[rid3]) == 4        # the admitted tenant serves
+        return gens, gens2
+
+    gens_c, gens2_c = run(compaction=True)
+    gens_n, gens2_n = run(compaction=False)
+    assert gens_c == gens_n                    # pre-churn identical
+    assert gens2_c == gens2_n                  # survivors unperturbed
+
+
+# ---------------------------------------------------------------------------
+# State machine + stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_states_follow_the_design_machine():
+    mgr = GuardianManager(total_slots=64)
+    adm = mgr.elastic.admit("a", 16)
+    assert mgr.elastic.state_of("a") is ElasticState.ACTIVE
+    mgr.register_tenant("b", 16)
+    seen = []
+    mgr.elastic.subscribe(
+        lambda ev: seen.append((ev.kind, mgr.elastic.state_of(ev.tenant_id))))
+    mgr.elastic.relocate("a", 16)
+    assert seen and seen[0][0] == "relocate"
+    assert seen[0][1] is ElasticState.RESIZING   # mid-transition
+    assert mgr.elastic.state_of("a") is ElasticState.ACTIVE
+    mgr.remove_tenant("a")
+    assert mgr.elastic.state_of("a") is None
+
+
+def test_elastic_events_and_stats_accumulate():
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("a", 16)
+    w = mgr.elastic.admit("w", 64)
+    assert w.status is AdmissionStatus.WAITLISTED
+    assert mgr.elastic.stats["admitted"] == 1
+    assert mgr.elastic.stats["waitlisted"] == 1
+    assert any(e.startswith("admit a") for e in mgr.elastic.events)
+    assert any(e.startswith("waitlist w") for e in mgr.elastic.events)
+
+
+# ---------------------------------------------------------------------------
+# Review regressions: dedupe, shrink guard, withdraw, placement probe
+# ---------------------------------------------------------------------------
+
+
+def test_buddy_peek_alloc_mirrors_alloc_choice():
+    alloc = BuddyAllocator(64)
+    a, _ = alloc.alloc(16)
+    b, _ = alloc.alloc(8)
+    alloc.free(a)
+    for size in (4, 8, 16, 32):
+        peek = alloc.peek_alloc(size)
+        base, got = alloc.alloc(size)
+        assert peek == base, (size, peek, base)
+        alloc.free(base)
+    assert alloc.peek_alloc(128) is None
+
+
+def test_relocate_refuses_extent_too_small_for_live_data():
+    """A destination too small for the live allocations must fail
+    *before* any device work — the data stays byte-intact in place."""
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 64)
+    mgr.register_tenant("b", 16)
+    p = a.malloc(40)
+    a.memcpy_h2d(p, np.arange(40, dtype=np.float32))
+    a.synchronize()
+    with pytest.raises(ElasticError):
+        mgr.elastic.relocate("a", 32)          # 40 live > 32
+    part = mgr.bounds.lookup("a")
+    assert part.size == 64                     # bounds untouched
+    np.testing.assert_array_equal(a.memcpy_d2h(p, 40),
+                                  np.arange(40, dtype=np.float32))
+
+
+def test_withdraw_removes_waitlisted_tenant_before_admission():
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("a", 64)
+    w = mgr.elastic.admit("w", 16)
+    assert w.status is AdmissionStatus.WAITLISTED
+    assert mgr.elastic.withdraw("w")
+    assert not mgr.elastic.withdraw("w")       # idempotent
+    mgr.remove_tenant("a")                     # would have admitted w
+    assert w.status is AdmissionStatus.WAITLISTED
+    assert mgr.elastic.state_of("w") is None
+    assert not mgr.elastic.withdraw("a")       # admitted: not withdrawable
+
+
+def test_shared_pool_relocation_dispatches_once_across_engines():
+    """Two co-hosted engines both serving a tenant each observe its
+    resize, but the shared pool must move exactly ONCE — a second
+    copy-then-zero pass would wipe the just-moved KV slots."""
+    from repro.configs import get_config
+    from repro.launch.serve import (
+        ServeEngine,
+        make_shared_manager,
+        serve_engines,
+    )
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(13)
+    mgr = make_shared_manager(2, max_batch=4)
+    engines = [ServeEngine(cfg, max_batch=4, max_len=64, manager=mgr)
+               for _ in range(2)]
+    engines[0].register_tenant("a", 2)
+    r0 = engines[0].submit("a", rng.integers(0, cfg.vocab, 8, np.int32))
+    r1 = engines[1].submit("a", rng.integers(0, cfg.vocab, 8, np.int32))
+    outs = serve_engines(engines, max_new_tokens=2)
+    assert len(outs[0][r0]) == 2 and len(outs[1][r1]) == 2
+    old = mgr.bounds.lookup("a")
+    pool = engines[0]._pool.buf
+    k = next(iter(pool.values())) if isinstance(pool, dict) else pool
+    before = np.asarray(engines[0]._pool.buf["k"]
+                        [:, old.base:old.base + old.size]).copy()
+    assert (before != 0).any()                 # the tenant wrote KV
+    new = mgr.elastic.relocate("a", old.size)  # both engines notified
+    after = np.asarray(engines[0]._pool.buf["k"]
+                       [:, new.base:new.base + new.size])
+    np.testing.assert_array_equal(before, after)   # moved, not wiped
+
+
+def test_ptr_translation_survives_unrelated_moves_between_epochs():
+    """A ptr minted in an old epoch whose block sat still through later
+    epochs must still translate when a NEWER move finally relocates it
+    (the remap folds into every epoch's table, not just the current
+    one)."""
+    mgr = GuardianManager(total_slots=128)
+    a = mgr.register_tenant("a", 32)
+    mgr.register_tenant("b", 32)
+    p_still = a.malloc(4)                      # rel 0: epoch 0
+    gap = a.malloc(4)                          # rel 4
+    p_move = a.malloc(4)                       # rel 8
+    a.memcpy_h2d(p_still, np.full(4, 1.0, np.float32))
+    a.memcpy_h2d(p_move, np.full(4, 3.0, np.float32))
+    a.synchronize()
+    a.free(gap)
+    mgr.elastic.shrink("a", 8)                 # epoch 1: moves p_move only
+    mgr.elastic.relocate("a", 8)               # epoch 2: moves EVERYTHING
+    np.testing.assert_array_equal(a.memcpy_d2h(p_still, 4),
+                                  np.full(4, 1.0, np.float32))
+    np.testing.assert_array_equal(a.memcpy_d2h(p_move, 4),
+                                  np.full(4, 3.0, np.float32))
+    a.free(p_still)                            # epoch-0 handle still frees
+
+
+def test_banned_id_admission_rejects_without_wedging_the_waitlist():
+    """A banned (evicted) id on the waitlist is REJECTED — it neither
+    blocks co-waiting tenants nor aborts the drain a departure
+    triggered."""
+    from repro.core import FencePolicy
+
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("a", 32)
+    mgr.elastic.admit("rogue", 16)
+    mgr.quarantine.quarantine("rogue", reason="t")
+    mgr.quarantine.evict("rogue")              # id now banned; 32 free
+    banned = mgr.elastic.admit("rogue", 8)     # attempted: ban rejects
+    assert banned.status is AdmissionStatus.REJECTED
+    w = mgr.elastic.admit("w", 64)             # true capacity wait
+    assert w.status is AdmissionStatus.WAITLISTED
+    # bad arguments reject on attempt instead of waitlisting forever
+    bad = mgr.elastic.admit("npol", 8, policy=FencePolicy.NONE)
+    assert bad.status is AdmissionStatus.REJECTED
+    mgr.remove_tenant("a")                     # re-drives the waitlist
+    assert w.status is AdmissionStatus.ADMITTED   # not dropped, not wedged
+    assert not mgr.elastic.waitlist
+
+
+def test_relocation_scrub_ranges_validated_against_extents():
+    from repro.launch.steps import build_flat_relocation_step
+
+    with pytest.raises(ValueError):
+        build_flat_relocation_step(
+            moves=(), zeros=((64, 16),),       # outside both extents
+            src_extent=(0, 16), dst_extent=(32, 16))
+    # in-extent scrubs build fine
+    build_flat_relocation_step(
+        moves=((0, 32, 8),), zeros=((0, 16),),
+        src_extent=(0, 16), dst_extent=(32, 16))
+
+
+def test_relocation_with_repack_copies_already_packed_blocks():
+    """A block already sitting at its packed offset is absent from the
+    repack plan, but it still has to cross to the new extent — the old
+    one is being vacated and scrubbed."""
+    mgr = GuardianManager(
+        total_slots=128,
+        elastic_policy=ElasticPolicy(grow_on_failure=True))
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    front = a.malloc(4)                        # rel 0: already packed
+    mid = a.malloc(4)                          # rel 4: freed below
+    tail = a.malloc(4)                         # rel 8: plan moves it
+    a.memcpy_h2d(front, np.full(4, 1.0, np.float32))
+    a.memcpy_h2d(tail, np.full(4, 3.0, np.float32))
+    a.synchronize()
+    a.free(mid)
+    mgr.elastic.relocate("a", 8)               # span 12 > 8: repack path
+    np.testing.assert_array_equal(a.memcpy_d2h(front, 4),
+                                  np.full(4, 1.0, np.float32))
+    np.testing.assert_array_equal(a.memcpy_d2h(tail, 4),
+                                  np.full(4, 3.0, np.float32))
+
+
+def test_duplicate_admit_of_live_tenant_rejects_without_state_damage():
+    mgr = GuardianManager(total_slots=64)
+    mgr.elastic.admit("a", 16)
+    assert mgr.elastic.state_of("a") is ElasticState.ACTIVE
+    dup = mgr.elastic.admit("a", 8)
+    assert dup.status is AdmissionStatus.REJECTED
+    assert mgr.elastic.state_of("a") is ElasticState.ACTIVE  # untouched
+    assert mgr.bounds.lookup("a").size == 16
+
+
+def test_pool_relocation_skips_tensors_short_of_either_extent():
+    """A tensor long enough for the source range but short of the
+    destination range is a meta-shaped straggler: it must pass through
+    untouched, not be clamp-written at the wrong rows."""
+    from repro.launch.steps import build_pool_relocation_step
+
+    fn = build_pool_relocation_step(src=0, dst=48, size=16)
+    pool = {"short": jnp.arange(56, dtype=jnp.float32).reshape(1, 56),
+            "full": jnp.ones((1, 64, 2), jnp.float32)}
+    # short: axis-1 = 56 covers [src, src+16) but NOT [dst, dst+16) —
+    # the old source-only guard would clamp-write it at row 40
+    _, new_pool, _ = fn(None, pool)
+    np.testing.assert_array_equal(np.asarray(new_pool["short"]),
+                                  np.asarray(pool["short"]))
+    # the genuinely slot-indexed tensor moved: source zeroed, dst set
+    full = np.asarray(new_pool["full"])
+    assert (full[:, 0:16] == 0).all() and (full[:, 48:64] == 1).all()

@@ -197,3 +197,90 @@ def test_libsim_end_to_end_with_implicit_calls():
     t1.synchronize()
     np.testing.assert_array_equal(t2.memcpy_d2h(victim, 16),
                                   np.full(16, 3.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# PoolArena edge cases exposed by elastic resizing
+# ---------------------------------------------------------------------------
+
+
+def test_pool_arena_zero_slot_pool_threads_through_steps():
+    """A zero-slot pool (a tenant shrunk to nothing / a cold engine) is
+    a legal PoolArena: trusted steps thread it through compiled and
+    fused dispatch without special-casing."""
+    mgr = make_manager(total_slots=64)
+    empty = {"k": jnp.zeros((2, 0, 4), jnp.float32)}
+    mgr.register_pool("empty_pool", empty)
+
+    def step(arena, pool, x):
+        return arena, pool, x + pool["k"].shape[1]   # slot count = 0
+
+    mgr.register_trusted_kernel("step0", step, pool_arena="empty_pool")
+    a = mgr.register_tenant("a", 8)
+    b = mgr.register_tenant("b", 8)
+    ra = a.launch_kernel("step0", args=(jnp.float32(1.0),))
+    rb = b.launch_kernel("step0", args=(jnp.float32(2.0),))
+    mgr.synchronize()
+    assert float(ra.result) == 1.0 and float(rb.result) == 2.0
+    assert mgr.scheduler.stats.fused_steps == 1   # zero slots still fuse
+    assert mgr.arenas["empty_pool"].buf["k"].shape == (2, 0, 4)
+
+
+def test_pool_slot_map_rewrite_defers_under_queued_decodes():
+    """The elastic manager must never rewrite a pool slot map while
+    decode steps are queued against it (their staged operands reference
+    the old extent): relocation is refused until the drain, then lands
+    with the moved slots intact."""
+    from repro.core import ElasticError
+
+    mgr = make_manager(total_slots=64)
+    pool = {"k": jnp.zeros((2, 64, 4), jnp.float32)}
+    mgr.register_pool("kv", pool)
+
+    def decode(arena, pool, slot):
+        k = pool["k"].at[:, slot].add(1.0)
+        return arena, {"k": k}, None
+
+    mgr.register_trusted_kernel("decode", decode, pool_arena="kv")
+    a = mgr.register_tenant("a", 16)
+    mgr.register_tenant("b", 16)
+    part = mgr.bounds.lookup("a")
+    slot = jnp.int32(part.base)
+    for _ in range(3):
+        a.launch_kernel("decode", args=(slot,))
+    # queued decodes: the slot-map rewrite must wait
+    with pytest.raises(ElasticError):
+        mgr.elastic.relocate("a", 16)
+    mgr.synchronize()
+    new = mgr.elastic.relocate("a", 16)           # drained: legal now
+    assert new.base != part.base
+    # pool rows moved with the extent is the *serve engine's* listener
+    # job; at manager level the decode results landed pre-move
+    assert float(mgr.arenas["kv"].buf["k"][0, part.base, 0]) == 3.0
+
+
+def test_trusted_donation_declared_but_noop_on_cpu():
+    """donate_argnums on a trusted kernel is compiled in but inert on
+    CPU (donation_supported() is False): the donated operand's buffer
+    survives the call — the documented no-op — and results match."""
+    from repro.core.scheduler import donation_supported
+
+    assert not donation_supported()               # CPU test environment
+    mgr = make_manager(total_slots=64)
+
+    def step(arena, consumed, x):
+        return arena, consumed * 0 + x
+
+    mgr.register_trusted_kernel("dstep", step, donate_argnums=(1,))
+    c = mgr.register_tenant("svc", 16)
+    buf = jnp.full((8,), 3.0, jnp.float32)
+    req = c.launch_kernel("dstep", args=(buf, jnp.float32(5.0)))
+    mgr.synchronize()
+    np.testing.assert_array_equal(np.asarray(req.result),
+                                  np.full(8, 5.0, np.float32))
+    # no donation happened: the operand is still alive and readable
+    np.testing.assert_array_equal(np.asarray(buf),
+                                  np.full(8, 3.0, np.float32))
+    # and the compiled entry cached under the trusted key
+    entry = mgr.pointer_to_symbol["dstep"]
+    assert any(k[0] == "trusted" for k in entry.jit_cache)

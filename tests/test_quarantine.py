@@ -561,3 +561,99 @@ def test_serve_mixed_policies_match_homogeneous_for_honest_tenants():
         out = eng.run(max_new_tokens=4)
         outs.append({t: out[r] for t, r in rids.items()})
     assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Automatic readmission probes (probation partitions)
+# ---------------------------------------------------------------------------
+
+
+def _quarantine_rogue(mgr, clients, threshold=4):
+    """Drive the last client over the CHECK threshold; returns its id."""
+    rogue = clients[-1]
+    outside = jnp.int32(mgr.bounds.total_slots - 8)
+    while mgr.quarantine.state_of(rogue.tenant_id).admissible:
+        rogue.launch_kernel("evil", args=(outside, 8))
+        mgr.run_queued()
+    return rogue.tenant_id
+
+
+def test_probe_readmits_after_n_clean_cycles_into_probation():
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=4),
+        readmit_after=3)
+    good, rogue_id = clients[0], _quarantine_rogue(mgr, clients)
+    assert mgr.quarantine.state_of(rogue_id) is TenantState.QUARANTINED
+    big_before = mgr.bounds.lookup(rogue_id).size
+    # clean cycles: only the good tenant drains; the probe clock advances
+    p = good.malloc(4)
+    good.memcpy_h2d(p, np.zeros(4, np.float32))
+    for _ in range(3):
+        good.launch_kernel("bump", ptrs=[p], args=(4,))
+        mgr.run_queued()
+    rec = mgr.quarantine.machine.record_of(rogue_id)
+    assert rec.state is TenantState.READMITTED
+    assert rec.probation
+    assert any(e.startswith(f"probe-readmit {rogue_id}")
+               for e in mgr.quarantine.events)
+    # probation partition sized by the admission controller (live span
+    # is 0 -> the policy floor), smaller than the original reservation
+    part = mgr.bounds.lookup(rogue_id)
+    assert part.size == mgr.elastic.probation_slots_for(rogue_id)
+    assert part.size < big_before
+    # counters were wiped; the tenant serves again
+    assert mgr.violog.total(rogue_id) == 0
+    clients[-1].launch_kernel("bump", ptrs=[clients[-1].malloc(2)],
+                              args=(2,))
+    mgr.run_queued()
+
+
+def test_probation_violation_evicts_on_first_offense():
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=4),
+        readmit_after=1)
+    good, rogue_id = clients[0], _quarantine_rogue(mgr, clients)
+    # one clean cycle -> probe readmission
+    p = good.malloc(4)
+    good.memcpy_h2d(p, np.zeros(4, np.float32))
+    good.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.run_queued()
+    assert mgr.quarantine.machine.record_of(rogue_id).probation
+    # a single violation on probation evicts — no second threshold
+    outside = jnp.int32(mgr.bounds.total_slots - 8)
+    clients[-1].launch_kernel("evil", args=(outside, 8))
+    mgr.run_queued()
+    assert mgr.quarantine.state_of(rogue_id) is TenantState.EVICTED
+    # and the ban sticks: re-registration is refused
+    with pytest.raises(QuarantineError):
+        mgr.register_tenant(rogue_id, 8)
+
+
+def test_manual_readmit_clears_probation():
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=4),
+        readmit_after=1)
+    good, rogue_id = clients[0], _quarantine_rogue(mgr, clients)
+    p = good.malloc(4)
+    good.memcpy_h2d(p, np.zeros(4, np.float32))
+    good.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.run_queued()
+    rec = mgr.quarantine.machine.record_of(rogue_id)
+    assert rec.probation
+    # an operator quarantine + readmit is an explicit trust statement
+    mgr.quarantine.quarantine(rogue_id, reason="manual review")
+    mgr.quarantine.readmit(rogue_id)
+    assert not mgr.quarantine.machine.record_of(rogue_id).probation
+
+
+def test_probes_disabled_by_default():
+    mgr, clients = make_manager(
+        3, quarantine_policy=ThresholdPolicy(quarantine_after=4))
+    good, rogue_id = clients[0], _quarantine_rogue(mgr, clients)
+    p = good.malloc(4)
+    good.memcpy_h2d(p, np.zeros(4, np.float32))
+    for _ in range(10):
+        good.launch_kernel("bump", ptrs=[p], args=(4,))
+        mgr.run_queued()
+    # no readmit_after: QUARANTINED is stable until the operator acts
+    assert mgr.quarantine.state_of(rogue_id) is TenantState.QUARANTINED

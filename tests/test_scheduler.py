@@ -783,6 +783,200 @@ def test_lookahead_weighted_fairness_property(depths, weights, look):
     _check_lookahead_invariants(depths, weights, look)
 
 
+def test_adaptive_lookahead_off_by_default_and_static_knob_wins():
+    mgr, _ = make_manager(2)
+    assert mgr.scheduler.current_lookahead == 0
+    mgr2, _ = make_manager(2, lookahead_cycles=3, adaptive_lookahead=True)
+    # the static knob overrides adaptation entirely
+    assert mgr2.scheduler.current_lookahead == 3
+    mgr2.scheduler._adaptive_budget = 7
+    assert mgr2.scheduler.current_lookahead == 3
+
+
+def _ewma_mirror(series, alpha=0.5):
+    """Host mirror of pressure.Ewma (seeded first sample)."""
+    v = None
+    for x in series:
+        v = float(x) if v is None else alpha * x + (1 - alpha) * v
+    return v or 0.0
+
+
+def _derived_mirror(total_rate, max_fuse, cap):
+    """Host mirror of pressure.derive_lookahead."""
+    import math
+    if total_rate <= 0 or max_fuse <= 1:
+        return 0
+    return max(0, min(math.ceil((max_fuse - 1) / total_rate), cap))
+
+
+def test_adaptive_lookahead_budget_tracks_arrival_rates_exact():
+    """Deterministic sweep: after each drain the scheduler's budget
+    equals ceil((max_fuse-1)/sum(EWMA rates)) clamped to the cap — the
+    documented derivation, mirrored in plain arithmetic."""
+    from repro.core import derive_lookahead
+
+    for pattern in ([(2, 2, 2)], [(1, 0, 0), (1, 0, 0)],
+                    [(3, 1, 0), (0, 0, 0), (2, 2, 2)]):
+        mgr, clients = make_manager(3, adaptive_lookahead=True,
+                                    adaptive_lookahead_cap=4, max_fuse=8)
+        for c in clients:
+            c.module_load("bump", bump)
+        ptrs = [c.malloc(4) for c in clients]
+        for c, p in zip(clients, ptrs):
+            c.memcpy_h2d(p, np.zeros(4, np.float32))
+        mgr.synchronize()
+        per_tenant = {c.tenant_id: [] for c in clients}
+        for depths in pattern:
+            for c, p, d in zip(clients, ptrs, depths):
+                for _ in range(d):
+                    c.launch_kernel("bump", ptrs=[p], args=(4,))
+            mgr.run_queued()
+            # mirror: every drain cycle in run_queued updates the EWMA;
+            # the final budget reflects the last cycle's rates
+        sched = mgr.scheduler
+        total = sum(ew.value for ew in sched._arrival_ewma.values())
+        expect = _derived_mirror(total, sched.max_fuse,
+                                 sched.adaptive_lookahead_cap)
+        assert sched.current_lookahead == expect
+        assert sched.current_lookahead == derive_lookahead(
+            (ew.value for ew in sched._arrival_ewma.values()),
+            sched.max_fuse, sched.adaptive_lookahead_cap)
+        assert sched.stats.summary()["lookahead_budget"] == float(expect)
+
+
+def test_adaptive_lookahead_dense_traffic_keeps_budget_small():
+    """Dense arrivals (every tenant submitting each cycle) fill batches
+    within a cycle: the derived budget collapses to 1 — adaptation never
+    inflates latency where the static tuning would be 0-1."""
+    mgr, clients = make_manager(4, adaptive_lookahead=True,
+                                adaptive_lookahead_cap=8, max_fuse=4)
+    for c in clients:
+        c.module_load("bump", bump)
+    ptrs = [c.malloc(4) for c in clients]
+    for c, p in zip(clients, ptrs):
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+    mgr.synchronize()
+    for _ in range(4):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(4,))
+        mgr.run_queued()
+    assert mgr.scheduler.current_lookahead == 1
+    # and every launch still dispatched within the budget
+    assert all(a <= 1 for a in mgr.scheduler.stats.queue_ages)
+
+
+def test_adaptive_lookahead_sparse_traffic_holds_for_fusion():
+    """Sparse single-tenant-per-cycle traffic: the derived budget grows
+    (capped), and under-filled batches hold across cycles — lookahead
+    fusion happens with no static knob at all."""
+    mgr, clients = make_manager(2, adaptive_lookahead=True,
+                                adaptive_lookahead_cap=4, max_fuse=4)
+    for c in clients:
+        c.module_load("bump", bump)
+    ptrs = [c.malloc(4) for c in clients]
+    for c, p in zip(clients, ptrs):
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+    mgr.synchronize()
+    # warm the EWMA: both tenants trickle one op per drain
+    for _ in range(3):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("bump", ptrs=[p], args=(4,))
+        mgr.run_queued()
+    assert mgr.scheduler.current_lookahead >= 1
+    base_fused = mgr.scheduler.stats.lookahead_fused
+    # uneven depths in ONE drain: cycle 1's width-2 batch is held under
+    # the derived budget and cycle 2's op joins it — lookahead fusion
+    # with no static knob at all
+    clients[0].launch_kernel("bump", ptrs=[ptrs[0]], args=(4,))
+    clients[0].launch_kernel("bump", ptrs=[ptrs[0]], args=(4,))
+    clients[1].launch_kernel("bump", ptrs=[ptrs[1]], args=(4,))
+    mgr.run_queued()
+    assert mgr.scheduler.stats.lookahead_fused > base_fused
+    assert mgr.scheduler.pending == 0
+
+
+def test_adaptive_lookahead_bit_identical_results():
+    """Adaptation changes dispatch timing, never results: final arena
+    equals the static-knob and no-lookahead drains."""
+    arenas = []
+    for kw in ({"adaptive_lookahead": True, "adaptive_lookahead_cap": 3},
+               {"lookahead_cycles": 3}, {}):
+        mgr, clients = make_manager(3, **kw)
+        for i, c in enumerate(clients):
+            c.module_load("bump", bump)
+            p = c.malloc(8)
+            c.memcpy_h2d(p, np.arange(8, dtype=np.float32) * (i + 1))
+            for _ in range(i + 2):
+                c.launch_kernel("bump", ptrs=[p], args=(8,))
+        mgr.synchronize()
+        arenas.append(np.asarray(mgr.arena.buf))
+    np.testing.assert_array_equal(arenas[0], arenas[1])
+    np.testing.assert_array_equal(arenas[0], arenas[2])
+
+
+def test_adaptive_lookahead_forgets_departed_tenants():
+    mgr, clients = make_manager(3, adaptive_lookahead=True)
+    for c in clients:
+        c.module_load("bump", bump)
+    ptrs = [c.malloc(4) for c in clients]
+    for c, p in zip(clients, ptrs):
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+        c.launch_kernel("bump", ptrs=[p], args=(4,))
+    mgr.synchronize()
+    assert "t0" in mgr.scheduler._arrival_ewma
+    mgr.remove_tenant("t0")
+    assert "t0" not in mgr.scheduler._arrival_ewma
+
+
+def _run_adaptive_case(depth_rounds, cap):
+    mgr, clients = make_manager(3, adaptive_lookahead=True,
+                                adaptive_lookahead_cap=cap, max_fuse=4)
+    for c in clients:
+        c.module_load("bump", bump)
+    ptrs = [c.malloc(4) for c in clients]
+    for c, p in zip(clients, ptrs):
+        c.memcpy_h2d(p, np.zeros(4, np.float32))
+    mgr.synchronize()
+    mgr.scheduler.stats.queue_ages.clear()
+    n = 0
+    for depths in depth_rounds:
+        for c, p, d in zip(clients, ptrs, depths):
+            for _ in range(d):
+                c.launch_kernel("bump", ptrs=[p], args=(4,))
+                n += 1
+        mgr.run_queued()
+    sched = mgr.scheduler
+    assert sched.pending == 0
+    ages = list(sched.stats.queue_ages)
+    assert len(ages) == n
+    # the latency invariant: no launch ever waits past the cap
+    assert all(a <= cap for a in ages), (depth_rounds, cap, ages)
+
+
+def test_adaptive_lookahead_latency_bounded_by_cap_sweep():
+    cases = [
+        ([(2, 0, 0), (0, 2, 0), (0, 0, 2)], 2),
+        ([(1, 1, 1)] * 3, 1),
+        ([(3, 0, 1), (0, 0, 0), (1, 2, 0)], 4),
+        ([(1, 0, 0)] * 5, 3),
+    ]
+    for depth_rounds, cap in cases:
+        _run_adaptive_case(depth_rounds, cap)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rounds=st.lists(
+        st.tuples(*[st.integers(min_value=0, max_value=3)] * 3),
+        min_size=1, max_size=4),
+    cap=st.integers(min_value=0, max_value=4),
+)
+def test_adaptive_lookahead_latency_property(rounds, cap):
+    if sum(sum(r) for r in rounds) == 0:
+        return
+    _run_adaptive_case(rounds, cap)
+
+
 def test_round_robin_interleave_weighted():
     from repro.core import round_robin_interleave
 

@@ -259,3 +259,30 @@ def test_dryrun_cli_single_cell(tmp_path):
         env={**os.environ, "PYTHONPATH": "src"}, timeout=900)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
+
+
+def test_serve_pool_resizes_with_tenant():
+    """Elastic serving: a tenant out of KV slots grows through the
+    elastic control plane at submit time — the pool partition doubles
+    (relocating if the buddy is taken), its existing requests re-address,
+    and generations match a tenant that was sized big enough up front."""
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, 10, np.int32) for _ in range(3)]
+
+    def run(initial_slots):
+        eng = ServeEngine(cfg, max_batch=8, max_len=64)
+        eng.register_tenant("a", initial_slots)
+        eng.register_tenant("b", 2)
+        rids = [eng.submit("a", p) for p in prompts]
+        out = eng.run(max_new_tokens=4)
+        return [out[r] for r in rids], eng
+
+    small, eng = run(2)          # 3rd submit forces a grow
+    big, _ = run(4)              # pre-sized control
+    assert small == big
+    part = eng.manager.bounds.lookup("a")
+    assert part.size == 4
+    assert any(e.startswith("grow a") for e in eng.manager.elastic.events)
