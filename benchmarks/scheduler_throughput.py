@@ -12,8 +12,15 @@ MODULO tenants are benchmarked too: fused MODULO rides the FenceTable's
 the round-robin drain pays the per-partition static specialization; the
 ``sched.modulo.*`` rows gate that fusion path in CI.
 
-Two serving-plane suites ride along:
+Three serving-plane suites ride along:
 
+* ``sched.verified.*`` — the static bounds verifier's payoff under the
+  CHECK policy: a fence-aware kernel the verifier proves row-exact rides
+  the plain fused path with its runtime fences elided (``elided``) vs
+  the same kernel with verification off paying the attributing CHECK
+  commit path (``fenced``), vs the blind-trust reference (``trusted``).
+  The rows are ``gate=skip`` (informational, like the elastic suite) but
+  the elision speedup self-asserts >= 1.0.
 * ``sched.jit.*`` — the trusted-step path compiled (``jit_trusted``,
   the default) vs the eager fallback: one device program per step vs one
   dispatch per op inside the step.
@@ -124,6 +131,93 @@ def _bench_policy(policy: FencePolicy, prefix: str, out: List[str]) -> None:
                    f";mean_width={width:.1f};speedup={win:.2f}x")
         for line in out[-2:]:
             print(line)
+
+
+# --------------------------------------------------------------------- #
+# Static verifier: fence-elided vs fully-fenced vs trusted (ISSUE 6)
+# --------------------------------------------------------------------- #
+
+def _fa_kernel(arena, base, mask, ptr):
+    """Fence-aware (Listing-1 convention): fences its own indices, so the
+    verifier proves it row-exact for every partition."""
+    idx = ((ptr + jnp.arange(16, dtype=jnp.int32)) & mask) | base
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals * 1.0001 + 1.0), None
+
+
+def _trusted_twin(arena, ptr):
+    idx = (ptr + jnp.arange(16, dtype=jnp.int32)) & jnp.int32(
+        TOTAL_SLOTS - 1)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals * 1.0001 + 1.0), None
+
+
+def _verified_setup(variant: str):
+    """CHECK-policy manager: 'fenced' (verify off) pays the scheduler's
+    attributing commit path per drain; 'elided' carries a fully-proven
+    symbolic proof, so the scheduler re-routes its batches onto the plain
+    fused path with the fences elided; 'trusted' is the blind-trust
+    reference."""
+    mgr = GuardianManager(total_slots=TOTAL_SLOTS,
+                          policy=FencePolicy.CHECK,
+                          standalone_fast_path=False)
+    if variant == "trusted":
+        mgr.register_trusted_kernel("work", _trusted_twin)
+    else:
+        mgr.register_kernel("work", _fa_kernel, fence_aware=True,
+                            verify=(variant == "elided"))
+    clients, ptrs = [], []
+    for i in range(2):
+        c = mgr.register_tenant(f"t{i}", TOTAL_SLOTS // 4)
+        p = c.malloc(16)
+        c.memcpy_h2d(p, np.zeros(16, np.float32))
+        clients.append(c)
+        ptrs.append(p)
+    mgr.synchronize()
+    return mgr, clients, ptrs
+
+
+def _verified_rate(mgr, clients, ptrs, rounds: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for c, p in zip(clients, ptrs):
+            c.launch_kernel("work", args=(p.addr_device,))
+    mgr.run_queued()
+    jax.block_until_ready(mgr.arena.buf)
+    return rounds * len(clients) / (time.perf_counter() - t0)
+
+
+def _bench_verified(out: List[str]) -> None:
+    variants = ("fenced", "elided", "trusted")
+    setups = {v: _verified_setup(v) for v in variants}
+    for mgr, clients, ptrs in setups.values():      # warmup + compile
+        _verified_rate(mgr, clients, ptrs, 4)
+    samples = {v: [] for v in variants}
+    for _ in range(REPS):
+        for v, (mgr, clients, ptrs) in setups.items():
+            samples[v].append(_verified_rate(mgr, clients, ptrs, N_ROUNDS))
+    rates = {v: float(np.median(s)) for v, s in samples.items()}
+    stats = setups["elided"][0].scheduler.stats
+    assert stats.proven_steps > 0, \
+        "verified setup never took the proven fused path"
+    assert setups["fenced"][0].scheduler.stats.check_steps > 0, \
+        "fenced setup never took the CHECK commit path"
+    win = rates["elided"] / rates["fenced"]
+    out.append(f"sched.verified.fenced,{1e6 / rates['fenced']:.2f},"
+               f"launches_per_s={rates['fenced']:.0f};gate=skip")
+    out.append(f"sched.verified.elided,{1e6 / rates['elided']:.2f},"
+               f"launches_per_s={rates['elided']:.0f}"
+               f";speedup={win:.2f}x;bar=1.0;gate=skip")
+    out.append(f"sched.verified.trusted,{1e6 / rates['trusted']:.2f},"
+               f"launches_per_s={rates['trusted']:.0f};gate=skip")
+    for line in out[-3:]:
+        print(line)
+    # self-asserted bar (gate=skip rows are excluded from the CI perf
+    # diff, like the elastic suite): eliding statically-proven fences
+    # must never run slower than keeping them
+    assert win >= 1.0, (
+        f"fence elision ran {win:.2f}x vs the fully-fenced build "
+        "(expected >= 1.0)")
 
 
 # --------------------------------------------------------------------- #
@@ -275,6 +369,7 @@ def _bench_multiengine(out: List[str]) -> None:
 def main(out: List[str]):
     _bench_policy(FencePolicy.BITWISE, "sched", out)
     _bench_policy(FencePolicy.MODULO, "sched.modulo", out)
+    _bench_verified(out)
     _bench_trusted_jit(out)
     _bench_multiengine(out)
     print("batched scheduler speedup vs round-robin drain "

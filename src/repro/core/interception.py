@@ -189,13 +189,21 @@ class GuardianClient:
     # ------------------------------------------------------------------ #
     # CUDA-driver-level surface                                          #
     # ------------------------------------------------------------------ #
-    def module_load(self, name: str, fn, arena_argnums=(0,)) -> None:
+    def module_load(self, name: str, fn, arena_argnums=(0,),
+                    verify: bool = True,
+                    fence_aware: bool = False) -> None:
         """cuModuleLoadData: register a kernel.  The manager sandboxes and
         pre-compiles it (paper: 'compiles the sandboxed PTXs at its
-        initialization avoiding JIT overhead at runtime')."""
+        initialization avoiding JIT overhead at runtime').
+
+        ``verify=False`` skips the static bounds verifier: no fences are
+        elided and provably out-of-bounds kernels are contained at run
+        time instead of refused at trace time."""
         rec = self.trace.record("cuModuleLoadData", "driver", self.tenant_id,
                                 f"module={name}")
-        self._manager.register_kernel(name, fn, arena_argnums)
+        self._manager.register_kernel(name, fn, arena_argnums,
+                                      verify=verify,
+                                      fence_aware=fence_aware)
         rec.t_end_ns = time.perf_counter_ns()
 
     def event_create(self) -> None:

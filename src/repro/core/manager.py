@@ -81,6 +81,11 @@ from repro.core.quarantine import (
     TenantState,
 )
 from repro.core.sandbox import SandboxError, sandbox
+from repro.core.verifier import (
+    GuardianStaticViolation,
+    SandboxProof,
+    verify as verify_kernel,
+)
 from repro.core.scheduler import (
     BatchedLaunchScheduler,
     LaunchRequest,
@@ -149,6 +154,23 @@ class _KernelEntry:
     #: and commits the returned one, so N engines sharing the pool (and
     #: fused rows of one device step) always see each other's updates.
     pool_arena: Optional[str] = None
+    #: run the static bounds verifier over each new trace.  Tenant
+    #: kernels: PROVEN sites lose their runtime fence, REFUTED kernels
+    #: raise at trace time.  Trusted kernels: the first dispatch per
+    #: signature demands a *full* extent-mode proof instead of blind
+    #: trust (GuardianStaticViolation otherwise).
+    verify: bool = False
+    #: fence-aware kernel convention ``fn(arena, base, mask, *args)`` —
+    #: the manager forwards the fence row *into* the kernel (the paper's
+    #: Listing-1 augmentation made visible), which is what lets a kernel
+    #: applying its own ``(idx & mask) | base`` prove itself row-exact
+    #: and run with the sandbox's outer fence fully elided.
+    fence_aware: bool = False
+    #: static-verifier proofs keyed by trace signature, cached beside the
+    #: jit caches (same LRU discipline); also holds the scheduler's
+    #: symbolic-row proofs used to route fully-proven CHECK batches onto
+    #: the plain fused path.
+    proofs: Dict[Tuple, Any] = dataclasses.field(default_factory=dict)
 
 
 def _specialized_jit(entry: _KernelEntry, mode: str, fn: Callable,
@@ -611,41 +633,90 @@ class GuardianManager:
     # Kernel registration & launch (§4.2.3, §4.3)                        #
     # ------------------------------------------------------------------ #
     def register_kernel(self, name: str, fn: Callable,
-                        arena_argnums: Sequence[int] = (0,)) -> None:
+                        arena_argnums: Sequence[int] = (0,),
+                        verify: bool = True,
+                        fence_aware: bool = False) -> None:
         """Offline sandboxing + compile-at-init (§4.3, §4.4).
 
         ``fn(arena, *args) -> (new_arena, out)`` — the functional-update
         convention; ``out`` may be any pytree (use ``None`` for stores-only
         kernels).  Registration *fails closed* if the sandboxer cannot
         instrument the kernel.
+
+        ``verify=True`` (default) additionally runs the static bounds
+        verifier over every new trace: PROVEN access sites get **no
+        runtime fence** (the proof replaces the instruction), while a
+        kernel with a provably out-of-bounds site raises
+        :class:`~repro.core.verifier.GuardianStaticViolation` at trace
+        time instead of being silently clamped at runtime.  Per-trace
+        proofs are cached on the kernel entry beside its jit caches.
+        ``verify=False`` restores fence-everything behaviour.
+
+        ``fence_aware=True`` declares the kernel follows the paper's
+        Listing-1 convention ``fn(arena, base, mask, *args)``: the
+        manager forwards the launch row's ``(base, mask)`` scalars *into*
+        the kernel, and the verifier treats them as the row symbols — a
+        kernel applying its own ``(idx & mask) | base`` fence then proves
+        itself row-exact for **every** partition and runs with the
+        sandbox's outer (double) fence fully elided.
         """
         if name in self.pointer_to_symbol:
             return  # idempotent: many clients may load the same module
 
         arena_argnums = tuple(arena_argnums)
+        # fence-aware kernels see the row scalars as leading args; those
+        # positions are the verifier's (base, mask) bound symbols
+        bound = (1, 2) if fence_aware else ()
+
+        def on_proof(proof: SandboxProof) -> None:
+            holder = self.pointer_to_symbol.get(name)
+            if holder is not None:
+                holder.proofs[("row", proof.arg_sig)] = proof
+
         sandboxed = sandbox(fn, arena_argnums=arena_argnums,
-                            policy=FencePolicy.BITWISE)
+                            policy=FencePolicy.BITWISE, verify=verify,
+                            bound_argnums=bound, on_proof=on_proof)
         checked = sandbox(fn, arena_argnums=arena_argnums,
-                          policy=FencePolicy.CHECK, count_violations=True)
+                          policy=FencePolicy.CHECK, count_violations=True,
+                          verify=verify, bound_argnums=bound,
+                          on_proof=on_proof)
         modulo_sb = sandbox(fn, arena_argnums=arena_argnums,
-                            policy=FencePolicy.MODULO)
+                            policy=FencePolicy.MODULO, verify=verify,
+                            bound_argnums=bound, on_proof=on_proof)
 
-        def fenced_entry(arena, base, mask, *args):
-            # the two extra kernel parameters of Listing 1
-            fp = FenceParams(base=base, size=mask + 1)
-            out, ok = sandboxed(fp, arena, *args)
-            return out
+        if fence_aware:
+            def fenced_entry(arena, base, mask, *args):
+                fp = FenceParams(base=base, size=mask + 1)
+                out, ok = sandboxed(fp, arena, base, mask, *args)
+                return out
 
-        def checked_entry(arena, base, size, *args):
-            fp = FenceParams(base=base, size=size)
-            return checked(fp, arena, *args)   # (out, ok, counts)
+            def checked_entry(arena, base, size, *args):
+                fp = FenceParams(base=base, size=size)
+                return checked(fp, arena, base, size - 1, *args)
 
-        def modulo_entry_dyn(arena, base, size, m, s, *args):
-            # one magic row of the FenceTable: the four extra parameters
-            # that make MODULO a dynamic (fusable) mode
-            fp = FenceParams(base=base, size=size, magic_m=m, magic_s=s)
-            out, ok = modulo_sb(fp, arena, *args)
-            return out
+            def modulo_entry_dyn(arena, base, size, m, s, *args):
+                fp = FenceParams(base=base, size=size, magic_m=m,
+                                 magic_s=s)
+                out, ok = modulo_sb(fp, arena, base, size - 1, *args)
+                return out
+        else:
+            def fenced_entry(arena, base, mask, *args):
+                # the two extra kernel parameters of Listing 1
+                fp = FenceParams(base=base, size=mask + 1)
+                out, ok = sandboxed(fp, arena, *args)
+                return out
+
+            def checked_entry(arena, base, size, *args):
+                fp = FenceParams(base=base, size=size)
+                return checked(fp, arena, *args)   # (out, ok, counts)
+
+            def modulo_entry_dyn(arena, base, size, m, s, *args):
+                # one magic row of the FenceTable: the four extra
+                # parameters that make MODULO a dynamic (fusable) mode
+                fp = FenceParams(base=base, size=size, magic_m=m,
+                                 magic_s=s)
+                out, ok = modulo_sb(fp, arena, *args)
+                return out
 
         entry = _KernelEntry(
             name=name, fn=fn, arena_argnums=arena_argnums,
@@ -654,6 +725,8 @@ class GuardianManager:
             checked_dyn=checked_entry,
             modulo_dyn=modulo_entry_dyn,
             jit_cache=LRUCache(self.jit_cache_capacity),
+            verify=verify, fence_aware=fence_aware,
+            proofs=LRUCache(self.jit_cache_capacity),
         )
         self.pointer_to_symbol[name] = entry
 
@@ -675,6 +748,7 @@ class GuardianManager:
                                 arena_argnums: Sequence[int] = (0,),
                                 donate_argnums: Sequence[int] = (),
                                 pool_arena: Optional[str] = None,
+                                verify: bool = False,
                                 ) -> None:
         """Register a *framework-plane* kernel — an engine step that is
         already fenced internally (per-row GuardSpec built from this
@@ -705,6 +779,15 @@ class GuardianManager:
         (the pool is never a caller operand — the manager stays the only
         entity with device access, §4.2).
 
+        ``verify=True`` replaces blind trust with a proof obligation: the
+        first dispatch of each operand signature runs the static bounds
+        verifier in *extent mode* (every dynamic arena/pool access must be
+        provably inside the accessed operand's extent or a declared guard
+        partition found in the operands) and raises
+        :class:`~repro.core.verifier.GuardianStaticViolation` unless the
+        step is **fully** proven.  Proofs are cached per signature beside
+        the jit caches.
+
         Only engine code may register trusted kernels; tenant-supplied
         callables go through :meth:`register_kernel` (fail-closed
         sandboxing).
@@ -718,20 +801,29 @@ class GuardianManager:
             name=name, fn=fn, arena_argnums=tuple(arena_argnums),
             native=fn, fenced_dyn=fn, checked_dyn=fn, trusted=True,
             donate_argnums=tuple(donate_argnums),
-            pool_arena=pool_arena,
-            jit_cache=LRUCache(self.jit_cache_capacity))
+            pool_arena=pool_arena, verify=verify,
+            jit_cache=LRUCache(self.jit_cache_capacity),
+            proofs=LRUCache(self.jit_cache_capacity))
         self.pointer_to_symbol[name] = entry
 
     def _modulo_exec(self, entry: _KernelEntry, part: Partition) -> Callable:
         key = (part.base, part.size)
         if key not in entry.modulo_static:
             fp = FenceParams(base=part.base, size=part.size)
+            bound = (1, 2) if entry.fence_aware else ()
             sb = sandbox(entry.fn, arena_argnums=entry.arena_argnums,
-                         policy=FencePolicy.MODULO)
+                         policy=FencePolicy.MODULO, verify=entry.verify,
+                         bound_argnums=bound)
 
-            def modulo_entry(arena, *args, _sb=sb, _fp=fp):
-                out, ok = _sb(_fp, arena, *args)
-                return out
+            if entry.fence_aware:
+                def modulo_entry(arena, *args, _sb=sb, _fp=fp):
+                    out, ok = _sb(_fp, arena, jnp.int32(_fp.base),
+                                  jnp.int32(_fp.mask), *args)
+                    return out
+            else:
+                def modulo_entry(arena, *args, _sb=sb, _fp=fp):
+                    out, ok = _sb(_fp, arena, *args)
+                    return out
 
             entry.modulo_static[key] = modulo_entry
         return entry.modulo_static[key]
@@ -750,6 +842,8 @@ class GuardianManager:
                _arg_signature(call_args) if arg_sig is None else arg_sig)
         fn = entry.jit_cache.get(key)
         if fn is None:
+            if entry.verify:
+                self._verify_trusted(entry, call_args)
             if not donation_supported():
                 donate = ()
             elif entry.pool_arena is not None:
@@ -761,6 +855,110 @@ class GuardianManager:
             fn = jax.jit(entry.fn, donate_argnums=tuple(sorted(set(donate))))
             entry.jit_cache[key] = fn
         return fn
+
+    # ------------------------------------------------------------------ #
+    # Static bounds proofs (core/verifier.py)                            #
+    # ------------------------------------------------------------------ #
+    def _verify_trusted(self, entry: _KernelEntry,
+                        call_args: Tuple) -> SandboxProof:
+        """Extent-mode proof obligation for a ``verify=True`` trusted
+        step, once per operand signature: every dynamic arena/pool access
+        must be provably inside the accessed operand's extent or a
+        declared guard partition found in the operands."""
+        key = ("extent", _arg_signature(call_args))
+        proof = entry.proofs.get(key)
+        if proof is not None:
+            return proof
+        if entry.pool_arena is not None:
+            args = (self.arena.buf, self.arenas[entry.pool_arena].buf,
+                    *call_args)
+            arena_argnums = (0, 1)
+        else:
+            args = (self.arena.buf, *call_args)
+            arena_argnums = (0,)
+        proof = verify_kernel(entry.fn, args, arena_argnums=arena_argnums,
+                              mode="extent")
+        if not proof.fully_proven:
+            raise GuardianStaticViolation(
+                f"trusted kernel {entry.name!r} registered with "
+                f"verify=True but only {proof.n_proven}/"
+                f"{len(proof.sites)} access sites are proven:\n"
+                + proof.format_table())
+        entry.proofs[key] = proof
+        return proof
+
+    def symbolic_proof(self, entry: _KernelEntry,
+                       call_args: Tuple,
+                       arg_sig: Optional[Tuple] = None,
+                       ) -> Optional[SandboxProof]:
+        """Symbolic-row proof for a tenant kernel at one operand
+        signature — computed host-side on first need, cached beside the
+        jit caches.  A *fully proven symbolic* proof holds for every
+        partition, so the scheduler may route CHECK batches of this
+        signature onto the plain fused path (no ViolationLog plumbing:
+        a violation is statically impossible).  Returns ``None`` when the
+        kernel is not fully provable (or not verifiable at all)."""
+        if entry.trusted or not entry.verify:
+            return None
+        key = ("sym", _arg_signature(call_args) if arg_sig is None
+               else arg_sig)
+        proof = entry.proofs.get(key)
+        if proof is None:
+            if entry.fence_aware:
+                args = (self.arena.buf, jnp.int32(0), jnp.int32(0),
+                        *call_args)
+                bound = (1, 2)
+            else:
+                args = (self.arena.buf, *call_args)
+                bound = ()
+            try:
+                proof = verify_kernel(
+                    entry.fn, args, arena_argnums=entry.arena_argnums,
+                    bound_argnums=bound, params=None, mode="row")
+            except Exception:
+                proof = False    # not verifiable; never retry this sig
+            entry.proofs[key] = proof
+        if proof and proof.symbolic and proof.fully_proven:
+            return proof
+        return None
+
+    def sandbox_report(self, name: str,
+                       example_args: Sequence[Any] = (),
+                       ) -> SandboxProof:
+        """Per-site verifier classification for a registered kernel —
+        the operator surface for "why does this site still fence?".
+
+        Tenant kernels are verified against the *symbolic* fence row
+        (valid for every partition); trusted kernels in extent mode
+        (accesses must fit the operand extents / declared guards).
+        ``example_args`` are the kernel's operands after the arena (and
+        pool, for pool-threaded trusted steps) — shape/dtype stand-ins
+        (``jax.ShapeDtypeStruct``) are accepted."""
+        entry = self.pointer_to_symbol.get(name)
+        if entry is None:
+            raise GuardianViolation(
+                f"unknown kernel {name!r}: symbol not in grdLib")
+        if entry.trusted:
+            if entry.pool_arena is not None:
+                args = (self.arena.buf,
+                        self.arenas[entry.pool_arena].buf, *example_args)
+                arena_argnums = (0, 1)
+            else:
+                args = (self.arena.buf, *example_args)
+                arena_argnums = (0,)
+            return verify_kernel(entry.fn, args,
+                                 arena_argnums=arena_argnums,
+                                 mode="extent")
+        if entry.fence_aware:
+            args = (self.arena.buf, jnp.int32(0), jnp.int32(0),
+                    *example_args)
+            bound = (1, 2)
+        else:
+            args = (self.arena.buf, *example_args)
+            bound = ()
+        return verify_kernel(entry.fn, args,
+                             arena_argnums=entry.arena_argnums,
+                             bound_argnums=bound, params=None, mode="row")
 
     def launch_kernel(self, tenant_id: str, name: str,
                       ptrs: Sequence[DevicePtr] = (),
@@ -836,9 +1034,13 @@ class GuardianManager:
             # backend supports it) unless jit_trusted is off, in which
             # case the eager fallback runs — see register_trusted_kernel
             t1 = time.perf_counter_ns()
-            fn = self._trusted_exec(entry, req.call_args,
-                                    arg_sig=req.signature[2]) \
-                if self.jit_trusted else entry.fn
+            if self.jit_trusted:
+                fn = self._trusted_exec(entry, req.call_args,
+                                        arg_sig=req.signature[2])
+            else:
+                if entry.verify:     # eager path still owes the proof
+                    self._verify_trusted(entry, req.call_args)
+                fn = entry.fn
             if entry.pool_arena is None:
                 new_arena, out = fn(self.arena.buf, *req.call_args)
             else:
@@ -856,6 +1058,10 @@ class GuardianManager:
         t1 = time.perf_counter_ns()
         if policy is FencePolicy.NONE:
             call_args = req.call_args
+            if entry.fence_aware:
+                # the kernel consumes the row scalars itself
+                base_s, mask_s, _ = self._scalars_for(req.tenant_id, part)
+                call_args = (base_s, mask_s, *call_args)
             fn = _specialized_jit(entry, "native", entry.native, call_args)
         elif policy is FencePolicy.BITWISE:
             base_s, mask_s, _ = self._scalars_for(req.tenant_id, part)

@@ -22,24 +22,40 @@ the paper's observation that host memory is safe via process isolation.
 
 Taint tracking mirrors "which PTX register holds a global pointer": an
 operand is fenced iff it is the arena argument or derived from it through
-layout-preserving ops (convert/reshape keeping dim 0/transpose keeping dim 0
-leading/copy).  Scatter outputs remain tainted (the arena flows through);
-gather outputs are *values*, not slot space, so taint stops there.
+layout-preserving ops.  ``reshape``/``transpose`` that destroy the slot
+dim 0 *keep* taint conservatively and emit a
+:class:`~repro.core.verifier.GuardianTaintWarning` (containment over
+precision — never silently launder the arena lineage).  Scatter outputs
+remain tainted (the arena flows through); gather outputs are *values*, not
+slot space, so taint stops there.
 
 Call primitives (``jit``/``pjit``, ``custom_jvp/vjp``, ``remat``,
 ``closed_call``) are interpreted recursively, so fences land inside library
-wrappers — the paper's "implicit calls of cuBLAS" case.  ``scan/while/cond``
-inside tenant kernels are rejected with a clear error: at the jaxpr level
-their branch sets are static (the paper's safe direct branches), but their
-carried slot-spaces would need per-iteration fencing; tenants use the
-manager's guarded ops for those patterns instead (documented in DESIGN.md).
+wrappers — the paper's "implicit calls of cuBLAS" case.  ``scan``/``while``/
+``cond`` with arena-derived operands are **interpreted structurally**: loop
+bodies are re-traced with fences inside, carry taints resolved by the
+verifier's monotone fixpoint (:func:`repro.core.verifier.loop_carry_taints`),
+and CHECK ``ok``/count payloads threaded through the carried state /
+stacked outputs.  Rejection (:class:`SandboxError`) remains only for the
+cases the fixpoint cannot close (non-converging carries, CHECK predicates
+inside a ``while`` condition, where the ok cannot escape the cond jaxpr).
+
+With ``verify=True`` the sandbox additionally runs the static bounds
+verifier (:mod:`repro.core.verifier`) over the same jaxpr and consumes the
+resulting :class:`~repro.core.verifier.SandboxProof`:
+
+    PROVEN sites ... fence **elided** (the compiler guarantee replaces the
+                     runtime instruction — Guardian's direct-access case)
+    FENCED sites ... fenced exactly as before
+    REFUTED sites .. :class:`~repro.core.verifier.GuardianStaticViolation`
+                     at trace time with the per-site diagnostic
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.extend.core as jex_core
@@ -48,36 +64,26 @@ import jax.numpy as jnp
 
 from repro.core.fence import FenceParams, FencePolicy, apply_fence
 from repro.core.violations import NUM_KINDS, ViolationKind
+from repro.core.verifier import (      # shared tables: the two walkers must
+    _CALL_PRIMS,                       # classify taint identically
+    _LOOP_PRIMS,
+    _SCATTER_PRIMS,
+    _TAINT_TRANSPARENT,
+    PROVEN,
+    GuardianStaticViolation,
+    GuardianTaintWarning,
+    SandboxProof,
+    VerifierError,
+    loop_carry_taints,
+    refute_message,
+    transparent_taint,
+    verify_jaxpr,
+)
 
-# Primitives through which "this value IS the arena slot space" propagates.
-_TAINT_TRANSPARENT = {
-    "convert_element_type",
-    "copy",
-    "reshape",       # conservatively: only if dim0 preserved (checked below)
-    "transpose",     # only if dim0 stays leading
-    "stop_gradient",
-    "reduce_precision",
-}
-
-# Scatter-family primitives: operand 0 is the arena, operand 1 the indices.
-_SCATTER_PRIMS = {
-    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
-    "scatter_add", "scatter_apply",
-}
-
-# Call-like primitives we interpret recursively (jaxpr param name varies).
-_CALL_PRIMS = {
-    "jit": "jaxpr",
-    "pjit": "jaxpr",
-    "closed_call": "call_jaxpr",
-    "custom_jvp_call": "call_jaxpr",
-    "custom_vjp_call": "call_jaxpr",
-    "custom_vjp_call_jaxpr": "fun_jaxpr",
-    "remat": "jaxpr",
-    "checkpoint": "jaxpr",
-}
-
-_UNSUPPORTED = {"scan", "while", "cond"}
+__all__ = [
+    "SandboxError", "SandboxReport", "sandbox", "sandbox_report",
+    "GuardianStaticViolation", "GuardianTaintWarning",
+]
 
 
 class SandboxError(Exception):
@@ -88,18 +94,80 @@ class SandboxError(Exception):
 
 @dataclasses.dataclass
 class SandboxReport:
-    """What the patcher did — Table 3 analogue (#loads/#stores safeguarded)."""
+    """What the patcher did — Table 3 analogue (#loads/#stores safeguarded).
+
+    ``elided_*`` counts are sites the static verifier PROVED in-bounds so
+    no fence was emitted (only nonzero under ``verify=True``)."""
 
     fenced_gathers: int = 0
     fenced_scatters: int = 0
     fenced_dynamic_slices: int = 0
     fenced_dynamic_updates: int = 0
+    elided_gathers: int = 0
+    elided_scatters: int = 0
+    elided_dynamic_slices: int = 0
+    elided_dynamic_updates: int = 0
     total_eqns: int = 0
+    proof: Optional[SandboxProof] = None
 
     @property
     def fenced_total(self) -> int:
         return (self.fenced_gathers + self.fenced_scatters
                 + self.fenced_dynamic_slices + self.fenced_dynamic_updates)
+
+    @property
+    def elided_total(self) -> int:
+        return (self.elided_gathers + self.elided_scatters
+                + self.elided_dynamic_slices + self.elided_dynamic_updates)
+
+    def merge(self, other: "SandboxReport") -> None:
+        for f in ("fenced_gathers", "fenced_scatters",
+                  "fenced_dynamic_slices", "fenced_dynamic_updates",
+                  "elided_gathers", "elided_scatters",
+                  "elided_dynamic_slices", "elided_dynamic_updates",
+                  "total_eqns"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+
+class _OkAcc:
+    """CHECK-predicate accumulator.
+
+    Raw per-site ``ok`` element arrays are tagged with their access kind so
+    the caller can both reduce to a scalar verdict and count violating
+    elements per kind; loop bodies contribute pre-reduced ``(ok, counts)``
+    pairs threaded out through the loop's carried state / stacked outputs.
+    """
+
+    def __init__(self):
+        self._raw: List[Tuple[ViolationKind, jax.Array]] = []
+        self._reduced: List[Tuple[jax.Array, jax.Array]] = []
+
+    def add(self, kind: ViolationKind, ok: jax.Array) -> None:
+        self._raw.append((kind, ok))
+
+    def add_reduced(self, ok: jax.Array, counts: jax.Array) -> None:
+        self._reduced.append((ok, counts))
+
+    @property
+    def empty(self) -> bool:
+        return not self._raw and not self._reduced
+
+    def ok(self) -> jax.Array:
+        parts = [jnp.all(o) for _, o in self._raw]
+        parts += [jnp.all(o) for o, _ in self._reduced]
+        if not parts:
+            return jnp.bool_(True)
+        return jnp.all(jnp.stack(parts))
+
+    def counts(self) -> jax.Array:
+        c = jnp.zeros((NUM_KINDS,), jnp.int32)
+        for kind, o in self._raw:
+            n_bad = jnp.sum(jnp.logical_not(o).astype(jnp.int32))
+            c = c.at[int(kind)].add(n_bad)
+        for _, cv in self._reduced:
+            c = c + jnp.sum(jnp.asarray(cv, jnp.int32).reshape(
+                (-1, NUM_KINDS)), axis=0)
+        return c
 
 
 def _read(env: Dict[Any, Any], v) -> Any:
@@ -119,7 +187,7 @@ def _fence_index_columns(
     cols: Sequence[int],
     params: FenceParams,
     policy: FencePolicy,
-    oks: List[Tuple[ViolationKind, jax.Array]],
+    oks: _OkAcc,
     kind: ViolationKind,
 ) -> jax.Array:
     """Fence the given trailing-dim columns of a gather/scatter index array.
@@ -130,16 +198,20 @@ def _fence_index_columns(
     if indices.ndim == 0:
         fenced, ok = apply_fence(policy, indices, params)
         if ok is not None:
-            oks.append((kind, ok))
+            oks.add(kind, ok)
         return fenced.astype(indices.dtype)
     out = indices
     for c in cols:
         col = indices[..., c]
         fenced, ok = apply_fence(policy, col, params)
         if ok is not None:
-            oks.append((kind, ok))
+            oks.add(kind, ok)
         out = out.at[..., c].set(fenced.astype(indices.dtype))
     return out
+
+
+def _proven(verdicts: Optional[Dict[Tuple, str]], site: Tuple) -> bool:
+    return verdicts is not None and verdicts.get(site) == PROVEN
 
 
 def _interpret(
@@ -149,7 +221,9 @@ def _interpret(
     params: FenceParams,
     policy: FencePolicy,
     report: SandboxReport,
-    oks: List[Tuple[ViolationKind, jax.Array]],
+    oks: _OkAcc,
+    verdicts: Optional[Dict[Tuple, str]] = None,
+    path: Tuple = (),
 ) -> Tuple[List[Any], List[bool]]:
     jaxpr = closed.jaxpr
     env: Dict[Any, Any] = {}
@@ -163,17 +237,12 @@ def _interpret(
         env[var] = val
         taint[var] = t
 
-    for eqn in jaxpr.eqns:
+    for i, eqn in enumerate(jaxpr.eqns):
         report.total_eqns += 1
         name = eqn.primitive.name
         invals = [_read(env, v) for v in eqn.invars]
         intaints = [_is_tainted(taint, v) for v in eqn.invars]
-
-        if name in _UNSUPPORTED and any(intaints):
-            raise SandboxError(
-                f"tenant kernel routes the shared arena through `{name}`; "
-                "use the manager's guarded ops for loop-carried arena state"
-            )
+        site = (*path, i)
 
         out_taint = False
 
@@ -183,7 +252,23 @@ def _interpret(
                 sub = next(v for v in eqn.params.values()
                            if hasattr(v, "jaxpr"))
             outvals, out_taints = _interpret(sub, invals, intaints, params,
-                                             policy, report, oks)
+                                             policy, report, oks, verdicts,
+                                             site)
+            for var, val, t in zip(eqn.outvars, outvals, out_taints):
+                env[var] = val
+                taint[var] = t
+            continue
+
+        if name in _LOOP_PRIMS and any(intaints):
+            try:
+                outvals, out_taints = _interpret_loop(
+                    eqn, invals, intaints, params, policy, report, oks,
+                    verdicts, site)
+            except VerifierError as e:
+                raise SandboxError(
+                    f"tenant kernel routes the shared arena through "
+                    f"`{name}` and the carry fixpoint did not converge: {e}"
+                ) from e
             for var, val, t in zip(eqn.outvars, outvals, out_taints):
                 env[var] = val
                 taint[var] = t
@@ -193,11 +278,14 @@ def _interpret(
             dnums = eqn.params["dimension_numbers"]
             cols = [j for j, d in enumerate(dnums.start_index_map) if d == 0]
             if cols:
-                invals = list(invals)
-                invals[1] = _fence_index_columns(
-                    jnp.asarray(invals[1]), cols, params, policy, oks,
-                    ViolationKind.GATHER)
-                report.fenced_gathers += 1
+                if _proven(verdicts, site):
+                    report.elided_gathers += 1
+                else:
+                    invals = list(invals)
+                    invals[1] = _fence_index_columns(
+                        jnp.asarray(invals[1]), cols, params, policy, oks,
+                        ViolationKind.GATHER)
+                    report.fenced_gathers += 1
             out_taint = False  # gathered *values*, not slot space
 
         elif name in _SCATTER_PRIMS and intaints[0]:
@@ -205,51 +293,57 @@ def _interpret(
             cols = [j for j, d in
                     enumerate(dnums.scatter_dims_to_operand_dims) if d == 0]
             if cols:
-                invals = list(invals)
-                invals[1] = _fence_index_columns(
-                    jnp.asarray(invals[1]), cols, params, policy, oks,
-                    ViolationKind.SCATTER)
-                report.fenced_scatters += 1
+                if _proven(verdicts, site):
+                    report.elided_scatters += 1
+                else:
+                    invals = list(invals)
+                    invals[1] = _fence_index_columns(
+                        jnp.asarray(invals[1]), cols, params, policy, oks,
+                        ViolationKind.SCATTER)
+                    report.fenced_scatters += 1
             out_taint = True  # the arena flows through a scatter
 
         elif name == "dynamic_slice" and intaints[0]:
-            sizes = eqn.params["slice_sizes"]
-            invals = list(invals)
-            start0, ok = apply_fence(policy, jnp.asarray(invals[1]), params)
-            if ok is not None:
-                oks.append((ViolationKind.SLICE, ok))
-            hi = jnp.maximum(
-                jnp.asarray(params.base + params.size - sizes[0], jnp.int32),
-                jnp.asarray(params.base, jnp.int32))
-            invals[1] = jnp.minimum(start0, hi).astype(
-                jnp.asarray(invals[1]).dtype)
-            report.fenced_dynamic_slices += 1
+            if _proven(verdicts, site):
+                report.elided_dynamic_slices += 1
+            else:
+                sizes = eqn.params["slice_sizes"]
+                invals = list(invals)
+                start0, ok = apply_fence(policy, jnp.asarray(invals[1]),
+                                         params)
+                if ok is not None:
+                    oks.add(ViolationKind.SLICE, ok)
+                hi = jnp.maximum(
+                    jnp.asarray(params.base + params.size - sizes[0],
+                                jnp.int32),
+                    jnp.asarray(params.base, jnp.int32))
+                invals[1] = jnp.minimum(start0, hi).astype(
+                    jnp.asarray(invals[1]).dtype)
+                report.fenced_dynamic_slices += 1
             out_taint = False
 
         elif name == "dynamic_update_slice" and intaints[0]:
-            invals = list(invals)
-            upd_len = jnp.shape(invals[1])[0] if jnp.ndim(invals[1]) else 1
-            start0, ok = apply_fence(policy, jnp.asarray(invals[2]), params)
-            if ok is not None:
-                oks.append((ViolationKind.UPDATE, ok))
-            hi = jnp.maximum(
-                jnp.asarray(params.base + params.size - upd_len, jnp.int32),
-                jnp.asarray(params.base, jnp.int32))
-            invals[2] = jnp.minimum(start0, hi).astype(
-                jnp.asarray(invals[2]).dtype)
-            report.fenced_dynamic_updates += 1
+            if _proven(verdicts, site):
+                report.elided_dynamic_updates += 1
+            else:
+                invals = list(invals)
+                upd_len = jnp.shape(invals[1])[0] if jnp.ndim(invals[1]) \
+                    else 1
+                start0, ok = apply_fence(policy, jnp.asarray(invals[2]),
+                                         params)
+                if ok is not None:
+                    oks.add(ViolationKind.UPDATE, ok)
+                hi = jnp.maximum(
+                    jnp.asarray(params.base + params.size - upd_len,
+                                jnp.int32),
+                    jnp.asarray(params.base, jnp.int32))
+                invals[2] = jnp.minimum(start0, hi).astype(
+                    jnp.asarray(invals[2]).dtype)
+                report.fenced_dynamic_updates += 1
             out_taint = True
 
         elif name in _TAINT_TRANSPARENT and intaints[0]:
-            if name == "reshape":
-                old = jnp.shape(invals[0])
-                new = eqn.params.get("new_sizes", None)
-                out_taint = bool(old and new and old[0] == new[0])
-            elif name == "transpose":
-                perm = eqn.params.get("permutation", ())
-                out_taint = bool(perm) and perm[0] == 0
-            else:
-                out_taint = True
+            out_taint = transparent_taint(name, eqn, jnp.shape(invals[0]))
 
         outvals = eqn.primitive.bind(*invals, **eqn.params)
         if not eqn.primitive.multiple_results:
@@ -263,11 +357,200 @@ def _interpret(
     return outs, out_taints
 
 
+def _interpret_loop(
+    eqn,
+    invals: Sequence[Any],
+    intaints: Sequence[bool],
+    params: FenceParams,
+    policy: FencePolicy,
+    report: SandboxReport,
+    oks: _OkAcc,
+    verdicts: Optional[Dict[Tuple, str]],
+    site: Tuple,
+) -> Tuple[List[Any], List[bool]]:
+    """Structurally interpret a tainted ``scan``/``while``/``cond``.
+
+    Bodies are re-traced with the sandbox's fences inside; carry taints
+    come from the verifier's monotone fixpoint so they are stable across
+    iterations.  CHECK ``ok``/count payloads are threaded out through the
+    loop (stacked ys for scan, carried state for while, uniform branch
+    outputs for cond) and folded into ``oks`` as reduced pairs.
+    """
+    name = eqn.primitive.name
+
+    if name == "scan":
+        body = eqn.params["jaxpr"]
+        n_c = eqn.params["num_consts"]
+        n_car = eqn.params["num_carry"]
+        length = eqn.params["length"]
+        reverse = eqn.params["reverse"]
+        unroll = eqn.params.get("unroll", 1)
+        car_ts, body_out_ts = loop_carry_taints(eqn, intaints)
+        const_vals = list(invals[:n_c])
+        carry0 = list(invals[n_c:n_c + n_car])
+        xs_vals = list(invals[n_c + n_car:])
+        const_ts = list(intaints[:n_c])
+        xs_ts = list(intaints[n_c + n_car:])
+        box: List = []
+
+        def scan_body(carry, x):
+            x = () if x is None else x
+            acc = _OkAcc()
+            rep = SandboxReport()
+            outs, _ = _interpret(
+                body, [*const_vals, *carry, *x],
+                [*const_ts, *car_ts, *xs_ts], params, policy, rep, acc,
+                verdicts, (*site, 0))
+            box[:] = [(rep, acc.empty)]
+            payload = () if acc.empty else (acc.ok(), acc.counts())
+            return tuple(outs[:n_car]), (tuple(outs[n_car:]), payload)
+
+        final_carry, (ys, payload) = jax.lax.scan(
+            scan_body, tuple(carry0), tuple(xs_vals) or None,
+            length=length, reverse=reverse, unroll=unroll)
+        rep, _acc_empty = box[0]
+        report.merge(rep)
+        if payload:
+            oks.add_reduced(payload[0], payload[1])
+        return ([*final_carry, *ys],
+                [*car_ts, *body_out_ts[n_car:]])
+
+    if name == "while":
+        cond_j = eqn.params["cond_jaxpr"]
+        body_j = eqn.params["body_jaxpr"]
+        n_cc = eqn.params["cond_nconsts"]
+        n_bc = eqn.params["body_nconsts"]
+        car_ts, _ = loop_carry_taints(eqn, intaints)
+        cconst = list(invals[:n_cc])
+        bconst = list(invals[n_cc:n_cc + n_bc])
+        carry0 = list(invals[n_cc + n_bc:])
+        cconst_ts = list(intaints[:n_cc])
+        bconst_ts = list(intaints[n_cc:n_cc + n_bc])
+        n_car = len(carry0)
+        cond_box: List = []
+        body_box: List = []
+
+        def cond_fn(state):
+            acc = _OkAcc()
+            rep = SandboxReport()
+            outs, _ = _interpret(
+                cond_j, [*cconst, *state[:n_car]],
+                [*cconst_ts, *car_ts], params, policy, rep, acc,
+                verdicts, (*site, 0))
+            cond_box[:] = [(rep, acc.empty)]
+            return outs[0]
+
+        def body_fn(state):
+            acc = _OkAcc()
+            rep = SandboxReport()
+            outs, _ = _interpret(
+                body_j, [*bconst, *state[:n_car]],
+                [*bconst_ts, *car_ts], params, policy, rep, acc,
+                verdicts, (*site, 1))
+            body_box[:] = [rep]
+            return (*outs,
+                    jnp.logical_and(state[n_car], acc.ok()),
+                    state[n_car + 1] + acc.counts())
+
+        init = (*carry0, jnp.bool_(True),
+                jnp.zeros((NUM_KINDS,), jnp.int32))
+        out_state = jax.lax.while_loop(cond_fn, body_fn, init)
+        cond_rep, cond_ok_empty = cond_box[0]
+        if not cond_ok_empty:
+            raise SandboxError(
+                "tenant kernel fences a tainted access inside a `while` "
+                "condition under CHECK policy; the ok predicate cannot "
+                "escape the cond jaxpr — use a fencing policy or move the "
+                "access into the loop body")
+        report.merge(cond_rep)
+        report.merge(body_box[0])
+        oks.add_reduced(out_state[n_car], out_state[n_car + 1])
+        return list(out_state[:n_car]), list(car_ts)
+
+    if name == "cond":
+        branches = eqn.params["branches"]
+        pred = invals[0]
+        ops = list(invals[1:])
+        ops_ts = list(intaints[1:])
+        boxes: List[List] = [[] for _ in branches]
+
+        def mk(bidx, br):
+            def branch_fn(*ops_in):
+                acc = _OkAcc()
+                rep = SandboxReport()
+                outs, out_ts = _interpret(
+                    br, list(ops_in), ops_ts, params, policy, rep, acc,
+                    verdicts, (*site, bidx))
+                boxes[bidx][:] = [(rep, out_ts)]
+                return (*outs, acc.ok(), acc.counts())
+            return branch_fn
+
+        res = jax.lax.switch(
+            pred, [mk(b, br) for b, br in enumerate(branches)], *ops)
+        *outs, okv, cnts = res
+        oks.add_reduced(okv, cnts)
+        out_ts = None
+        for box in boxes:
+            rep, bts = box[0]
+            report.merge(rep)
+            out_ts = bts if out_ts is None else [
+                a or b for a, b in zip(out_ts, bts)]
+        return list(outs), list(out_ts or [])
+
+    raise SandboxError(f"unsupported loop primitive `{name}`")
+
+
+def _flat_taints(dyn_pos, dyn_args, arena_set):
+    taints: List[bool] = []
+    slots: Dict[int, Tuple[int, int]] = {}
+    off = 0
+    for p, a in zip(dyn_pos, dyn_args):
+        n = len(jax.tree_util.tree_leaves(a))
+        slots[p] = (off, off + n)
+        taints.extend([p in arena_set] * n)
+        off += n
+    return taints, slots
+
+
+def _run_verifier(
+    closed, taints, slots, fence_params, bound_argnums, kernel_name,
+):
+    """Proof for a freshly traced kernel jaxpr; REFUTED -> trace-time
+    violation.  Static rows give a concrete proof; traced rows give the
+    symbolic (B, S) proof valid for every partition."""
+    vparams = fence_params if (isinstance(fence_params, FenceParams)
+                               and fence_params.is_static) else None
+    n_in = len(closed.jaxpr.invars)
+    in_roles: List[Optional[str]] = [None] * n_in
+    for role, argnum in zip(("base", "mask"), bound_argnums):
+        slot = slots.get(argnum)
+        if slot is not None and slot[1] - slot[0] == 1:
+            in_roles[slot[0]] = role
+    arena_extent = None
+    for i, t in enumerate(taints):
+        if t and closed.jaxpr.invars[i].aval.shape:
+            arena_extent = int(closed.jaxpr.invars[i].aval.shape[0])
+            break
+    try:
+        proof = verify_jaxpr(closed, taints, vparams, in_roles=in_roles,
+                             arena_extent=arena_extent, mode="row")
+    except VerifierError as e:
+        raise SandboxError(
+            f"static verification of kernel {kernel_name!r} failed: {e}"
+        ) from e
+    if proof.n_refuted:
+        raise GuardianStaticViolation(refute_message(proof, kernel_name))
+    return proof
+
+
 def sandbox(
     fn: Callable,
     arena_argnums: Sequence[int] = (0,),
     policy: FencePolicy = FencePolicy.BITWISE,
     count_violations: bool = False,
+    verify: bool = False,
+    bound_argnums: Sequence[int] = (),
+    on_proof: Optional[Callable[[SandboxProof], None]] = None,
 ) -> Callable:
     """Instrument ``fn`` so every dynamic access to the arena args is fenced.
 
@@ -281,11 +564,23 @@ def sandbox(
     .ViolationKind` order) — the per-launch row a CHECK step folds into the
     device-side ViolationLog.  Fencing policies yield all-zero counts.
 
+    With ``verify=True`` the static bounds verifier runs over the traced
+    jaxpr first: PROVEN sites get **no fence** (elided — the proof replaces
+    the instruction), FENCED sites are fenced as usual, and REFUTED sites
+    raise :class:`GuardianStaticViolation` at trace time.  ``bound_argnums``
+    optionally names the ``(base, mask)`` argument positions the launch
+    path injects the fence row into (fence-aware kernels — the paper's
+    Listing-1 augmentation), which is what lets an internally-fenced kernel
+    prove itself row-exact.  ``on_proof`` receives the
+    :class:`~repro.core.verifier.SandboxProof` each time a new trace is
+    verified (the manager uses this to cache proofs beside its jit caches).
+
     The returned callable is trace-time instrumented: wrap it in ``jax.jit``
     once and the fences compile into the kernel (the paper compiles the
     sandboxed PTX at manager init, §4.4).
     """
     arena_set = frozenset(arena_argnums)
+    kernel_name = getattr(fn, "__name__", "<kernel>")
 
     @functools.wraps(fn)
     def sandboxed(fence_params: FenceParams, *args):
@@ -305,27 +600,27 @@ def sandbox(
         closed = jax.make_jaxpr(fn_dyn)(*dyn_args)
         flat_args, _ = jax.tree_util.tree_flatten(dyn_args)
         # map leaf taint: every leaf of an arena-argnum pytree is tainted
-        taints: List[bool] = []
-        for p, a in zip(dyn_pos, dyn_args):
-            leaves = jax.tree_util.tree_leaves(a)
-            taints.extend([p in arena_set] * len(leaves))
-        report = SandboxReport()
-        oks: List[Tuple[Any, jax.Array]] = []
-        outs, _ = _interpret(closed, flat_args, taints, fence_params, policy,
-                             report, oks)
-        ok = jnp.all(jnp.stack([jnp.all(o) for _, o in oks])) \
-            if oks else jnp.bool_(True)
+        taints, slots = _flat_taints(dyn_pos, dyn_args, arena_set)
+        verdicts = None
+        proof = None
+        if verify:
+            proof = _run_verifier(closed, taints, slots, fence_params,
+                                  bound_argnums, kernel_name)
+            verdicts = {s.path: s.verdict for s in proof.sites}
+            if on_proof is not None:
+                on_proof(proof)
+        report = SandboxReport(proof=proof)
+        oks = _OkAcc()
+        outs, _ = _interpret(closed, flat_args, taints, fence_params,
+                             policy, report, oks, verdicts)
+        ok = oks.ok()
         out_tree = jax.tree_util.tree_structure(
             jax.eval_shape(fn_dyn, *dyn_args)
         )
         out = jax.tree_util.tree_unflatten(out_tree, outs)
         if not count_violations:
             return out, ok
-        counts = jnp.zeros((NUM_KINDS,), jnp.int32)
-        for kind, o in oks:
-            n_bad = jnp.sum(jnp.logical_not(o).astype(jnp.int32))
-            counts = counts.at[int(kind)].add(n_bad)
-        return out, ok, counts
+        return out, ok, oks.counts()
 
     return sandboxed
 
@@ -335,9 +630,17 @@ def sandbox_report(
     example_args: Sequence[Any],
     arena_argnums: Sequence[int] = (0,),
     policy: FencePolicy = FencePolicy.BITWISE,
+    verify: bool = False,
+    params: Optional[FenceParams] = None,
+    bound_argnums: Sequence[int] = (),
 ) -> SandboxReport:
     """Dry-run the patcher and report how many accesses were safeguarded
-    (Table 3: "#total loads / #total stores ... identified and safeguarded")."""
+    (Table 3: "#total loads / #total stores ... identified and safeguarded").
+
+    With ``verify=True`` the report's ``proof`` field carries the static
+    verifier's per-site classification (and elided sites are counted in
+    ``elided_*`` instead of ``fenced_*``).  ``params=None`` verifies against
+    the symbolic row."""
     example_args = tuple(example_args)
     dyn_pos = [i for i, a in enumerate(example_args)
                if isinstance(a, (jax.Array, np.ndarray))
@@ -352,13 +655,18 @@ def sandbox_report(
 
     closed = jax.make_jaxpr(fn_dyn)(*dyn_args)
     flat_args, _ = jax.tree_util.tree_flatten(dyn_args)
-    taints: List[bool] = []
     arena_set = frozenset(arena_argnums)
-    for p, a in zip(dyn_pos, dyn_args):
-        leaves = jax.tree_util.tree_leaves(a)
-        taints.extend([p in arena_set] * len(leaves))
-    report = SandboxReport()
-    oks: List[Tuple[Any, jax.Array]] = []
-    dummy = FenceParams(base=0, size=1)
-    _interpret(closed, flat_args, taints, dummy, policy, report, oks)
+    taints, slots = _flat_taints(dyn_pos, dyn_args, arena_set)
+    verdicts = None
+    proof = None
+    if verify:
+        proof = _run_verifier(closed, taints, slots, params, bound_argnums,
+                              getattr(fn, "__name__", "<kernel>"))
+        verdicts = {s.path: s.verdict for s in proof.sites}
+    report = SandboxReport(proof=proof)
+    oks = _OkAcc()
+    dummy = params if (params is not None and params.is_static) \
+        else FenceParams(base=0, size=1)
+    _interpret(closed, flat_args, taints, dummy, policy, report, oks,
+               verdicts)
     return report

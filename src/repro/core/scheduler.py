@@ -231,6 +231,10 @@ class SchedulerStats:
     single_steps: int = 0           # per-launch (unbatched) dispatches
     batched_launches: int = 0       # launches that rode in fused steps
     check_steps: int = 0            # dispatches through the CHECK commit path
+    #: CHECK batches re-routed to the plain fused path because the kernel
+    #: carries a fully-proven *symbolic* bounds proof (violations are
+    #: statically impossible — no ViolationLog plumbing needed)
+    proven_steps: int = 0
     max_batch_width: int = 0
     #: launches that fused *across* drain cycles: dispatched in a width>1
     #: step at a later cycle than they were submitted (the lookahead win)
@@ -291,6 +295,7 @@ class SchedulerStats:
             "device_steps": float(self.device_steps),
             "fused_steps": float(self.fused_steps),
             "check_steps": float(self.check_steps),
+            "proven_steps": float(self.proven_steps),
             "mean_batch_width": self.mean_batch_width,
             "max_batch_width": float(self.max_batch_width),
             "launches_per_step": self.launches_per_step,
@@ -536,11 +541,26 @@ class BatchedLaunchScheduler:
             self._execute_trusted(batch)
             return
         if batch[0].policy is FencePolicy.CHECK:
-            # CHECK always takes the attributing commit path (any width):
-            # a width-1 CHECK step must contain-and-log, not raise, so its
-            # semantics match the fused case (tests/test_quarantine.py).
-            self._execute_check(batch)
-            return
+            # A fully-proven *symbolic* bounds proof holds for every
+            # partition: no access can stray, so the CHECK plumbing
+            # (ok predicates, ViolationLog attribution, selective commit)
+            # is dead weight — ride the plain fused path instead.  The
+            # proof is computed once per signature and cached on the
+            # kernel entry beside the jit caches.
+            head = batch[0]
+            proof = self.manager.symbolic_proof(
+                head.entry, head.call_args, arg_sig=head.signature[2])
+            if proof is not None:
+                self.stats.proven_steps += 1
+                for r in batch:
+                    r.repolicy(FencePolicy.BITWISE)
+            else:
+                # CHECK always takes the attributing commit path (any
+                # width): a width-1 CHECK step must contain-and-log, not
+                # raise, so its semantics match the fused case
+                # (tests/test_quarantine.py).
+                self._execute_check(batch)
+                return
         if len(batch) == 1:
             self.stats.single_steps += 1
             self.manager._execute_request(batch[0])

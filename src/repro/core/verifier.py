@@ -1,0 +1,1207 @@
+"""Static bounds verifier — trace-time proof of arena-access safety.
+
+Guardian (§4.3) fences only *register-addressed* PTX loads because direct
+accesses are provably safe at compile time.  The jaxpr sandbox makes the
+same static/dynamic split but proves nothing itself: every tainted access
+is fenced at runtime.  This module is the missing compiler pass: an
+**interval abstract interpretation** over the traced jaxpr that classifies
+each tainted access site as
+
+    PROVEN   statically in-bounds w.r.t. the fence row's ``(base, mask)``
+             (or the accessed operand's extent) — the runtime fence is
+             redundant and :func:`repro.core.sandbox.sandbox` elides it;
+    FENCED   unprovable either way — keep the runtime fence (the paper's
+             register-addressed case);
+    REFUTED  provably out-of-bounds on *every* launch — surfaced at trace
+             time as :class:`GuardianStaticViolation` instead of a silent
+             runtime clamp.
+
+Abstract domain
+---------------
+Each value gets one interval ``[lo, hi]`` collapsed over its elements.
+Bounds are **affine-symbolic**: integer linear expressions over the fence
+row's symbols ``B`` (base) and ``S`` (size) — concrete integers when the
+row is static.  Comparisons are decided by minimizing the difference over
+the symbol polytope ``{B >= 0, S >= 1, B + S <= N}`` (``N`` = arena
+extent when known): a linear function attains its minimum at a vertex, so
+three evaluations decide any provable inequality.  This is what lets a
+kernel that applies its *own* fence — ``(idx & mask) | base`` with the
+row's injected ``(base, mask)`` operands — prove its accesses land in
+``[B, B+S-1]`` for every tenant, with no per-partition specialization:
+``x & m`` with ``m ∈ [S-1, S-1]`` gives ``[0, S-1]`` and ``x | b`` with
+nonnegative operands is bounded by the operand sum.
+
+Loops (``scan`` / ``while`` / ``cond``) are handled by a fixpoint over the
+carried taints and intervals with **widening**: after the first unstable
+join a changed bound is widened to ±∞, so the iteration always converges
+(sites inside the body degrade to FENCED rather than rejecting the
+kernel).  The sandbox falls back to rejection only if the fixpoint fails
+to converge (:class:`VerifierError`).
+
+The result is a :class:`SandboxProof` — per-site provenance the sandbox
+consumes to elide fences, the manager caches alongside its jit caches,
+and ``python -m repro.lint`` renders as per-kernel audit tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.extend.core as jex_core
+import numpy as np
+
+from repro.core.fence import FenceParams
+from repro.core.violations import ViolationKind
+
+# --------------------------------------------------------------------------
+# Primitive tables shared with the sandbox (the two walkers must classify
+# taint identically or site paths would diverge).
+# --------------------------------------------------------------------------
+
+#: Primitives through which "this value IS the arena slot space" propagates.
+_TAINT_TRANSPARENT = {
+    "convert_element_type",
+    "copy",
+    "reshape",
+    "transpose",
+    "stop_gradient",
+    "reduce_precision",
+}
+
+#: Scatter-family primitives: operand 0 is the arena, operand 1 the indices.
+_SCATTER_PRIMS = {
+    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+    "scatter_add", "scatter_apply",
+}
+
+#: Call-like primitives interpreted recursively (jaxpr param name varies).
+_CALL_PRIMS = {
+    "jit": "jaxpr",
+    "pjit": "jaxpr",
+    "closed_call": "call_jaxpr",
+    "custom_jvp_call": "call_jaxpr",
+    "custom_vjp_call": "call_jaxpr",
+    "custom_vjp_call_jaxpr": "fun_jaxpr",
+    "remat": "jaxpr",
+    "checkpoint": "jaxpr",
+}
+
+#: Loop/branch primitives with verified structural support.
+_LOOP_PRIMS = {"scan", "while", "cond"}
+
+
+class GuardianStaticViolation(Exception):
+    """A tenant kernel contains an access the verifier *refuted*: provably
+    out-of-bounds on every launch.  Raised at trace time (registration or
+    first compile) with the per-site diagnostic — the static analogue of a
+    CHECK-mode detection, caught before the kernel ever runs."""
+
+
+class VerifierError(Exception):
+    """The abstract interpretation could not complete (e.g. a loop-carry
+    fixpoint failed to converge).  The sandbox treats this as "fall back
+    to rejection": the kernel keeps its runtime fences or is refused."""
+
+
+class GuardianTaintWarning(UserWarning):
+    """A taint-transparent op reshaped away the arena's slot dimension
+    (reshape splitting dim 0 / transpose demoting dim 0).  Taint is *kept*
+    — downstream accesses stay fenced, which can over-fence value math —
+    instead of silently dropping the arena lineage."""
+
+
+def transparent_taint(name: str, eqn, in_shape) -> bool:
+    """Taint rule for :data:`_TAINT_TRANSPARENT` prims with a tainted
+    operand 0 — shared between the sandbox and the verifier.
+
+    ``reshape``/``transpose`` that preserve dim 0 keep taint with exact
+    slot-space meaning.  When dim 0 is split or demoted the slot lineage
+    still flows through the data, so taint is **kept conservatively** and
+    a :class:`GuardianTaintWarning` is emitted: downstream dim-0 indexing
+    of the reshaped array will be fenced against the row even though the
+    leading axis is no longer the slot axis (containment over precision).
+    """
+    if name == "reshape":
+        new = eqn.params.get("new_sizes", None)
+        if in_shape and new and in_shape[0] == new[0]:
+            return True
+        warnings.warn(
+            f"reshape {tuple(in_shape)} -> {tuple(new) if new else new} "
+            "does not preserve the arena slot dim 0; keeping taint "
+            "(downstream accesses stay fenced)", GuardianTaintWarning,
+            stacklevel=2)
+        return True
+    if name == "transpose":
+        perm = eqn.params.get("permutation", ())
+        if bool(perm) and perm[0] == 0:
+            return True
+        warnings.warn(
+            f"transpose permutation {tuple(perm)} demotes the arena slot "
+            "dim 0; keeping taint (downstream accesses stay fenced)",
+            GuardianTaintWarning, stacklevel=2)
+        return True
+    return True
+
+
+# --------------------------------------------------------------------------
+# Linear expressions over bound symbols
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Lin:
+    """``const + Σ coef_i · sym_i`` with integer coefficients.
+
+    Symbols are small ints allocated by :class:`SymCtx`; a concrete bound
+    is a ``Lin`` with no terms.  Python-int arithmetic — no overflow.
+    """
+
+    const: int
+    terms: Tuple[Tuple[int, int], ...] = ()   # ((sym_id, coef), ...) sorted
+
+    def __add__(self, other: "Lin") -> "Lin":
+        acc = dict(self.terms)
+        for s, c in other.terms:
+            acc[s] = acc.get(s, 0) + c
+        return Lin(self.const + other.const,
+                   tuple(sorted((s, c) for s, c in acc.items() if c)))
+
+    def __sub__(self, other: "Lin") -> "Lin":
+        return self + other.scale(-1)
+
+    def scale(self, k: int) -> "Lin":
+        if k == 0:
+            return Lin(0)
+        return Lin(self.const * k,
+                   tuple((s, c * k) for s, c in self.terms))
+
+    def shift(self, k: int) -> "Lin":
+        return Lin(self.const + k, self.terms)
+
+    @property
+    def is_const(self) -> bool:
+        return not self.terms
+
+    def __str__(self) -> str:
+        parts = [str(self.const)] if (self.const or not self.terms) else []
+        for s, c in self.terms:
+            name = _SYM_NAMES.get(s, f"x{s}")
+            parts.append(f"{'+' if c > 0 else '-'}{abs(c) if abs(c) != 1 else ''}{name}")
+        out = "".join(parts)
+        return out.lstrip("+") or "0"
+
+
+_SYM_NAMES: Dict[int, str] = {}   # sym_id -> display name (diagnostics only)
+
+
+def lc(c: int) -> Lin:
+    return Lin(int(c))
+
+
+class SymCtx:
+    """Allocates ``(B, S)`` symbol pairs and decides linear inequalities.
+
+    Each pair carries the partition invariants ``B >= 0``, ``S >= 1`` and —
+    when the arena extent ``N`` is known — ``B + S <= N``.  A linear
+    expression is provably nonnegative iff its minimum over every pair's
+    feasible polytope is >= 0; by linearity the pairs contribute
+    independently and each contribution is minimized at a polytope vertex.
+    """
+
+    def __init__(self):
+        self._next = 0
+        self._pair_of: Dict[int, Tuple[int, int, Optional[int]]] = {}
+
+    def new_pair(self, extent: Optional[int] = None,
+                 tag: str = "") -> Tuple[int, int]:
+        b, s = self._next, self._next + 1
+        self._next += 2
+        self._pair_of[b] = (b, s, extent)
+        self._pair_of[s] = (b, s, extent)
+        _SYM_NAMES[b] = f"B{tag}"
+        _SYM_NAMES[s] = f"S{tag}"
+        return b, s
+
+    def prove_nonneg(self, e: Lin) -> bool:
+        """Provably ``e >= 0`` for every feasible symbol assignment."""
+        by_pair: Dict[int, Tuple[int, int, Optional[int]]] = {}
+        coefs: Dict[int, Dict[int, int]] = {}
+        for sym, coef in e.terms:
+            pair = self._pair_of.get(sym)
+            if pair is None:
+                return False
+            by_pair[pair[0]] = pair
+            d = coefs.setdefault(pair[0], {})
+            d[sym] = coef
+        total = e.const
+        for b, (pb, ps, extent) in by_pair.items():
+            db = coefs[b].get(pb, 0)
+            ds = coefs[b].get(ps, 0)
+            if extent is None:
+                # B in [0, inf), S in [1, inf): bounded below only when
+                # both coefficients are nonnegative (min at B=0, S=1)
+                if db < 0 or ds < 0:
+                    return False
+                total += ds
+            else:
+                n = int(extent)
+                # vertices of {B>=0, S>=1, B+S<=N}
+                total += min(db * 0 + ds * 1,
+                             db * 0 + ds * n,
+                             db * max(n - 1, 0) + ds * 1)
+        return total >= 0
+
+    def le(self, a: Lin, b: Lin) -> bool:
+        return self.prove_nonneg(b - a)
+
+    def lt(self, a: Lin, b: Lin) -> bool:
+        return self.prove_nonneg((b - a).shift(-1))
+
+
+# --------------------------------------------------------------------------
+# Intervals
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ival:
+    """Array-wide interval; ``None`` bound = unbounded in that direction."""
+
+    lo: Optional[Lin] = None
+    hi: Optional[Lin] = None
+
+    @property
+    def is_top(self) -> bool:
+        return self.lo is None and self.hi is None
+
+    def __str__(self) -> str:
+        lo = "-inf" if self.lo is None else str(self.lo)
+        hi = "+inf" if self.hi is None else str(self.hi)
+        return f"[{lo}, {hi}]"
+
+
+TOP = Ival()
+
+
+def iconst(lo: int, hi: Optional[int] = None) -> Ival:
+    return Ival(lc(lo), lc(lo if hi is None else hi))
+
+
+def _opt_add(a: Optional[Lin], b: Optional[Lin]) -> Optional[Lin]:
+    return None if (a is None or b is None) else a + b
+
+
+def iadd(a: Ival, b: Ival) -> Ival:
+    return Ival(_opt_add(a.lo, b.lo), _opt_add(a.hi, b.hi))
+
+
+def ineg(a: Ival) -> Ival:
+    return Ival(None if a.hi is None else a.hi.scale(-1),
+                None if a.lo is None else a.lo.scale(-1))
+
+
+def isub(a: Ival, b: Ival) -> Ival:
+    return iadd(a, ineg(b))
+
+
+def _as_const(a: Ival) -> Optional[int]:
+    """The single concrete value of a degenerate constant interval."""
+    if (a.lo is not None and a.hi is not None
+            and a.lo.is_const and a.hi.is_const
+            and a.lo.const == a.hi.const):
+        return a.lo.const
+    return None
+
+
+def imul(a: Ival, b: Ival) -> Ival:
+    for x, y in ((a, b), (b, a)):
+        k = _as_const(x)
+        if k is not None:
+            if k >= 0:
+                return Ival(None if y.lo is None else y.lo.scale(k),
+                            None if y.hi is None else y.hi.scale(k))
+            return Ival(None if y.hi is None else y.hi.scale(k),
+                        None if y.lo is None else y.lo.scale(k))
+    # const-bounded × const-bounded: classic four-products
+    bounds = (a.lo, a.hi, b.lo, b.hi)
+    if all(x is not None and x.is_const for x in bounds):
+        prods = [a.lo.const * b.lo.const, a.lo.const * b.hi.const,
+                 a.hi.const * b.lo.const, a.hi.const * b.hi.const]
+        return iconst(min(prods), max(prods))
+    return TOP
+
+
+def _pick_le(ctx: SymCtx, a: Optional[Lin], b: Optional[Lin],
+             prefer_first: bool = True) -> Optional[Lin]:
+    """The provably-smaller of two bounds (None = unknown/incomparable)."""
+    if a is None or b is None:
+        return None
+    if ctx.le(a, b):
+        return a
+    if ctx.le(b, a):
+        return b
+    return a if prefer_first else None
+
+
+def imin(ctx: SymCtx, a: Ival, b: Ival) -> Ival:
+    # hi: min(x, y) <= x and <= y, so either hi is sound; prefer provable
+    if a.hi is None:
+        hi = b.hi
+    elif b.hi is None:
+        hi = a.hi
+    else:
+        hi = a.hi if ctx.le(a.hi, b.hi) else \
+            (b.hi if ctx.le(b.hi, a.hi) else a.hi)
+    # lo: need a bound <= both operands' minima
+    lo = _pick_le(ctx, a.lo, b.lo, prefer_first=False)
+    return Ival(lo, hi)
+
+
+def imax(ctx: SymCtx, a: Ival, b: Ival) -> Ival:
+    return ineg(imin(ctx, ineg(a), ineg(b)))
+
+
+def ijoin(ctx: SymCtx, a: Ival, b: Ival) -> Ival:
+    lo = _pick_le(ctx, a.lo, b.lo, prefer_first=False)
+    hi = None
+    if a.hi is not None and b.hi is not None:
+        if ctx.le(a.hi, b.hi):
+            hi = b.hi
+        elif ctx.le(b.hi, a.hi):
+            hi = a.hi
+    return Ival(lo, hi)
+
+
+def iwiden(ctx: SymCtx, old: Ival, new: Ival) -> Ival:
+    """Classic widening: a bound that moved outward goes to ±∞."""
+    lo = old.lo if (old.lo is not None and new.lo is not None
+                    and ctx.le(old.lo, new.lo)) else None
+    hi = old.hi if (old.hi is not None and new.hi is not None
+                    and ctx.le(new.hi, old.hi)) else None
+    return Ival(lo, hi)
+
+
+def ieq(a: Ival, b: Ival) -> bool:
+    return a.lo == b.lo and a.hi == b.hi
+
+
+# --------------------------------------------------------------------------
+# Proof artifacts
+# --------------------------------------------------------------------------
+
+PROVEN = "proven"
+FENCED = "fenced"
+REFUTED = "refuted"
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRecord:
+    """One tainted access site: where it is, what it does, what we know."""
+
+    path: Tuple                      # eqn-index path into the jaxpr forest
+    kind: ViolationKind              # GATHER / SCATTER / SLICE / UPDATE
+    prim: str                        # primitive name at the site
+    verdict: str                     # PROVEN | FENCED | REFUTED
+    interval: str                    # index interval at the site (display)
+    target: str                      # the bound it was classified against
+    why: str                         # one-line reason
+
+    def row(self) -> str:
+        return (f"{self.verdict.upper():8s} {self.kind.name.lower():8s} "
+                f"{self.prim:22s} idx∈{self.interval:24s} "
+                f"target {self.target:18s} {self.why}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SandboxProof:
+    """The verifier's per-site provenance for one traced kernel.
+
+    ``symbolic=True`` means the proof was computed against the symbolic
+    row ``(B, S)`` under the partition invariants — it holds for *every*
+    tenant/partition, so the manager may route the kernel like a trusted
+    row.  A static proof holds only for the concrete ``(base, size)`` it
+    was computed with.
+    """
+
+    sites: Tuple[SiteRecord, ...]
+    mode: str                        # "row" | "extent"
+    symbolic: bool
+    arg_sig: Tuple                   # invar (shape, dtype) signature
+    n_eqns: int = 0
+
+    @property
+    def n_proven(self) -> int:
+        return sum(1 for s in self.sites if s.verdict == PROVEN)
+
+    @property
+    def n_fenced(self) -> int:
+        return sum(1 for s in self.sites if s.verdict == FENCED)
+
+    @property
+    def n_refuted(self) -> int:
+        return sum(1 for s in self.sites if s.verdict == REFUTED)
+
+    @property
+    def fully_proven(self) -> bool:
+        """Every site proven (vacuously true for zero dynamic sites)."""
+        return self.n_fenced == 0 and self.n_refuted == 0
+
+    @property
+    def proven_fraction(self) -> float:
+        return self.n_proven / len(self.sites) if self.sites else 1.0
+
+    def verdict_of(self, path: Tuple) -> Optional[str]:
+        for s in self.sites:
+            if s.path == path:
+                return s.verdict
+        return None
+
+    def refuted_sites(self) -> Tuple[SiteRecord, ...]:
+        return tuple(s for s in self.sites if s.verdict == REFUTED)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "sites": len(self.sites),
+            "proven": self.n_proven,
+            "fenced": self.n_fenced,
+            "refuted": self.n_refuted,
+            "fully_proven": self.fully_proven,
+            "proven_fraction": round(self.proven_fraction, 4),
+            "symbolic": self.symbolic,
+            "mode": self.mode,
+        }
+
+    def format_table(self, indent: str = "  ") -> str:
+        if not self.sites:
+            return indent + "(no dynamic arena access sites)"
+        return "\n".join(indent + s.row() for s in self.sites)
+
+
+# --------------------------------------------------------------------------
+# Abstract interpreter
+# --------------------------------------------------------------------------
+
+_MAX_FIX_ITERS = 16    # hard convergence guard (widening converges in ~3)
+
+
+def _aval_of(v):
+    return v.aval
+
+
+def _const_ival(val) -> Ival:
+    try:
+        arr = np.asarray(val)
+    except Exception:
+        return TOP
+    if arr.size == 0:
+        return TOP
+    if arr.dtype == np.bool_:
+        return iconst(int(arr.min()), int(arr.max()))
+    if np.issubdtype(arr.dtype, np.integer):
+        return iconst(int(arr.min()), int(arr.max()))
+    return TOP
+
+
+def _int_dtype(aval) -> bool:
+    try:
+        return (np.issubdtype(aval.dtype, np.integer)
+                or aval.dtype == np.bool_)
+    except Exception:
+        return False
+
+
+class _AbsState:
+    """Verifier walk state: symbol context, site sink, eqn counter."""
+
+    def __init__(self, ctx: SymCtx, target: "_Target"):
+        self.ctx = ctx
+        self.target = target
+        self.sites: List[SiteRecord] = []
+        self.n_eqns = 0
+
+
+@dataclasses.dataclass
+class _Target:
+    """What "in-bounds" means for this verification.
+
+    ``row`` mode: the fence row ``[row_lo, row_hi]`` (site indices must
+    land inside the partition; outside on every launch = REFUTED).
+    ``extent`` mode: the accessed operand's own dim-0 extent plus any
+    *admissible ranges* — declared guard partitions found in the kernel's
+    operands — and refutation is never issued (a trusted step's safety
+    property is "every dynamic access is fenced by a declared guard").
+    """
+
+    mode: str                              # "row" | "extent"
+    row_lo: Optional[Lin] = None
+    row_hi: Optional[Lin] = None           # inclusive
+    admissible: Tuple[Tuple[Lin, Lin], ...] = ()
+
+    def targets_for(self, extent: Optional[int],
+                    length: int = 1) -> List[Tuple[Lin, Lin, str]]:
+        """Candidate inclusive [lo, hi] ranges a start/index may occupy.
+        ``length`` shrinks the hi for slice starts (start+len-1 <= hi)."""
+        out: List[Tuple[Lin, Lin, str]] = []
+        if self.mode == "row":
+            out.append((self.row_lo, self.row_hi.shift(1 - length),
+                        f"[{self.row_lo}, {self.row_hi}]"))
+            return out
+        if extent is not None:
+            out.append((lc(0), lc(extent - length),
+                        f"extent[0, {extent - 1}]"))
+        for lo, hi in self.admissible:
+            out.append((lo, hi.shift(1 - length), f"guard[{lo}, {hi}]"))
+        return out
+
+
+def _classify(state: _AbsState, path: Tuple, kind: ViolationKind,
+              prim: str, idx_ival: Ival, extent: Optional[int],
+              length: int = 1) -> str:
+    """PROVEN / FENCED / REFUTED for one access site, recorded in-place."""
+    ctx = state.ctx
+    tgt = state.target
+    targets = tgt.targets_for(extent, length)
+    verdict, why, tdesc = FENCED, "interval not contained", "-"
+    for lo, hi, desc in targets:
+        tdesc = desc
+        if (idx_ival.lo is not None and idx_ival.hi is not None
+                and ctx.le(lo, idx_ival.lo) and ctx.le(idx_ival.hi, hi)):
+            verdict, why = PROVEN, "statically contained"
+            break
+    if verdict is FENCED and tgt.mode == "row":
+        # refutation: the runtime CHECK predicate is on the raw index /
+        # start scalar (base <= idx < base+size, length-independent), so
+        # refute against the full row — "always trips CHECK" is exact
+        lo, hi, tdesc0 = tgt.targets_for(None, 1)[0]
+        if idx_ival.hi is not None and ctx.lt(idx_ival.hi, lo):
+            verdict, why, tdesc = REFUTED, "always below partition", tdesc0
+        elif idx_ival.lo is not None and ctx.lt(hi, idx_ival.lo):
+            verdict, why, tdesc = REFUTED, "always above partition", tdesc0
+        else:
+            tdesc = tdesc0
+            why = ("interval unbounded" if idx_ival.is_top
+                   else "interval straddles bound")
+    elif verdict is FENCED:
+        why = ("interval unbounded" if idx_ival.is_top
+               else "interval straddles bound")
+    state.sites.append(SiteRecord(
+        path=path, kind=kind, prim=prim, verdict=verdict,
+        interval=str(idx_ival), target=tdesc, why=why))
+    return verdict
+
+
+def _abs_eval_prim(state: _AbsState, eqn, ivals: List[Ival],
+                   avals: List[Any]) -> List[Ival]:
+    """Interval transfer function for one first-order primitive."""
+    ctx = state.ctx
+    name = eqn.primitive.name
+    n_out = len(eqn.outvars)
+
+    def one(v: Ival) -> List[Ival]:
+        return [v] * n_out
+
+    if name == "iota":
+        dim = eqn.params.get("dimension", 0)
+        shape = eqn.params.get("shape", ())
+        n = shape[dim] if shape else 1
+        return one(iconst(0, max(int(n) - 1, 0)))
+    if name in ("argmax", "argmin"):
+        axes = eqn.params.get("axes", (0,))
+        n = avals[0].shape[axes[0]] if avals[0].shape else 1
+        return one(iconst(0, max(int(n) - 1, 0)))
+    if name in ("copy", "broadcast_in_dim", "reshape", "transpose",
+                "squeeze", "rev", "slice", "stop_gradient",
+                "reduce_precision", "reduce_min", "reduce_max",
+                "expand_dims"):
+        return one(ivals[0])
+    if name == "sort":
+        # k-th output is a permutation of the k-th operand's elements
+        return [ivals[k] if k < len(ivals) else TOP for k in range(n_out)]
+    if name == "convert_element_type":
+        out_aval = eqn.outvars[0].aval
+        if _int_dtype(out_aval) and _int_dtype(avals[0]):
+            return one(ivals[0])
+        return one(TOP)
+    if name == "add":
+        return one(iadd(ivals[0], ivals[1]))
+    if name == "sub":
+        return one(isub(ivals[0], ivals[1]))
+    if name == "neg":
+        return one(ineg(ivals[0]))
+    if name == "mul":
+        return one(imul(ivals[0], ivals[1]))
+    if name == "max":
+        return one(imax(ctx, ivals[0], ivals[1]))
+    if name == "min":
+        return one(imin(ctx, ivals[0], ivals[1]))
+    if name == "clamp":
+        # clamp(lo, x, hi) = min(max(x, lo), hi)
+        return one(imin(ctx, imax(ctx, ivals[1], ivals[0]), ivals[2]))
+    if name == "abs":
+        v = ivals[0]
+        if v.lo is not None and ctx.prove_nonneg(v.lo):
+            return one(v)
+        return one(Ival(lc(0), None))
+    if name == "rem":
+        d = _as_const(ivals[1])
+        if d is not None and d > 0:
+            v = ivals[0]
+            if v.lo is not None and ctx.prove_nonneg(v.lo):
+                hi = lc(d - 1)
+                if v.hi is not None and ctx.le(v.hi, hi):
+                    hi = v.hi          # |rem| <= |dividend|
+                return one(Ival(lc(0), hi))
+            return one(iconst(-(d - 1), d - 1))
+        return one(TOP)
+    if name == "div":
+        d = _as_const(ivals[1])
+        v = ivals[0]
+        if (d is not None and d > 0 and v.lo is not None
+                and v.hi is not None and v.lo.is_const and v.hi.is_const
+                and v.lo.const >= 0):
+            return one(iconst(v.lo.const // d, v.hi.const // d))
+        return one(TOP)
+    if name in ("shift_right_logical", "shift_right_arithmetic"):
+        k = _as_const(ivals[1])
+        v = ivals[0]
+        if (k is not None and k >= 0 and v.lo is not None
+                and v.hi is not None and v.lo.is_const and v.hi.is_const
+                and v.lo.const >= 0):
+            return one(iconst(v.lo.const >> k, v.hi.const >> k))
+        return one(TOP)
+    if name == "and":
+        # x & m ∈ [0, hi(m)] when m >= 0 (two's complement)
+        cands = []
+        for i in (0, 1):
+            v = ivals[i]
+            if v.lo is not None and ctx.prove_nonneg(v.lo):
+                cands.append(v.hi)
+        if not cands:
+            return one(TOP)
+        hi = cands[0]
+        for c in cands[1:]:
+            hi = _pick_le(ctx, hi, c) if hi is not None else c
+        return one(Ival(lc(0), hi))
+    if name in ("or", "xor"):
+        a, b = ivals[0], ivals[1]
+        if (a.lo is not None and ctx.prove_nonneg(a.lo)
+                and b.lo is not None and ctx.prove_nonneg(b.lo)):
+            # for nonneg x, y: max(x, y) <= x|y <= x + y (x^y likewise)
+            lo = lc(0)
+            if name == "or":
+                lo = a.lo if ctx.le(b.lo, a.lo) else b.lo
+            hi = _opt_add(a.hi, b.hi)
+            return one(Ival(lo, hi))
+        return one(TOP)
+    if name == "select_n":
+        # decided predicate (e.g. jnp.take's negative-index wrap where the
+        # index is provably nonnegative) -> only the taken case flows
+        k = _as_const(ivals[0])
+        if k is not None and 0 <= k < len(ivals) - 1:
+            return one(ivals[1 + k])
+        out = ivals[1]
+        for v in ivals[2:]:
+            out = ijoin(ctx, out, v)
+        return one(out)
+    if name == "concatenate":
+        out = ivals[0]
+        for v in ivals[1:]:
+            out = ijoin(ctx, out, v)
+        return one(out)
+    if name == "pad":
+        return one(ijoin(ctx, ivals[0], ivals[1]))
+    if name == "gather":
+        return one(ivals[0])               # values come from the operand
+    if name in _SCATTER_PRIMS:
+        return one(ijoin(ctx, ivals[0], ivals[2] if len(ivals) > 2
+                         else TOP))
+    if name == "dynamic_slice":
+        return one(ivals[0])
+    if name == "dynamic_update_slice":
+        return one(ijoin(ctx, ivals[0], ivals[1]))
+    if name in ("lt", "le", "gt", "ge"):
+        a, b = ivals[0], ivals[1]
+        if name in ("gt", "ge"):           # a > b  ==  b < a
+            a, b = b, a
+            name = {"gt": "lt", "ge": "le"}[name]
+        strict = name == "lt"
+        if a.hi is not None and b.lo is not None and (
+                ctx.lt(a.hi, b.lo) if strict else ctx.le(a.hi, b.lo)):
+            return one(iconst(1))          # always true
+        if a.lo is not None and b.hi is not None and (
+                ctx.le(b.hi, a.lo) if strict else ctx.lt(b.hi, a.lo)):
+            return one(iconst(0))          # always false
+        return one(iconst(0, 1))
+    if name in ("eq", "ne", "not", "is_finite"):
+        return one(iconst(0, 1))
+    return [TOP] * n_out
+
+
+def _abs_interpret(
+    state: _AbsState,
+    closed: Any,
+    in_taints: Sequence[bool],
+    in_ivals: Sequence[Ival],
+    path: Tuple = (),
+    record: bool = True,
+) -> Tuple[List[bool], List[Ival]]:
+    """Walk one (Closed)Jaxpr abstractly; returns output (taints, ivals).
+
+    ``record=False`` runs the walk purely for its transfer functions (the
+    loop-fixpoint iterations) without emitting site records or counting
+    eqns twice.
+    """
+    jaxpr = closed.jaxpr
+    taint: Dict[Any, bool] = {}
+    ival: Dict[Any, Ival] = {}
+
+    for var, val in zip(jaxpr.constvars, closed.consts):
+        taint[var] = False
+        ival[var] = _const_ival(val)
+    for var, t, v in zip(jaxpr.invars, in_taints, in_ivals):
+        taint[var] = t
+        ival[var] = v
+
+    def read_t(v) -> bool:
+        if isinstance(v, jex_core.Literal):
+            return False
+        return taint.get(v, False)
+
+    def read_i(v) -> Ival:
+        if isinstance(v, jex_core.Literal):
+            return _const_ival(v.val)
+        return ival.get(v, TOP)
+
+    for i, eqn in enumerate(jaxpr.eqns):
+        if record:
+            state.n_eqns += 1
+        name = eqn.primitive.name
+        ts = [read_t(v) for v in eqn.invars]
+        vs = [read_i(v) for v in eqn.invars]
+        avals = [_aval_of(v) for v in eqn.invars]
+        site_path = (*path, i)
+
+        if name in _CALL_PRIMS:
+            sub = eqn.params.get(_CALL_PRIMS[name])
+            if sub is None:
+                sub = next(v for v in eqn.params.values()
+                           if hasattr(v, "jaxpr"))
+            out_ts, out_vs = _abs_interpret(state, sub, ts, vs,
+                                            path=site_path, record=record)
+            for var, t, v in zip(eqn.outvars, out_ts, out_vs):
+                taint[var] = t
+                ival[var] = v
+            continue
+
+        if name in _LOOP_PRIMS and any(ts):
+            out_ts, out_vs = _abs_loop(state, eqn, ts, vs,
+                                       path=site_path, record=record)
+            for var, t, v in zip(eqn.outvars, out_ts, out_vs):
+                taint[var] = t
+                ival[var] = v
+            continue
+
+        out_taint = False
+
+        if name == "gather" and ts[0]:
+            dnums = eqn.params["dimension_numbers"]
+            cols = [j for j, d in enumerate(dnums.start_index_map) if d == 0]
+            if cols and record:
+                _classify(state, site_path, ViolationKind.GATHER, name,
+                          vs[1], int(avals[0].shape[0])
+                          if avals[0].shape else None)
+            out_taint = False
+        elif name in _SCATTER_PRIMS and ts[0]:
+            dnums = eqn.params["dimension_numbers"]
+            cols = [j for j, d in
+                    enumerate(dnums.scatter_dims_to_operand_dims) if d == 0]
+            if cols and record:
+                _classify(state, site_path, ViolationKind.SCATTER, name,
+                          vs[1], int(avals[0].shape[0])
+                          if avals[0].shape else None)
+            out_taint = True
+        elif name == "dynamic_slice" and ts[0]:
+            if record:
+                sizes = eqn.params["slice_sizes"]
+                _classify(state, site_path, ViolationKind.SLICE, name,
+                          vs[1], int(avals[0].shape[0])
+                          if avals[0].shape else None,
+                          length=int(sizes[0]))
+            out_taint = False
+        elif name == "dynamic_update_slice" and ts[0]:
+            if record:
+                upd = avals[1].shape[0] if avals[1].shape else 1
+                _classify(state, site_path, ViolationKind.UPDATE, name,
+                          vs[2], int(avals[0].shape[0])
+                          if avals[0].shape else None,
+                          length=int(upd))
+            out_taint = True
+        elif name in _TAINT_TRANSPARENT and ts[0]:
+            with warnings.catch_warnings():
+                if not record:   # warn once, on the recording pass
+                    warnings.simplefilter("ignore", GuardianTaintWarning)
+                out_taint = transparent_taint(name, eqn, avals[0].shape)
+
+        out_ivals = _abs_eval_prim(state, eqn, vs, avals)
+        for var, v in zip(eqn.outvars, out_ivals):
+            taint[var] = out_taint
+            ival[var] = v
+
+    out_ts = [read_t(v) for v in jaxpr.outvars]
+    out_vs = [read_i(v) for v in jaxpr.outvars]
+    return out_ts, out_vs
+
+
+def _fixpoint(state: _AbsState, body: Any, n_pre: int, n_carry: int,
+              pre_ts, pre_vs, carry_ts, carry_vs, xs_ts, xs_vs,
+              path: Tuple) -> Tuple[List[bool], List[Ival],
+                                    List[bool], List[Ival]]:
+    """Taint + interval fixpoint with widening over a loop body.
+
+    ``pre`` are the consts (never updated), ``carry`` the loop-carried
+    values, ``xs`` per-iteration slices (scan only; empty for while).
+    Returns converged (carry_ts, carry_vs) and the body's full output
+    (taints, ivals) at the fixpoint.
+    """
+    ctx = state.ctx
+    carry_ts = list(carry_ts)
+    carry_vs = list(carry_vs)
+    for it in range(_MAX_FIX_ITERS):
+        out_ts, out_vs = _abs_interpret(
+            state, body, [*pre_ts, *carry_ts, *xs_ts],
+            [*pre_vs, *carry_vs, *xs_vs], path=path, record=False)
+        new_ts = [a or b for a, b in zip(carry_ts, out_ts[:n_carry])]
+        new_vs = [ijoin(ctx, a, b)
+                  for a, b in zip(carry_vs, out_vs[:n_carry])]
+        if it >= 1:
+            new_vs = [iwiden(ctx, old, new)
+                      for old, new in zip(carry_vs, new_vs)]
+        if new_ts == carry_ts and all(
+                ieq(a, b) for a, b in zip(new_vs, carry_vs)):
+            return carry_ts, carry_vs, out_ts, out_vs
+        carry_ts, carry_vs = new_ts, new_vs
+    raise VerifierError(
+        f"loop-carry interval fixpoint did not converge at path {path} "
+        f"after {_MAX_FIX_ITERS} iterations")
+
+
+def loop_carry_taints(eqn, in_taints: Sequence[bool]) -> Tuple[List[bool],
+                                                               List[bool]]:
+    """Converged (carry taints, body output taints) for a tainted
+    ``scan``/``while`` eqn — the sandbox uses this to interpret loop
+    bodies with stable taint assignments.  For ``while`` the "body output
+    taints" cover the carry only."""
+    state = _AbsState(SymCtx(), _Target(mode="extent"))
+    name = eqn.primitive.name
+    if name == "scan":
+        body = eqn.params["jaxpr"]
+        n_c = eqn.params["num_consts"]
+        n_car = eqn.params["num_carry"]
+        pre_ts = list(in_taints[:n_c])
+        car_ts = list(in_taints[n_c:n_c + n_car])
+        xs_ts = list(in_taints[n_c + n_car:])
+        n_in = len(body.jaxpr.invars)
+        tops = [TOP] * n_in
+        car_ts, _, out_ts, _ = _fixpoint(
+            state, body, n_c, n_car, pre_ts, tops[:n_c], car_ts,
+            tops[:n_car], xs_ts, tops[:len(xs_ts)], path=())
+        return car_ts, out_ts
+    if name == "while":
+        body = eqn.params["body_jaxpr"]
+        n_cc = eqn.params["cond_nconsts"]
+        n_bc = eqn.params["body_nconsts"]
+        pre_ts = list(in_taints[n_cc:n_cc + n_bc])
+        car_ts = list(in_taints[n_cc + n_bc:])
+        n_car = len(car_ts)
+        tops_pre = [TOP] * n_bc
+        tops_car = [TOP] * n_car
+        car_ts, _, out_ts, _ = _fixpoint(
+            state, body, n_bc, n_car, pre_ts, tops_pre, car_ts, tops_car,
+            [], [], path=())
+        return car_ts, out_ts
+    raise ValueError(name)
+
+
+def _abs_loop(state: _AbsState, eqn, ts, vs, path: Tuple,
+              record: bool) -> Tuple[List[bool], List[Ival]]:
+    """Abstract scan/while/cond with a widened carry fixpoint."""
+    name = eqn.primitive.name
+    if name == "scan":
+        body = eqn.params["jaxpr"]
+        n_c = eqn.params["num_consts"]
+        n_car = eqn.params["num_carry"]
+        pre_ts, pre_vs = ts[:n_c], vs[:n_c]
+        car_ts, car_vs = ts[n_c:n_c + n_car], vs[n_c:n_c + n_car]
+        xs_ts, xs_vs = ts[n_c + n_car:], vs[n_c + n_car:]
+        car_ts, car_vs, out_ts, out_vs = _fixpoint(
+            state, body, n_c, n_car, pre_ts, pre_vs, car_ts, car_vs,
+            xs_ts, xs_vs, (*path, 0))
+        if record:   # one recording pass at the fixpoint
+            out_ts, out_vs = _abs_interpret(
+                state, body, [*pre_ts, *car_ts, *xs_ts],
+                [*pre_vs, *car_vs, *xs_vs], path=(*path, 0), record=True)
+        # outputs: final carry then stacked ys
+        return ([*car_ts, *out_ts[n_car:]],
+                [*car_vs, *out_vs[n_car:]])
+    if name == "while":
+        cond = eqn.params["cond_jaxpr"]
+        body = eqn.params["body_jaxpr"]
+        n_cc = eqn.params["cond_nconsts"]
+        n_bc = eqn.params["body_nconsts"]
+        cpre_ts, cpre_vs = ts[:n_cc], vs[:n_cc]
+        bpre_ts, bpre_vs = ts[n_cc:n_cc + n_bc], vs[n_cc:n_cc + n_bc]
+        car_ts, car_vs = ts[n_cc + n_bc:], vs[n_cc + n_bc:]
+        n_car = len(car_ts)
+        car_ts, car_vs, _, _ = _fixpoint(
+            state, body, n_bc, n_car, bpre_ts, bpre_vs, car_ts, car_vs,
+            [], [], (*path, 1))
+        if record:
+            _abs_interpret(state, cond, [*cpre_ts, *car_ts],
+                           [*cpre_vs, *car_vs], path=(*path, 0),
+                           record=True)
+            _abs_interpret(state, body, [*bpre_ts, *car_ts],
+                           [*bpre_vs, *car_vs], path=(*path, 1),
+                           record=True)
+        return list(car_ts), list(car_vs)
+    if name == "cond":
+        branches = eqn.params["branches"]
+        op_ts, op_vs = ts[1:], vs[1:]
+        out_ts: Optional[List[bool]] = None
+        out_vs: Optional[List[Ival]] = None
+        for b, br in enumerate(branches):
+            bts, bvs = _abs_interpret(state, br, op_ts, op_vs,
+                                      path=(*path, b), record=record)
+            if out_ts is None:
+                out_ts, out_vs = bts, bvs
+            else:
+                out_ts = [a or b_ for a, b_ in zip(out_ts, bts)]
+                out_vs = [ijoin(state.ctx, a, b_)
+                          for a, b_ in zip(out_vs, bvs)]
+        return out_ts or [], out_vs or []
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def _invar_sig(closed) -> Tuple:
+    return tuple((tuple(v.aval.shape), str(v.aval.dtype))
+                 for v in closed.jaxpr.invars)
+
+
+def verify_jaxpr(
+    closed: Any,
+    in_taints: Sequence[bool],
+    params: Optional[FenceParams] = None,
+    *,
+    in_roles: Optional[Sequence[Optional[str]]] = None,
+    arena_extent: Optional[int] = None,
+    mode: str = "row",
+    admissible: Sequence[Tuple[int, int]] = (),
+    dyn_role_pairs: Optional[Dict[int, Tuple[str, int]]] = None,
+) -> SandboxProof:
+    """Run the bounds proof over an already-traced ClosedJaxpr.
+
+    ``in_taints`` flags arena-derived invars (one per flat invar).
+    ``params`` is the fence row: static ints give a concrete proof,
+    ``None``/traced gives the symbolic-row proof (valid for every
+    partition of an arena with ``arena_extent`` slots).  ``in_roles``
+    optionally names invars that *carry the row into the kernel* —
+    ``"base"`` / ``"mask"`` / ``"size"`` — the paper's two injected
+    parameters; their intervals become the row symbols, which is what
+    lets an internally-fenced kernel prove itself.
+
+    ``mode="extent"`` verifies trusted steps: sites must fit the accessed
+    operand's extent or one of the ``admissible`` static guard ranges
+    (``dyn_role_pairs`` maps flat-invar index -> (field, pair_no) for
+    dynamic guard params, each pair getting its own symbols).
+    """
+    ctx = SymCtx()
+    static = params is not None and params.is_static
+
+    if mode == "row":
+        if static:
+            row_lo = lc(params.base)
+            row_hi = lc(params.base + params.size - 1)
+            base_iv = iconst(params.base)
+            size_iv = iconst(params.size)
+        else:
+            b, s = ctx.new_pair(extent=arena_extent)
+            row_lo = Lin(0, ((b, 1),))
+            row_hi = Lin(-1, ((b, 1), (s, 1)))
+            base_iv = Ival(row_lo, row_lo)
+            size_iv = Ival(Lin(0, ((s, 1),)), Lin(0, ((s, 1),)))
+        target = _Target(mode="row", row_lo=row_lo, row_hi=row_hi)
+        role_ivals = {
+            "base": base_iv,
+            "size": size_iv,
+            "mask": Ival(size_iv.lo.shift(-1), size_iv.hi.shift(-1)),
+        }
+    else:
+        adm: List[Tuple[Lin, Lin]] = [
+            (lc(b0), lc(b0 + s0 - 1)) for b0, s0 in admissible]
+        pair_syms: Dict[int, Tuple[int, int]] = {}
+        for pos, (field, pno) in (dyn_role_pairs or {}).items():
+            if pno not in pair_syms:
+                pair_syms[pno] = ctx.new_pair(tag=str(pno))
+                b, s = pair_syms[pno]
+                adm.append((Lin(0, ((b, 1),)),
+                            Lin(-1, ((b, 1), (s, 1)))))
+        target = _Target(mode="extent", admissible=tuple(adm))
+        role_ivals = {}
+
+    n_in = len(closed.jaxpr.invars)
+    in_ivals: List[Ival] = [TOP] * n_in
+    if mode == "row" and in_roles is not None:
+        for i, role in enumerate(in_roles):
+            if role in role_ivals:
+                in_ivals[i] = role_ivals[role]
+    if mode == "extent" and dyn_role_pairs:
+        for pos, (field, pno) in dyn_role_pairs.items():
+            b, s = pair_syms[pno]
+            bl = Lin(0, ((b, 1),))
+            sl = Lin(0, ((s, 1),))
+            if field == "base":
+                in_ivals[pos] = Ival(bl, bl)
+            elif field == "size":
+                in_ivals[pos] = Ival(sl, sl)
+            elif field == "mask":
+                in_ivals[pos] = Ival(sl.shift(-1), sl.shift(-1))
+
+    state = _AbsState(ctx, target)
+    taints = list(in_taints)
+    if len(taints) != n_in:
+        raise VerifierError(
+            f"taint vector length {len(taints)} != {n_in} invars")
+    _abs_interpret(state, closed, taints, in_ivals, path=(), record=True)
+    return SandboxProof(
+        sites=tuple(state.sites), mode=mode,
+        symbolic=(mode == "row" and not static),
+        arg_sig=_invar_sig(closed), n_eqns=state.n_eqns)
+
+
+def _split_dyn(example_args: Sequence[Any]):
+    """The sandbox's static/dynamic arg split, shared here so standalone
+    verification traces the kernel identically."""
+    dyn_pos = [i for i, a in enumerate(example_args)
+               if isinstance(a, (jax.Array, np.ndarray))
+               or isinstance(a, jax.core.Tracer)
+               or isinstance(a, jax.ShapeDtypeStruct)
+               or (jax.tree_util.tree_leaves(a)
+                   and not isinstance(a, (bool, int, float, complex, str,
+                                          bytes)))]
+    dyn_args = [example_args[p] for p in dyn_pos]
+    return dyn_pos, dyn_args
+
+
+def trace_kernel(fn: Callable, example_args: Sequence[Any],
+                 arena_argnums: Sequence[int] = (0,)):
+    """``(closed_jaxpr, flat_taints, leaf_slots)`` for a kernel traced the
+    way :func:`repro.core.sandbox.sandbox` traces it.  ``leaf_slots`` maps
+    each original arg position to its (start, stop) flat-leaf range."""
+    example_args = tuple(example_args)
+    dyn_pos, dyn_args = _split_dyn(example_args)
+
+    def fn_dyn(*dargs):
+        full = list(example_args)
+        for p, v in zip(dyn_pos, dargs):
+            full[p] = v
+        return fn(*full)
+
+    closed = jax.make_jaxpr(fn_dyn)(*dyn_args)
+    arena_set = frozenset(arena_argnums)
+    taints: List[bool] = []
+    leaf_slots: Dict[int, Tuple[int, int]] = {}
+    off = 0
+    for p, a in zip(dyn_pos, dyn_args):
+        n = len(jax.tree_util.tree_leaves(a))
+        leaf_slots[p] = (off, off + n)
+        taints.extend([p in arena_set] * n)
+        off += n
+    return closed, taints, leaf_slots
+
+
+def verify(
+    fn: Callable,
+    example_args: Sequence[Any],
+    arena_argnums: Sequence[int] = (0,),
+    bound_argnums: Sequence[int] = (),
+    params: Optional[FenceParams] = None,
+    mode: str = "row",
+) -> SandboxProof:
+    """Standalone bounds proof for ``fn(*example_args)``.
+
+    ``bound_argnums`` names the two injected row parameters —
+    ``(base_argnum, mask_argnum)`` — the launch path guarantees carry the
+    fence row (Guardian's Listing-1 augmentation).  ``mode="extent"``
+    additionally scans the operands for :class:`FenceParams` (GuardSpec
+    leaves) and admits their declared partitions as proof targets.
+    """
+    closed, taints, leaf_slots = trace_kernel(fn, example_args,
+                                              arena_argnums)
+    n_in = len(closed.jaxpr.invars)
+
+    in_roles: List[Optional[str]] = [None] * n_in
+    for role, argnum in zip(("base", "mask"), bound_argnums):
+        slot = leaf_slots.get(argnum)
+        if slot is not None and slot[1] - slot[0] == 1:
+            in_roles[slot[0]] = role
+
+    arena_extent = None
+    for i, t in enumerate(taints):
+        if t and closed.jaxpr.invars[i].aval.shape:
+            arena_extent = int(closed.jaxpr.invars[i].aval.shape[0])
+            break
+
+    admissible: List[Tuple[int, int]] = []
+    dyn_role_pairs: Dict[int, Tuple[str, int]] = {}
+    if mode == "extent":
+        dyn_pos, dyn_args = _split_dyn(tuple(example_args))
+        pair_no = 0
+        for p, a in zip(dyn_pos, dyn_args):
+            start, _stop = leaf_slots[p]
+            nodes, _ = jax.tree_util.tree_flatten(
+                a, is_leaf=lambda x: isinstance(x, FenceParams))
+            off = start
+            for node in nodes:
+                if isinstance(node, FenceParams):
+                    # array-valued fields are this node's pytree leaves,
+                    # in field order (fence._fence_params_flatten)
+                    is_dyn = _fp_aux(node)
+                    dyn_fields = [f for f, d in zip(
+                        ("base", "size", "magic_m", "magic_s"), is_dyn)
+                        if d]
+                    if node.is_static:
+                        admissible.append((int(node.base), int(node.size)))
+                    elif dyn_fields:
+                        for j, f in enumerate(dyn_fields):
+                            if f in ("base", "size"):
+                                dyn_role_pairs[off + j] = (f, pair_no)
+                        pair_no += 1
+                    off += len(dyn_fields)
+                else:
+                    off += len(jax.tree_util.tree_leaves(node))
+
+    return verify_jaxpr(
+        closed, taints, params, in_roles=in_roles,
+        arena_extent=arena_extent, mode=mode,
+        admissible=admissible, dyn_role_pairs=dyn_role_pairs)
+
+
+def _fp_aux(node: FenceParams):
+    """is_dyn flags of a FenceParams' fields, in field order."""
+    vals = (node.base, node.size, node.magic_m, node.magic_s)
+    return tuple(isinstance(v, (jax.Array, np.ndarray)) for v in vals)
+
+
+def refute_message(proof: SandboxProof, name: str = "<kernel>") -> str:
+    lines = [f"kernel {name!r}: {proof.n_refuted} access site(s) are "
+             "provably out-of-bounds on every launch:"]
+    for s in proof.refuted_sites():
+        lines.append("  " + s.row())
+    lines.append("(the verifier refuses at trace time; fix the index "
+                 "computation or register with verify=False to fall back "
+                 "to runtime containment)")
+    return "\n".join(lines)

@@ -322,6 +322,10 @@ class TrustedStepBundle:
     decode_name: str
     prefill_fn: Callable
     decode_fn: Callable
+    #: demand an extent-mode static bounds proof on the first dispatch of
+    #: each operand signature instead of blind trust — see
+    #: ``GuardianManager.register_trusted_kernel(verify=True)``
+    verify: bool = False
 
     def register(self, manager, pool: Dict) -> Any:
         """Adopt ``pool`` as the manager arena (idempotent — co-hosted
@@ -329,14 +333,16 @@ class TrustedStepBundle:
         step kernels against it.  Returns the live PoolArena."""
         arena = manager.register_pool(self.pool_name, pool)
         manager.register_trusted_kernel(
-            self.prefill_name, self.prefill_fn, pool_arena=self.pool_name)
+            self.prefill_name, self.prefill_fn, pool_arena=self.pool_name,
+            verify=self.verify)
         manager.register_trusted_kernel(
-            self.decode_name, self.decode_fn, pool_arena=self.pool_name)
+            self.decode_name, self.decode_fn, pool_arena=self.pool_name,
+            verify=self.verify)
         return arena
 
 
-def build_trusted_serve_steps(api: ModelAPI,
-                              pool_key: str) -> TrustedStepBundle:
+def build_trusted_serve_steps(api: ModelAPI, pool_key: str,
+                              verify: bool = False) -> TrustedStepBundle:
     """Trusted prefill/decode step functions for one model API.
 
     The step rebuilds the cache from the manager-threaded pool + the
@@ -371,6 +377,7 @@ def build_trusted_serve_steps(api: ModelAPI,
         decode_name=f"serve.decode[{pool_key}]",
         prefill_fn=prefill_step,
         decode_fn=decode_step,
+        verify=verify,
     )
 
 

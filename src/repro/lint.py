@@ -1,0 +1,293 @@
+"""``python -m repro.lint`` — static bounds audit of every Guardian kernel.
+
+Runs the :mod:`repro.core.verifier` over
+
+* every kernel in ``src/repro/kernels/`` (audited through its ``ref.py``
+  oracle — the contract each Pallas body is tested bit-compatible
+  against — as a fence-aware manager kernel with the *symbolic* row, so
+  a PROVEN verdict holds for every tenant partition);
+* the trusted serve step builders (``launch/steps.py``
+  ``build_trusted_serve_steps``) in extent mode on a reduced config;
+* the train step builder (``build_train_step``) in extent mode, params
+  tainted, the GuardSpec's declared partitions as proof targets.
+
+Per kernel it prints the verifier's site table (PROVEN / FENCED /
+REFUTED + why).  ``--strict`` exits nonzero on any refuted site, any
+audit error, or any regression of a kernel's proven-site fraction
+against the committed ``results/lint.baseline.json``;
+``--write-baseline`` refreshes that file after an intentional change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.verifier import SandboxProof, verify
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = _REPO_ROOT / "results" / "lint.baseline.json"
+
+
+def _f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel audits (src/repro/kernels/ via ref.py oracles, symbolic row mode)
+# ---------------------------------------------------------------------------
+
+def _audit_gather_rows() -> SandboxProof:
+    from repro.kernels import ref
+
+    def kernel(table, base, mask, idx):
+        return table, ref.gather_rows_ref(table, idx, base, mask)
+
+    args = (_f32(256, 8), jnp.int32(0), jnp.int32(0), _i32(16))
+    return verify(kernel, args, arena_argnums=(0,), bound_argnums=(1, 2),
+                  mode="row")
+
+
+def _audit_scatter_pages() -> SandboxProof:
+    from repro.kernels import ref
+
+    def kernel(pool, base, mask, pages, page_ids):
+        return ref.scatter_pages_ref(pool, pages, page_ids, base, mask), \
+            None
+
+    args = (_f32(64, 8, 2, 4), jnp.int32(0), jnp.int32(0),
+            _f32(4, 8, 2, 4), _i32(4))
+    return verify(kernel, args, arena_argnums=(0,), bound_argnums=(1, 2),
+                  mode="row")
+
+
+def _audit_paged_attention() -> SandboxProof:
+    from repro.kernels import ref
+
+    def kernel(k_pages, base, mask, q, v_pages, page_table, seq_lens):
+        B = q.shape[0]
+        fb = jnp.broadcast_to(base, (B,))
+        fm = jnp.broadcast_to(mask, (B,))
+        return k_pages, ref.paged_attention_ref(
+            q, k_pages, v_pages, page_table, seq_lens, fb, fm)
+
+    args = (_f32(64, 8, 2, 4), jnp.int32(0), jnp.int32(0),
+            _f32(2, 4, 4), _f32(64, 8, 2, 4), _i32(2, 4), _i32(2))
+    return verify(kernel, args, arena_argnums=(0, 4),
+                  bound_argnums=(1, 2), mode="row")
+
+
+def _audit_moe_histogram() -> SandboxProof:
+    from repro.kernels import ref
+
+    def kernel(arena, base, mask, expert_ids):
+        # counts land in a tenant-private tensor; the fence on the ids is
+        # what keeps the (drop-mode) scatter inside [0, num_experts)
+        return arena, ref.moe_histogram_ref(expert_ids, 16, base, mask)
+
+    args = (_f32(256), jnp.int32(0), jnp.int32(0), _i32(8, 2))
+    return verify(kernel, args, arena_argnums=(0,), bound_argnums=(1, 2),
+                  mode="row")
+
+
+def _audit_flash_attention() -> SandboxProof:
+    from repro.kernels import ref
+
+    def kernel(arena, base, mask, q, k, v):
+        # dense attention: no dynamic arena indexing at all — the audit
+        # documents that the kernel is vacuously safe (0 sites)
+        return arena, ref.flash_attention_ref(q, k, v, causal=True)
+
+    args = (_f32(256), jnp.int32(0), jnp.int32(0),
+            _f32(2, 8, 4, 4), _f32(2, 8, 2, 4), _f32(2, 8, 2, 4))
+    return verify(kernel, args, arena_argnums=(0,), bound_argnums=(1, 2),
+                  mode="row")
+
+
+# ---------------------------------------------------------------------------
+# Step-builder audits (launch/steps.py, extent mode, reduced config)
+# ---------------------------------------------------------------------------
+
+def _serve_fixture():
+    from repro.configs import ShapeConfig, get_config
+    from repro.launch.steps import make_guard, split_cache_pool
+    from repro.models import get_model
+
+    cfg = get_config("stablelm-3b").reduced()
+    api = get_model(cfg)
+    shape = ShapeConfig("lint", "decode", 64, 4)
+    guard = make_guard(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    pool, meta = split_cache_pool(cache)
+    params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    return cfg, api, shape, guard, pool, meta, params
+
+
+def _audit_serve_decode() -> SandboxProof:
+    from repro.launch.steps import build_trusted_serve_steps
+
+    cfg, api, shape, guard, pool, meta, params = _serve_fixture()
+    bundle = build_trusted_serve_steps(api, "lint")
+    toks = _i32(shape.global_batch)
+    return verify(bundle.decode_fn,
+                  (_f32(1024), pool, params, meta, toks, guard),
+                  arena_argnums=(0, 1), mode="extent")
+
+
+def _audit_serve_prefill() -> SandboxProof:
+    from repro.launch.steps import build_trusted_serve_steps
+
+    cfg, api, shape, guard, pool, meta, params = _serve_fixture()
+    bundle = build_trusted_serve_steps(api, "lint")
+    batch = {"tokens": _i32(shape.global_batch, 16)}
+    return verify(bundle.prefill_fn,
+                  (_f32(1024), pool, params, meta, batch, guard),
+                  arena_argnums=(0, 1), mode="extent")
+
+
+def _audit_train_step() -> SandboxProof:
+    from repro.configs import ShapeConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import build_train_step
+    from repro.models import get_model
+    from repro.optim import adamw, cosine
+
+    cfg = get_config("stablelm-3b").reduced()
+    shape = ShapeConfig("lint", "train", 32, 2)
+    bundle = build_train_step(cfg, shape, make_local_mesh(), remat=False)
+    params_shape, opt_shape, batch_specs = bundle.in_specs
+    # params are the tainted "arena": every dynamic access into the
+    # weights (embedding gathers and their scatter-add gradients) must be
+    # inside the GuardSpec's declared partitions
+    return verify(bundle.fn, (params_shape, opt_shape, batch_specs),
+                  arena_argnums=(0,), mode="extent")
+
+
+#: audit name -> thunk returning a SandboxProof
+AUDITS: Tuple[Tuple[str, Callable[[], SandboxProof]], ...] = (
+    ("kernels.gather_rows", _audit_gather_rows),
+    ("kernels.scatter_pages", _audit_scatter_pages),
+    ("kernels.paged_attention", _audit_paged_attention),
+    ("kernels.moe_histogram", _audit_moe_histogram),
+    ("kernels.flash_attention", _audit_flash_attention),
+    ("steps.serve.prefill", _audit_serve_prefill),
+    ("steps.serve.decode", _audit_serve_decode),
+    ("steps.train", _audit_train_step),
+)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_audits(only: Optional[str] = None,
+               ) -> Tuple[Dict[str, Dict], List[str]]:
+    """Run every audit (optionally filtered by substring), printing the
+    per-kernel site tables.  Returns ``(summaries, errors)``."""
+    summaries: Dict[str, Dict] = {}
+    errors: List[str] = []
+    for name, thunk in AUDITS:
+        if only and only not in name:
+            continue
+        print(f"== {name}")
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                proof = thunk()
+        except Exception as e:  # noqa: BLE001 — report, don't crash the CLI
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            print(f"  ERROR {type(e).__name__}: {e}\n")
+            continue
+        s = proof.summary()
+        summaries[name] = {k: s[k] for k in
+                           ("sites", "proven", "fenced", "refuted",
+                            "proven_fraction", "fully_proven", "mode")}
+        print(proof.format_table())
+        print(f"  -> {s['proven']}/{s['sites']} proven, "
+              f"{s['fenced']} fenced, {s['refuted']} refuted "
+              f"({'symbolic ' if s['symbolic'] else ''}{s['mode']} mode)\n")
+    return summaries, errors
+
+
+def compare_baseline(summaries: Dict[str, Dict],
+                     baseline: Dict[str, Dict]) -> List[str]:
+    """Regressions of the proven-site fraction vs the committed baseline."""
+    problems = []
+    for name, old in baseline.items():
+        new = summaries.get(name)
+        if new is None:
+            problems.append(f"{name}: in baseline but no longer audited")
+            continue
+        if new["proven_fraction"] < old["proven_fraction"]:
+            problems.append(
+                f"{name}: proven fraction regressed "
+                f"{old['proven_fraction']} -> {new['proven_fraction']}")
+        if new["refuted"] > old.get("refuted", 0):
+            problems.append(
+                f"{name}: refuted sites {old.get('refuted', 0)} -> "
+                f"{new['refuted']}")
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Static bounds audit of every Guardian kernel.")
+    p.add_argument("--strict", action="store_true",
+                   help="exit nonzero on refuted sites, audit errors, or "
+                        "proven-fraction regressions vs the baseline")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write results/lint.baseline.json from this run")
+    p.add_argument("--baseline", type=pathlib.Path,
+                   default=DEFAULT_BASELINE)
+    p.add_argument("--only", help="run only audits whose name contains "
+                                  "this substring")
+    args = p.parse_args(argv)
+
+    summaries, errors = run_audits(args.only)
+
+    refuted = {n: s for n, s in summaries.items() if s["refuted"]}
+    problems: List[str] = list(errors)
+    problems += [f"{n}: {s['refuted']} refuted site(s)"
+                 for n, s in refuted.items()]
+
+    if args.write_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        args.baseline.write_text(json.dumps(summaries, indent=2,
+                                            sort_keys=True) + "\n")
+        print(f"baseline written: {args.baseline}")
+    elif args.baseline.exists():
+        baseline = json.loads(args.baseline.read_text())
+        if args.only:   # partial run: compare only what we audited
+            baseline = {n: b for n, b in baseline.items()
+                        if n in summaries}
+        problems += compare_baseline(summaries, baseline)
+    elif args.strict:
+        problems.append(f"baseline {args.baseline} missing "
+                        "(run with --write-baseline and commit it)")
+
+    total = sum(s["sites"] for s in summaries.values())
+    proven = sum(s["proven"] for s in summaries.values())
+    print(f"lint: {len(summaries)} kernels audited, "
+          f"{proven}/{total} sites proven, {len(problems)} problem(s)")
+    for m in problems:
+        print(f"  PROBLEM {m}")
+    if problems and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -102,7 +102,8 @@ def test_private_tensors_not_fenced():
     assert rep.fenced_total == 0
 
 
-def test_loop_carried_arena_rejected():
+def test_loop_carried_arena_supported():
+    """scan with the arena in the carry is interpreted, not rejected."""
     def kernel(arena, n):
         def body(a, _):
             return a, None
@@ -110,8 +111,95 @@ def test_loop_carried_arena_rejected():
         return a, None
 
     sb = sandbox(kernel, arena_argnums=(0,))
-    with pytest.raises(SandboxError):
-        sb(_params(), jnp.zeros(64), jnp.int32(0))
+    (a, _), ok = sb(_params(), jnp.zeros(64), jnp.int32(0))
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(a), np.zeros(64))
+
+
+def test_scan_gather_fenced_per_iteration():
+    """Tainted gathers inside a scan body are fenced on every iteration."""
+    def kernel(arena, ptr):
+        def body(carry, x):
+            return carry + 1, jnp.take(arena, carry + x, axis=0)
+        _, ys = jax.lax.scan(body, ptr, jnp.arange(4, dtype=jnp.int32))
+        return arena, ys
+
+    arena = jnp.arange(256.0)
+    sb = sandbox(kernel, arena_argnums=(0,))
+    (_, ys), ok = sb(_params(), arena, jnp.int32(200))
+    assert ((np.asarray(ys) >= 64) & (np.asarray(ys) < 128)).all()
+
+    sbc = sandbox(kernel, arena_argnums=(0,), policy=FencePolicy.CHECK,
+                  count_violations=True)
+    (_, _), ok, counts = sbc(_params(), arena, jnp.int32(200))
+    assert not bool(ok)
+    assert int(counts[0]) == 4   # one violating gather per iteration
+    (_, _), ok2, counts2 = sbc(_params(), arena, jnp.int32(64))
+    assert bool(ok2) and int(np.asarray(counts2).sum()) == 0
+
+
+def test_while_loop_fenced_and_counted():
+    def kernel(arena, ptr):
+        def cond(state):
+            i, acc = state
+            return i < ptr + 4
+
+        def body(state):
+            i, acc = state
+            return i + 1, acc + jnp.take(arena, i, axis=0)
+
+        _, acc = jax.lax.while_loop(cond, body, (ptr, jnp.float32(0)))
+        return arena, acc
+
+    arena = jnp.arange(256.0)
+    sbc = sandbox(kernel, arena_argnums=(0,), policy=FencePolicy.CHECK,
+                  count_violations=True)
+    (_, _), ok, counts = sbc(_params(), arena, jnp.int32(200))
+    assert not bool(ok) and int(counts[0]) == 4
+
+
+def test_cond_branches_fenced():
+    def kernel(arena, ptr, flag):
+        def taken(p):
+            return jnp.take(arena, p, axis=0)
+
+        def skipped(p):
+            return jnp.float32(0.0)
+
+        return arena, jax.lax.cond(flag > 0, taken, skipped, ptr)
+
+    arena = jnp.arange(256.0)
+    sbc = sandbox(kernel, arena_argnums=(0,), policy=FencePolicy.CHECK)
+    _, ok = sbc(_params(), arena, jnp.int32(200), jnp.int32(1))
+    assert not bool(ok)          # executed branch violates
+    _, ok2 = sbc(_params(), arena, jnp.int32(200), jnp.int32(0))
+    assert bool(ok2)             # untaken branch never runs its access
+
+
+def test_reshape_splitting_dim0_keeps_taint():
+    """reshape away the slot dim must NOT launder the arena lineage."""
+    def kernel(arena, ptr):
+        folded = arena.reshape(2, -1)          # splits dim 0
+        return arena, jax.lax.dynamic_slice(folded, (ptr, jnp.int32(0)),
+                                            (1, 8))
+
+    import warnings as _w
+    from repro.core.sandbox import GuardianTaintWarning
+    with pytest.warns(GuardianTaintWarning):
+        rep = sandbox_report(kernel, (jnp.zeros(64), jnp.int32(0)))
+    assert rep.fenced_dynamic_slices == 1      # still fenced (taint kept)
+
+
+def test_transpose_demoting_dim0_keeps_taint():
+    def kernel(arena, ptr):
+        flipped = arena.T                       # (64, 4) -> (4, 64)
+        return arena, jax.lax.dynamic_slice(flipped, (ptr, jnp.int32(0)),
+                                            (1, 8))
+
+    from repro.core.sandbox import GuardianTaintWarning
+    with pytest.warns(GuardianTaintWarning):
+        rep = sandbox_report(kernel, (jnp.zeros((64, 4)), jnp.int32(0)))
+    assert rep.fenced_dynamic_slices == 1
 
 
 def test_nested_call_instrumented():

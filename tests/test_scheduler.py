@@ -543,7 +543,9 @@ def test_check_policy_unbatched_drain_still_raises():
         idx = 9999 + jnp.arange(n, dtype=jnp.int32)
         return arena.at[idx].set(1.0), None
 
-    a.module_load("oob", oob)
+    # verify=False: the constant-OOB scatter would be refuted at trace
+    # time otherwise; this test pins the raising runtime CHECK path
+    a.module_load("oob", oob, verify=False)
     a.launch_kernel("oob", args=(4,))
     with pytest.raises(GuardianViolation):
         mgr.synchronize()

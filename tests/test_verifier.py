@@ -1,0 +1,349 @@
+"""Static bounds verifier tests (core/verifier.py) — abstract-domain
+transfer functions, loop-carry widening, the PROVEN/FENCED/REFUTED
+contract, fence elision end-to-end, and the manager/scheduler wiring.
+
+The hypothesis mirrors assert the verifier's two soundness directions:
+PROVEN sites are never refuted at runtime (elided and fenced builds are
+bit-identical for every launch), and REFUTED sites always trip the
+runtime CHECK counter when forced through with ``verify=False``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.fence import FenceParams, FencePolicy
+from repro.core.sandbox import sandbox, sandbox_report
+from repro.core.verifier import (
+    FENCED,
+    PROVEN,
+    REFUTED,
+    GuardianStaticViolation,
+    verify,
+)
+
+
+def _params(base=64, size=64):
+    return FenceParams(base=base, size=size)
+
+
+ARENA = jnp.arange(256.0)
+
+
+# ---------------------------------------------------------------------------
+# Classification sweep — one kernel per abstract-domain feature
+# ---------------------------------------------------------------------------
+
+def _fence_aware(arena, base, mask, ptr):
+    idx = (ptr + jnp.arange(8, dtype=jnp.int32))
+    return arena, jnp.take(arena, (idx & mask) | base, axis=0)
+
+
+def _clamped(arena, ptr):
+    idx = jnp.clip(ptr, 64, 120) + jnp.arange(4, dtype=jnp.int32)
+    return arena, jnp.take(arena, idx, axis=0)
+
+
+def _rem_carry_scan(arena, ptr):
+    # (ptr & 63) not rem: truncated rem of a negative pointer is negative,
+    # which the verifier correctly refuses to prove
+    def body(carry, _):
+        nxt = 64 + jax.lax.rem(carry + 1, jnp.int32(64))
+        return nxt, jnp.take(arena, carry, axis=0)
+    _, ys = jax.lax.scan(body, 64 + (ptr & 63), None, length=4)
+    return arena, ys
+
+
+def _raw_pointer(arena, ptr):
+    return arena, jnp.take(arena, ptr + jnp.arange(4, dtype=jnp.int32),
+                           axis=0)
+
+
+def _static_oob(arena, x):
+    idx = jnp.arange(4, dtype=jnp.int32) - 10_000_000
+    return arena, jnp.take(arena, idx, axis=0) + x
+
+
+def test_fence_aware_kernel_fully_proven_symbolically():
+    """A kernel applying its own (idx & mask) | base fence proves itself
+    row-exact against the *symbolic* (B, S) pair — any partition."""
+    proof = verify(_fence_aware,
+                   (ARENA, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+                   arena_argnums=(0,), bound_argnums=(1, 2))
+    assert proof.symbolic and proof.fully_proven
+    assert [s.verdict for s in proof.sites] == [PROVEN]
+
+
+def test_clamp_proven_against_static_row():
+    proof = verify(_clamped, (ARENA, jnp.int32(0)),
+                   params=_params())
+    assert [s.verdict for s in proof.sites] == [PROVEN]
+    assert not proof.symbolic      # holds only for this (base, size)
+
+
+def test_scan_carry_widening_converges_and_proves():
+    """rem-bounded loop carry: widening + the rem transfer keep the
+    carried index inside [64, 127] at fixpoint."""
+    proof = verify(_rem_carry_scan, (ARENA, jnp.int32(0)),
+                   params=_params())
+    assert [s.verdict for s in proof.sites] == [PROVEN]
+
+
+def test_raw_pointer_stays_fenced():
+    proof = verify(_raw_pointer, (ARENA, jnp.int32(0)), params=_params())
+    assert [s.verdict for s in proof.sites] == [FENCED]
+
+
+def test_static_oob_refuted_with_site_diagnostic():
+    proof = verify(_static_oob, (ARENA, jnp.float32(0.0)),
+                   params=_params())
+    assert [s.verdict for s in proof.sites] == [REFUTED]
+    assert proof.refuted_sites()[0].kind.name == "GATHER"
+
+
+def test_refuted_kernel_raises_at_trace_time():
+    sb = sandbox(_static_oob, arena_argnums=(0,), verify=True)
+    with pytest.raises(GuardianStaticViolation) as ei:
+        sb(_params(), ARENA, jnp.float32(0.0))
+    assert "provably out-of-bounds" in str(ei.value)
+    assert "gather" in str(ei.value)     # the site-level diagnostic
+
+
+def test_extent_mode_admits_guardspec_partitions():
+    """Extent mode: a static FenceParams found in the operands declares
+    an admissible partition for accesses that exceed no extent."""
+    def step(arena, idx, fp):
+        fenced = (idx & (fp.size - 1)) | fp.base
+        return arena, jnp.take(arena, fenced, axis=0)
+
+    proof = verify(step, (ARENA, jnp.int32(999),
+                          FenceParams(base=128, size=64)), mode="extent")
+    assert proof.fully_proven and proof.mode == "extent"
+
+
+# ---------------------------------------------------------------------------
+# PROVEN ⇒ fence elision is invisible (bit-identical, never refuted)
+# ---------------------------------------------------------------------------
+
+def _run_both(kernel, fp, args, bound=()):
+    """(elided_output, fenced_output) for one kernel + launch."""
+    elided = sandbox(kernel, arena_argnums=(0,), verify=True,
+                     bound_argnums=bound)
+    fenced = sandbox(kernel, arena_argnums=(0,), verify=False,
+                     bound_argnums=bound)
+    (_, out_e), _ = elided(fp, ARENA, *args)
+    (_, out_f), _ = fenced(fp, ARENA, *args)
+    return np.asarray(out_e), np.asarray(out_f)
+
+
+def test_proven_sites_elide_bit_identical_sweep():
+    """Deterministic sweep: every in-partition launch of a proven kernel
+    is bit-identical with fences elided vs kept."""
+    fp = _params()
+    for ptr in range(0, 256, 7):
+        base, mask = jnp.int32(fp.base), jnp.int32(fp.mask)
+        out_e, out_f = _run_both(_fence_aware, fp, (base, mask,
+                                                    jnp.int32(ptr)),
+                                 bound=(1, 2))
+        np.testing.assert_array_equal(out_e, out_f)
+    for ptr in range(-8, 300, 31):
+        out_e, out_f = _run_both(_clamped, fp, (jnp.int32(ptr),))
+        np.testing.assert_array_equal(out_e, out_f)
+        out_e, out_f = _run_both(_rem_carry_scan, fp, (jnp.int32(ptr),))
+        np.testing.assert_array_equal(out_e, out_f)
+
+
+def test_elision_actually_removes_fences():
+    rep = sandbox_report(_clamped, (ARENA, jnp.int32(0)), verify=True,
+                         params=_params())
+    assert rep.elided_total == 1 and rep.fenced_total == 0
+    rep = sandbox_report(_clamped, (ARENA, jnp.int32(0)), verify=False,
+                         params=_params())
+    assert rep.elided_total == 0 and rep.fenced_total == 1
+
+
+def test_refuted_site_trips_check_counter_when_forced_through():
+    """verify=False forces the refuted kernel through: the runtime CHECK
+    fence must catch exactly what the verifier predicted."""
+    sb = sandbox(_static_oob, arena_argnums=(0,),
+                 policy=FencePolicy.CHECK, count_violations=True,
+                 verify=False)
+    (_, _), ok, counts = sb(_params(), ARENA, jnp.float32(0.0))
+    assert not bool(ok)
+    # all 4 lanes of the refuted gather are out of bounds
+    assert int(np.asarray(counts)[0]) == 4
+
+
+@given(ptr=st.integers(min_value=-(2 ** 20), max_value=2 ** 20))
+@settings(max_examples=50, deadline=None)
+def test_hyp_proven_never_refuted_at_runtime(ptr):
+    """Property mirror of the sweep: for ANY launch operand the elided
+    and fenced builds of a PROVEN kernel agree bit-for-bit (a PROVEN
+    site can never be a runtime violation)."""
+    fp = _params()
+    out_e, out_f = _run_both(_clamped, fp, (jnp.int32(ptr),))
+    np.testing.assert_array_equal(out_e, out_f)
+    out_e, out_f = _run_both(_rem_carry_scan, fp, (jnp.int32(ptr),))
+    np.testing.assert_array_equal(out_e, out_f)
+
+
+@given(shift=st.integers(min_value=256, max_value=2 ** 24))
+@settings(max_examples=25, deadline=None)
+def test_hyp_refuted_always_trips_check(shift):
+    """Any always-OOB constant offset: REFUTED statically, and the CHECK
+    counter fires on every forced launch."""
+    def kernel(arena, x):
+        idx = jnp.arange(4, dtype=jnp.int32) + shift
+        return arena, jnp.take(arena, idx, axis=0) + x
+
+    proof = verify(kernel, (ARENA, jnp.float32(0.0)), params=_params())
+    assert [s.verdict for s in proof.sites] == [REFUTED]
+    sb = sandbox(kernel, arena_argnums=(0,), policy=FencePolicy.CHECK,
+                 count_violations=True, verify=False)
+    (_, _), ok, counts = sb(_params(), ARENA, jnp.float32(0.0))
+    assert not bool(ok) and int(np.asarray(counts)[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# Manager + scheduler wiring
+# ---------------------------------------------------------------------------
+
+def _manager(policy, slots=2048):
+    from repro.core.manager import GuardianManager
+    return GuardianManager(total_slots=slots, policy=policy,
+                           standalone_fast_path=False)
+
+
+def _launch(mgr, tenant, name, *args):
+    req = mgr.launch_kernel(tenant, name, args=args)
+    mgr.synchronize()
+    return req.result
+
+
+def test_manager_sandbox_report_api():
+    mgr = _manager(FencePolicy.BITWISE)
+    mgr.register_tenant("t1", 256)
+    mgr.register_tenant("t2", 256)
+    mgr.register_kernel("fa", _fence_aware, fence_aware=True)
+    mgr.register_kernel("raw", _raw_pointer)
+    proof = mgr.sandbox_report("fa", example_args=(jnp.int32(0),))
+    assert proof.symbolic and proof.fully_proven
+    proof = mgr.sandbox_report("raw", example_args=(jnp.int32(0),))
+    assert proof.n_fenced == 1 and not proof.fully_proven
+
+
+def test_manager_fence_aware_kernel_all_policies():
+    """The manager forwards the row scalars into a fence-aware kernel on
+    every policy path; outputs match the raw-kernel result in-partition."""
+    for pol in (FencePolicy.BITWISE, FencePolicy.CHECK,
+                FencePolicy.MODULO):
+        mgr = _manager(pol)
+        c1 = mgr.register_tenant("t1", 256)
+        mgr.register_tenant("t2", 256)
+        mgr.register_kernel("fa", _fence_aware, fence_aware=True)
+        p = mgr.malloc("t1", 16)
+        c1.memcpy_h2d(p, np.arange(16.0))
+        mgr.synchronize()
+        out = _launch(mgr, "t1", "fa", jnp.int32(p.addr))
+        np.testing.assert_array_equal(np.asarray(out)[:8],
+                                      np.arange(8.0))
+
+
+def test_scheduler_routes_proven_check_batches_to_fused_path():
+    """A fully-proven symbolic kernel under CHECK policy rides the plain
+    fused path (proven_steps), skipping the ViolationLog plumbing; an
+    unprovable kernel keeps the CHECK commit path (check_steps)."""
+    mgr = _manager(FencePolicy.CHECK)
+    c1 = mgr.register_tenant("t1", 256)
+    c2 = mgr.register_tenant("t2", 256)
+    mgr.register_kernel("fa", _fence_aware, fence_aware=True)
+    mgr.register_kernel("raw", _raw_pointer)
+    p1, p2 = mgr.malloc("t1", 16), mgr.malloc("t2", 16)
+    c1.memcpy_h2d(p1, np.arange(16.0))
+    c2.memcpy_h2d(p2, np.arange(100.0, 116.0))
+    mgr.synchronize()
+
+    r1 = mgr.launch_kernel("t1", "fa", args=(jnp.int32(p1.addr),))
+    r2 = mgr.launch_kernel("t2", "fa", args=(jnp.int32(p2.addr),))
+    mgr.synchronize()
+    np.testing.assert_array_equal(np.asarray(r1.result)[:4],
+                                  np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(r2.result)[:4],
+                                  np.arange(100.0, 104.0))
+    assert mgr.scheduler.stats.proven_steps == 1
+    assert mgr.scheduler.stats.check_steps == 0
+
+    mgr.launch_kernel("t1", "raw", args=(jnp.int32(p1.addr),))
+    mgr.launch_kernel("t2", "raw", args=(jnp.int32(p2.addr),))
+    mgr.synchronize()
+    assert mgr.scheduler.stats.proven_steps == 1
+    assert mgr.scheduler.stats.check_steps == 1
+    assert "proven_steps" in mgr.scheduler.stats.summary()
+
+
+def test_trusted_verify_demands_full_proof():
+    from repro.core.manager import GuardianManager
+
+    def good_step(arena, x):
+        idx = jnp.arange(8, dtype=jnp.int32) & jnp.int32(63)
+        return arena, jnp.take(arena, idx, axis=0) + x
+
+    def bad_step(arena, ptr):
+        return arena, jnp.take(arena,
+                               ptr + jnp.arange(4, dtype=jnp.int32),
+                               axis=0)
+
+    mgr = GuardianManager(total_slots=1024)
+    mgr.register_trusted_kernel("good", good_step, verify=True)
+    mgr.register_trusted_kernel("bad", bad_step, verify=True)
+    mgr.register_tenant("t1", 256)
+    out = _launch(mgr, "t1", "good", jnp.float32(1.0))
+    assert np.asarray(out).shape == (8,)
+    with pytest.raises(GuardianStaticViolation):
+        mgr.launch_kernel("t1", "bad", args=(jnp.int32(0),))
+        mgr.synchronize()
+
+
+def test_manager_refutes_oob_kernel_at_trace_time():
+    mgr = _manager(FencePolicy.BITWISE)
+    c1 = mgr.register_tenant("t1", 256)
+    mgr.register_tenant("t2", 256)
+    mgr.register_kernel("oob", _static_oob)
+    with pytest.raises(GuardianStaticViolation):
+        mgr.launch_kernel("t1", "oob", args=(jnp.float32(0.0),))
+        mgr.synchronize()
+
+
+def test_trusted_step_bundle_threads_verify():
+    from repro.launch.steps import TrustedStepBundle
+
+    def step(arena, pool, x):
+        return arena, pool, x
+
+    from repro.core.manager import GuardianManager
+    mgr = GuardianManager(total_slots=512)
+    bundle = TrustedStepBundle(
+        pool_name="p", prefill_name="pf", decode_name="dc",
+        prefill_fn=step, decode_fn=step, verify=True)
+    bundle.register(mgr, {"buf": jnp.zeros((4, 4))})
+    assert mgr.pointer_to_symbol["pf"].verify
+    assert mgr.pointer_to_symbol["dc"].verify
+
+
+# ---------------------------------------------------------------------------
+# Lint CLI
+# ---------------------------------------------------------------------------
+
+def test_lint_kernel_audits_fully_proven():
+    """The committed contract: the fenced gather/scatter/paged-attention
+    kernels audit fully proven with their fences elided (ISSUE 6)."""
+    from repro.lint import run_audits
+    summaries, errors = run_audits(only="kernels.")
+    assert not errors
+    for name in ("kernels.gather_rows", "kernels.scatter_pages",
+                 "kernels.paged_attention"):
+        assert summaries[name]["fully_proven"], summaries[name]
+        assert summaries[name]["sites"] >= 1
