@@ -1,0 +1,134 @@
+"""Markdown sparkline report over the cross-push benchmark history.
+
+Input is the cumulative history CSV maintained by
+``benchmarks.aggregate_trend`` in CI
+(``push,name,baseline_us,fresh_us,ratio,normalized_ratio,gate``); the
+output is one markdown table row per benchmark name with a unicode
+sparkline of its ``normalized_ratio`` across pushes (oldest left), so
+sub-gate drift — the slow creep the 2x regression gate deliberately
+tolerates per push — is visible at a glance in ONE artifact.
+
+Each sparkline is scaled to the row's own min..max band (a row that
+never moved renders flat mid-band); a push where the row is missing
+(suite added later, retried run) renders as ``·``.  Pure string
+handling, no jax import — unit-tested in tests/test_bench_gate.py.
+
+    PYTHONPATH=src python -m benchmarks.render_history \
+        --history results/bench.history.csv --out results/bench.history.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.dashboard import SPARK_CHARS
+
+#: placeholder for pushes where a row name has no sample
+GAP = "·"
+
+
+def parse_history(text: str) -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    """-> (push labels oldest-first, name -> {push: normalized_ratio}).
+
+    Malformed lines (short rows, non-numeric ratios) are skipped rather
+    than fatal: the history file is appended by CI across many pushes
+    and one bad line must not take down the whole report.
+    """
+    pushes: List[str] = []
+    series: Dict[str, Dict[str, float]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("push,"):
+            continue
+        parts = line.split(",")
+        if len(parts) < 6:
+            continue
+        push, name = parts[0], parts[1]
+        try:
+            ratio = float(parts[5])
+        except ValueError:
+            continue
+        if push not in pushes:
+            pushes.append(push)
+        series.setdefault(name, {})[push] = ratio
+    return pushes, series
+
+
+def band_sparkline(values: List[Optional[float]]) -> str:
+    """One glyph per push, scaled to the series' own min..max band.
+
+    Unlike the dashboard's 0..max histogram sparkline, ratios live in a
+    narrow band around 1.0 — scaling from zero would render every row
+    as a flat line of full-height bars.  ``None`` (missing push) maps
+    to the gap dot.
+    """
+    present = [v for v in values if v is not None]
+    if not present:
+        return GAP * len(values)
+    lo, hi = min(present), max(present)
+    n = len(SPARK_CHARS)
+    out = []
+    for v in values:
+        if v is None:
+            out.append(GAP)
+        elif hi <= lo:
+            out.append(SPARK_CHARS[n // 2])
+        else:
+            frac = (v - lo) / (hi - lo)
+            out.append(SPARK_CHARS[min(int(frac * (n - 1) + 0.5), n - 1)])
+    return "".join(out)
+
+
+def render_markdown(history: str) -> str:
+    """The full markdown report for one history file's text."""
+    pushes, series = parse_history(history)
+    lines = [
+        "# Benchmark trend (normalized ratio per push)",
+        "",
+        f"{len(pushes)} push(es), oldest left; ratio is fresh/baseline "
+        "after median normalization, so 1.0 = no drift. "
+        f"`{GAP}` = row absent for that push.",
+        "",
+        "| benchmark | trend | min | latest | max |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for name in sorted(series):
+        by_push = series[name]
+        vals = [by_push.get(p) for p in pushes]
+        present = [v for v in vals if v is not None]
+        latest = next((v for v in reversed(vals) if v is not None), None)
+        lines.append(
+            f"| `{name}` | {band_sparkline(vals)} "
+            f"| {min(present):.3f} | {latest:.3f} | {max(present):.3f} |")
+    if not series:
+        lines.append("| _(no rows yet)_ |  |  |  |  |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default="results/bench.history.csv",
+                    help="cumulative history CSV from aggregate_trend")
+    ap.add_argument("--out", default=None,
+                    help="write the markdown report here (default stdout)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.history) as fh:
+            text = fh.read()
+    except FileNotFoundError:
+        text = ""
+    md = render_markdown(text)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(md)
+        print(f"trend report -> {args.out}")
+    else:
+        print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,8 @@ SUITES = {
                 "elastic vs static partition packing over a churn trace"),
     "compress": ("benchmarks.compression",
                  "cross-pod int8 gradient compression (beyond-paper)"),
+    "serve_smoke": ("benchmarks.serve_smoke",
+                    "serve-path smoke timings (the four CI configs)"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
 }
 

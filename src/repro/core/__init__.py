@@ -20,6 +20,10 @@ Layering (bottom-up):
     elastic     — ElasticManager: admission waitlist, live partition
                   grow/shrink, on-device compaction (dynamic spatial
                   sharing; WAITLISTED→ACTIVE→RESIZING→COMPACTING)
+    telemetry   — flight recorder: per-tenant metrics registry (counters/
+                  gauges/histograms) + lifecycle event trace with
+                  Chrome/Perfetto export; fed at drain-cycle boundaries,
+                  never a device sync
     manager     — GuardianManager ("grdManager"): sole device owner,
                   validated calls, round-robin spatial multiplexing
     libsim      — simulated closed-source accelerated libraries (Table 6)
@@ -56,6 +60,13 @@ from repro.core.fence import (
     magic_constants,
     magic_row,
     require_pow2_sizes,
+)
+from repro.core.telemetry import (
+    EventTrace,
+    Histogram,
+    MetricsRegistry,
+    Telemetry,
+    TraceEvent,
 )
 from repro.core.scheduler import (
     BatchedLaunchScheduler,
@@ -104,6 +115,8 @@ __all__ = [
     "fence_modulo_magic", "fence_modulo_magic_dyn",
     "guarded_take", "guarded_update", "magic_constants", "magic_row",
     "require_pow2_sizes",
+    "EventTrace", "Histogram", "MetricsRegistry", "Telemetry",
+    "TraceEvent",
     "BatchedLaunchScheduler", "LaunchRequest", "LRUCache",
     "SchedulerStats", "round_robin_interleave",
     "CallTrace", "DevicePtr", "GuardianClient",

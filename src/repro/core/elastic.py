@@ -69,6 +69,7 @@ from repro.core.partition import (
     next_pow2,
 )
 from repro.core.pressure import PressureSample, PressureTracker
+from repro.core.telemetry import SCHEDULER_TRACK
 
 
 class ElasticError(Exception):
@@ -149,6 +150,9 @@ class Admission:
     client: Optional[Any] = None     # GuardianClient once admitted
     policy: Optional[Any] = None     # per-tenant FencePolicy override
     weight: int = 1
+    #: scheduler drain-cycle stamp at admit() — the waitlist-age clock
+    #: (-1: admitted before the telemetry layer stamped it)
+    enqueue_cycle: int = -1
 
 
 class ElasticManager:
@@ -181,6 +185,12 @@ class ElasticManager:
         #: lifetime counters (benchmark / introspection surface)
         self.stats = {"admitted": 0, "waitlisted": 0, "grows": 0,
                       "shrinks": 0, "relocations": 0, "compactions": 0}
+
+    def _tel(self):
+        """The manager's flight recorder, or None when disabled — every
+        elastic record path goes through host dict writes only."""
+        tel = getattr(self.manager, "telemetry", None)
+        return tel if tel is not None and tel.enabled else None
 
     # ------------------------------------------------------------------ #
     # Introspection + subscriptions                                      #
@@ -249,7 +259,8 @@ class ElasticManager:
         adm = Admission(tenant_id=tenant_id,
                         requested_slots=requested_slots,
                         status=AdmissionStatus.WAITLISTED,
-                        policy=policy, weight=weight)
+                        policy=policy, weight=weight,
+                        enqueue_cycle=self.manager.scheduler._cycle)
         # never clobber a live tenant's extent state: a duplicate admit
         # of an ACTIVE tenant will be REJECTED by registration, and its
         # existing state must survive that
@@ -261,6 +272,11 @@ class ElasticManager:
             self.stats["waitlisted"] += 1
             self.events.append(
                 f"waitlist {tenant_id} ({requested_slots} slots)")
+            tel = self._tel()
+            if tel is not None:
+                tel.registry.inc("waitlisted", tenant=tenant_id)
+                tel.event("waitlist", tenant_id,
+                          slots=requested_slots)
         return adm
 
     def _try_admit(self, adm: Admission, make_room: bool = True) -> bool:
@@ -291,6 +307,14 @@ class ElasticManager:
         self.stats["admitted"] += 1
         self.events.append(
             f"admit {adm.tenant_id} ({adm.requested_slots} slots)")
+        tel = self._tel()
+        if tel is not None:
+            if adm.enqueue_cycle >= 0:
+                age = mgr.scheduler._cycle - adm.enqueue_cycle
+                tel.registry.observe("waitlist_age_cycles", age,
+                                     tenant=adm.tenant_id)
+            tel.event("admit", adm.tenant_id,
+                      slots=adm.requested_slots)
         return True
 
     def _make_room(self, need_slots: int) -> bool:
@@ -330,6 +354,9 @@ class ElasticManager:
                 self.waitlist.remove(adm)
                 self._state.pop(tenant_id, None)
                 self.events.append(f"withdraw {tenant_id}")
+                tel = self._tel()
+                if tel is not None:
+                    tel.event("withdraw", tenant_id)
                 return True
         return False
 
@@ -570,6 +597,10 @@ class ElasticManager:
         if moved:
             self.stats["compactions"] += 1
             self.events.append(f"compact: moved {moved} extent(s)")
+            tel = self._tel()
+            if tel is not None:
+                tel.registry.inc("compactions")
+                tel.event("compaction", SCHEDULER_TRACK, extents=moved)
         return moved
 
     # ------------------------------------------------------------------ #
@@ -584,6 +615,11 @@ class ElasticManager:
         the scheduler (same path as any framework-plane kernel)."""
         if not moves and not zeros:
             return
+        tel = self._tel()
+        if tel is not None and moves:
+            tel.registry.observe(
+                "compaction_slots_moved",
+                sum(n for _, _, n in moves), tenant=tenant_id)
         from repro.launch.steps import build_flat_relocation_step
         fn = build_flat_relocation_step(tuple(moves), tuple(zeros),
                                         src_extent, dst_extent)
@@ -653,6 +689,12 @@ class ElasticManager:
         self.events.append(
             f"{kind} {tenant_id}: [{old.base},{old.base + old.size}) -> "
             f"[{new.base},{new.base + new.size})")
+        tel = self._tel()
+        if tel is not None:
+            tel.registry.inc("resizes", tenant=tenant_id)
+            tel.event("resize", tenant_id, kind=kind,
+                      old_base=old.base, old_size=old.size,
+                      new_base=new.base, new_size=new.size)
         self._notify(ev)
 
     # ------------------------------------------------------------------ #
@@ -684,6 +726,11 @@ class ElasticManager:
             return sub.live_bytes(), part.size
 
         samples = self.pressure.sample(live_of)
+        tel = self._tel()
+        if tel is not None:
+            for s in samples:
+                tel.registry.set_gauge("arena_utilization",
+                                       s.utilization, tenant=s.tenant_id)
         resized: List[str] = []
         if self.policy.auto_resize:
             for s in samples:

@@ -78,7 +78,6 @@ from repro.core.quarantine import (
     QuarantineError,
     QuarantineManager,
     QuarantinePolicy,
-    TenantState,
 )
 from repro.core.sandbox import SandboxError, sandbox
 from repro.core.verifier import (
@@ -93,7 +92,8 @@ from repro.core.scheduler import (
     _arg_signature,
     donation_supported,
 )
-from repro.core.violations import KIND_NAMES, ViolationLog
+from repro.core.telemetry import DRAIN_TRACK, Telemetry
+from repro.core.violations import ViolationLog
 
 
 class GuardianViolation(Exception):
@@ -216,6 +216,7 @@ class GuardianManager:
         adaptive_lookahead_cap: int = 8,
         elastic_policy: Optional[ElasticPolicy] = None,
         readmit_after: Optional[int] = None,
+        telemetry: bool = True,
     ):
         self.policy = policy
         self.mode = mode
@@ -233,6 +234,13 @@ class GuardianManager:
             self, max_fuse=max_fuse, lookahead_cycles=lookahead_cycles,
             adaptive_lookahead=adaptive_lookahead,
             adaptive_lookahead_cap=adaptive_lookahead_cap)
+
+        # Flight recorder (core/telemetry.py): per-tenant metrics registry
+        # + lifecycle event trace, fed from host state at drain-cycle
+        # boundaries — never a device sync.  ``telemetry=False`` turns
+        # every record path into a single-branch no-op (asserted
+        # byte-identical in tests/test_telemetry.py).
+        self.telemetry = Telemetry(self, enabled=telemetry)
 
         # Fault containment: device-side per-tenant violation telemetry
         # (filled by CHECK launches, in-kernel, no host sync) + the host-side
@@ -350,6 +358,11 @@ class GuardianManager:
         self._tenant_weight[tenant_id] = weight
         client = GuardianClient(self, tenant_id)
         self._clients[tenant_id] = client
+        if self.telemetry.enabled:
+            self.telemetry.registry.inc("tenants_registered")
+            self.telemetry.event("register", tenant_id,
+                                 slots=part.size, weight=weight,
+                                 policy=self.policy_of(tenant_id).value)
         return client
 
     def remove_tenant(self, tenant_id: str) -> None:
@@ -366,6 +379,9 @@ class GuardianManager:
                 f"remove_tenant: tenant {tenant_id!r} is {state.name}; "
                 "evict or readmit it instead (teardown must not launder "
                 "the quarantine)")
+        if self.telemetry.enabled:
+            self.telemetry.registry.inc("tenants_removed")
+            self.telemetry.event("remove", tenant_id)
         self._reclaim_partition(tenant_id)
         self.quarantine.forget(tenant_id)
         # a departure frees slots: re-drive admission from the waitlist
@@ -392,6 +408,7 @@ class GuardianManager:
         self._ptr_remap.pop(tenant_id, None)
         self._ptr_epoch.pop(tenant_id, None)
         self.elastic.forget(tenant_id)
+        self.telemetry.forget_tenant(tenant_id)
 
     def _purge_symbol_caches(self, part: Partition) -> None:
         """Evict per-tenant compiled state from the jit/symbol caches.
@@ -1151,8 +1168,19 @@ class GuardianManager:
         TIME_SHARE: drain each tenant fully then block (context switch).
         """
         if self.mode is SharingMode.SPATIAL:
+            tel = self.telemetry
+            # hoisted bindings: this loop runs once per drain cycle and
+            # the attribute chains below would re-resolve every cycle.
+            # The GLOBAL drain-time histogram handle stays valid across
+            # the drain (forget_tenant only drops tenant series).
+            recording = tel.enabled
+            if recording:
+                reg, trace = tel.registry, tel.trace
+                drain_hist = reg.hist("drain_cycle_us", timing=True)
+                n_cycles = 0
             pending = True
             while pending:
+                t0 = time.perf_counter_ns() if recording else 0
                 pending = False
                 for t, q in self._queues.items():
                     for _ in range(min(self.weight_of(t), len(q))):
@@ -1168,6 +1196,19 @@ class GuardianManager:
                 # waitlist admission (one flag read when nothing changed —
                 # host arithmetic only, never a device sync)
                 self.elastic.maybe_poll()
+                if recording:
+                    # dispatch wall time, not completion: nothing here
+                    # blocks on the device (async dispatch stays async)
+                    dur_us = (time.perf_counter_ns() - t0) / 1000.0
+                    n_cycles += 1
+                    drain_hist.observe(dur_us)
+                    trace.emit(
+                        "drain_cycle", DRAIN_TRACK,
+                        self.scheduler._cycle,
+                        dur_us=dur_us,
+                        ts_us=trace.now_us() - dur_us)
+            if recording and n_cycles:
+                reg.inc("drain_cycles", n_cycles)
         else:
             for q in self._queues.values():
                 while q:
@@ -1197,32 +1238,10 @@ class GuardianManager:
         the lifecycle state of every tenant the quarantine machine knows
         (evicted tenants report the counts snapshotted at eviction), the
         host-side transfer-violation strings, and the quarantine event
-        trail.
+        trail.  A thin view over the flight recorder
+        (:meth:`Telemetry.violation_view`) — same shape as ever.
         """
-        snap = self.violog.snapshot()
-        tenants: Dict[str, Dict[str, Any]] = {}
-        for t in self.violog.tenants():
-            counts = self.violog.counts(t, snap=snap)
-            state = self.quarantine.state_of(t)
-            tenants[t] = {
-                **counts,
-                "total": sum(counts.values()),
-                "state": state.value if state else TenantState.ACTIVE.value,
-            }
-        for rec in self.quarantine.machine.records():
-            if rec.tenant_id in tenants:
-                continue
-            counts = {k: rec.final_counts.get(k, 0) for k in KIND_NAMES}
-            tenants[rec.tenant_id] = {
-                **counts,
-                "total": sum(counts.values()),
-                "state": rec.state.value,
-            }
-        return {
-            "tenants": tenants,
-            "transfer_violations": list(self.violations),
-            "events": list(self.quarantine.events),
-        }
+        return self.telemetry.violation_view()
 
     def jit_cache_stats(self) -> Dict[str, Any]:
         """Occupancy + eviction counters of every LRU-bounded compiled
@@ -1230,20 +1249,18 @@ class GuardianManager:
         scheduler's fused-step binaries (``fused_entries``).  ``evictions``
         count cold binaries dropped at capacity — each costs one recompile
         on next use, never correctness (ROADMAP: symbol-cache growth under
-        many-kernel churn)."""
-        per_kernel = {name: len(e.jit_cache)
-                      for name, e in self.pointer_to_symbol.items()}
-        return {
-            "capacity": self.jit_cache_capacity,
-            "entries": sum(per_kernel.values()),
-            "per_kernel": per_kernel,
-            "evictions": sum(e.jit_cache.evictions
-                             for e in self.pointer_to_symbol.values()
-                             if isinstance(e.jit_cache, LRUCache)),
-            "fused_capacity": self.scheduler._fused_cache.capacity,
-            "fused_entries": len(self.scheduler._fused_cache),
-            "fused_evictions": self.scheduler._fused_cache.evictions,
-        }
+        many-kernel churn).  A thin view over the flight recorder
+        (:meth:`Telemetry.jit_cache_view`) — same shape as ever."""
+        return self.telemetry.jit_cache_view()
+
+    def metrics_report(self) -> Dict[str, Any]:
+        """The unified flight-recorder report: per-tenant rows (state,
+        policy, weight, extent, utilization, queue-age p50/p90/p99,
+        violation counts), scheduler/launch/drain summaries, jit-cache
+        and elastic stats, registry counters/gauges, trace occupancy.
+        Subsumes the five legacy surfaces (which remain as views).
+        Synchronizing — an operator surface, never a hot-path call."""
+        return self.telemetry.report()
 
     def memory_usage(self) -> Dict[str, Any]:
         """§2.2 memory-footprint claim: one context/arena overall vs one per

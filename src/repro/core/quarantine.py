@@ -306,6 +306,7 @@ class QuarantineManager:
         if elastic is not None:
             elastic.apply_probation(tenant_id)
         self.events.append(f"probe-readmit {tenant_id} (probation)")
+        self._emit(tenant_id, "probe_readmit")
 
     def poll(self) -> List[str]:
         """Read the log once and apply the policy.  Returns the tenant ids
@@ -314,12 +315,20 @@ class QuarantineManager:
         log: ViolationLog = self.manager.violog
         log.dirty = False          # only the poller consumes the flag
         snap = log.snapshot()
+        tel = getattr(self.manager, "telemetry", None)
         transitioned: List[str] = []
         for tenant_id in log.tenants():
             rec = self.machine.record_of(tenant_id)
             if rec is None:
                 continue
             counts = log.counts(tenant_id, snap=snap)
+            if tel is not None and tel.enabled:
+                # piggyback on the poll's (already dirty-gated) sync: the
+                # registry's violation gauges update only here, never on
+                # the launch path
+                for kind, n in counts.items():
+                    tel.registry.set_gauge(f"violations_{kind}", n,
+                                           tenant=tenant_id)
             if (rec.probation and rec.state.admissible
                     and sum(counts.values()) > 0):
                 # probation (probe-readmitted) tenants get no second
@@ -371,6 +380,7 @@ class QuarantineManager:
         rec.clean_cycles = 0            # the probe clock starts now
         self.manager._drop_tenant_ops(tenant_id)
         self.events.append(f"quarantine {tenant_id}: {reason}")
+        self._emit(tenant_id, "quarantine", reason=reason)
         self._notify(tenant_id, TenantState.QUARANTINED)
 
     def evict(self, tenant_id: str, reason: str = "") -> None:
@@ -383,6 +393,7 @@ class QuarantineManager:
         self._notify(tenant_id, TenantState.EVICTED)   # bounds still live
         self.manager._evict_tenant(tenant_id)
         self.events.append(f"evict {tenant_id}")
+        self._emit(tenant_id, "evict", reason=reason)
         # an eviction frees slots: the elastic waitlist re-drives admission
         elastic = getattr(self.manager, "elastic", None)
         if elastic is not None:
@@ -398,4 +409,16 @@ class QuarantineManager:
         rec.clean_cycles = 0
         self.manager.violog.reset(tenant_id)
         self.events.append(f"readmit {tenant_id}")
+        self._emit(tenant_id, "readmit")
         self._notify(tenant_id, TenantState.READMITTED)
+
+    def _emit(self, tenant_id: str, name: str, **args) -> None:
+        """Mirror a lifecycle transition into the flight recorder: a
+        counter plus a trace event on the tenant's track (host dict
+        writes — the poll already synchronized where needed)."""
+        tel = getattr(self.manager, "telemetry", None)
+        if tel is None or not tel.enabled:
+            return
+        tel.registry.inc(f"{name}s", tenant=tenant_id)
+        tel.event(name, tenant_id,
+                  **{k: v for k, v in args.items() if v})

@@ -91,6 +91,8 @@ import numpy as np
 
 from repro.core.fence import FencePolicy, FenceTable
 from repro.core.pressure import Ewma, derive_lookahead
+from repro.core.telemetry import Histogram, QUEUE_AGE_BOUNDS, \
+    SCHEDULER_TRACK
 
 
 def donation_supported() -> bool:
@@ -252,6 +254,13 @@ class SchedulerStats:
     #: tests; bounded like batch_widths)
     queue_ages: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
+    #: fixed-bucket queue-age histogram over the scheduler's LIFETIME
+    #: (the deque above keeps only recent samples) — the p50/p90/p99
+    #: source for metrics_report and the throughput benchmark.  A few
+    #: ints per dispatch: always on, independent of the manager's
+    #: telemetry switch.
+    queue_age_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(QUEUE_AGE_BOUNDS))
 
     @property
     def total_launches(self) -> int:
@@ -304,6 +313,14 @@ class SchedulerStats:
             "mean_queue_age": self.mean_queue_age,
             "lookahead_budget": float(self.lookahead_budget),
         }
+
+    def queue_age_percentiles(
+            self, qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+        """p50/p90/p99 queue age in drain cycles, from the lifetime
+        histogram (the ROADMAP's "per-class p50/p99 queue age" — the
+        deque-backed mean alone cannot answer tail-latency questions).
+        Zeros when nothing has dispatched."""
+        return self.queue_age_hist.percentiles(qs)
 
 
 class BatchedLaunchScheduler:
@@ -363,6 +380,29 @@ class BatchedLaunchScheduler:
         # (fairness tests / debugging; bounded — see SchedulerStats)
         self.dispatch_log: Deque[Tuple[str, ...]] = collections.deque(
             maxlen=4096)
+        # cached flight-recorder histogram handles (tenant -> queue-age
+        # hist, plus the global fused-width hist) — the per-launch record
+        # paths observe through these instead of paying the registry
+        # lookup per sample; re-resolved when registry.epoch moves
+        # (forget_tenant)
+        self._tel_hists: Dict[str, Histogram] = {}
+        self._tel_width_hist: Optional[Histogram] = None
+        self._tel_epoch = -1
+
+    def _tel_registry(self):
+        """The enabled flight recorder's registry (or None), with the
+        cached histogram handles invalidated on epoch change."""
+        tel = getattr(self.manager, "telemetry", None)
+        if tel is None or not tel.enabled:
+            return None
+        reg = tel.registry
+        if not reg.enabled:        # registry toggled off independently
+            return None
+        if reg.epoch != self._tel_epoch:
+            self._tel_hists.clear()
+            self._tel_width_hist = None
+            self._tel_epoch = reg.epoch
+        return reg
 
     # ------------------------------------------------------------------ #
     def submit(self, req: LaunchRequest) -> None:
@@ -457,6 +497,12 @@ class BatchedLaunchScheduler:
             if not drain and self._should_hold(batch):
                 held.extend(batch)
                 blocked.update(r.tenant_id for r in batch)
+                tel = getattr(self.manager, "telemetry", None)
+                if tel is not None and tel.enabled:
+                    tel.registry.inc("lookahead_holds")
+                    tel.event("lookahead_hold", SCHEDULER_TRACK,
+                              width=len(batch),
+                              tenants=",".join(r.tenant_id for r in batch))
             else:
                 self._execute(batch)
         self._pending = held
@@ -525,14 +571,35 @@ class BatchedLaunchScheduler:
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:
         self.dispatch_log.append(tuple(r.tenant_id for r in batch))
+        tel = getattr(self.manager, "telemetry", None)
+        if tel is not None and not tel.enabled:
+            tel = None
+        # cached per-tenant histogram handles: this loop is per-launch
+        # on the fused drain (telemetry.overhead bench row)
+        reg = self._tel_registry() if tel is not None else None
+        hists = self._tel_hists if reg is not None else None
+        flushed_held = False
         for r in batch:
             if r.submit_cycle >= 0:
                 age = self._cycle - r.submit_cycle
                 self.stats.queue_age_sum += age
                 self.stats.age_samples += 1
                 self.stats.queue_ages.append(age)
+                self.stats.queue_age_hist.observe(age)
+                if hists is not None:
+                    h = hists.get(r.tenant_id)
+                    if h is None:
+                        h = hists[r.tenant_id] = reg.hist(
+                            "queue_age_cycles", r.tenant_id)
+                    h.observe(age)
                 if age > 0 and len(batch) > 1:
                     self.stats.lookahead_fused += 1
+                    flushed_held = True
+        if flushed_held and tel is not None and tel.enabled:
+            # a held batch finally dispatching — the lookahead payoff
+            tel.event("lookahead_flush", SCHEDULER_TRACK,
+                      width=len(batch),
+                      tenants=",".join(r.tenant_id for r in batch))
         if getattr(batch[0].entry, "trusted", False):
             # internally-fenced engine step: jitted width-N fusion when the
             # manager compiles the trusted path, else the eager width-1
@@ -552,6 +619,10 @@ class BatchedLaunchScheduler:
                 head.entry, head.call_args, arg_sig=head.signature[2])
             if proof is not None:
                 self.stats.proven_steps += 1
+                if tel is not None and tel.enabled:
+                    tel.registry.inc("proven_steps")
+                    tel.event("proven_step", SCHEDULER_TRACK,
+                              kernel=head.name, width=len(batch))
                 for r in batch:
                     r.repolicy(FencePolicy.BITWISE)
             else:
@@ -607,6 +678,12 @@ class BatchedLaunchScheduler:
         return table
 
     def _record_step(self, T: int) -> None:
+        reg = self._tel_registry()
+        if reg is not None:
+            h = self._tel_width_hist
+            if h is None:
+                h = self._tel_width_hist = reg.hist("fused_step_width")
+            h.observe(T)
         if T == 1:
             self.stats.single_steps += 1
             return

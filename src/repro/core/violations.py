@@ -81,17 +81,35 @@ class ViolationLog:
     # Row lifecycle                                                      #
     # ------------------------------------------------------------------ #
     def assign(self, tenant_id: str) -> int:
-        """Give ``tenant_id`` a log row (idempotent)."""
+        """Give ``tenant_id`` a log row (idempotent), growing the table
+        when full — the ``(T, K)`` buffer is elastic like the fence
+        tables, so ``capacity`` is a starting size, not a tenant cap."""
         row = self._row_of.get(tenant_id)
         if row is not None:
             return row
         if not self._free_rows:
-            raise RuntimeError(
-                f"ViolationLog full ({self.capacity} rows): raise "
-                "max_tenants or remove dead tenants first")
+            self._grow(self.capacity * 2)
         row = self._free_rows.pop()
         self._row_of[tenant_id] = row
         return row
+
+    def _grow(self, new_capacity: int) -> None:
+        """Double the device table.  Existing rows keep their indices
+        (staged row-id vectors and in-flight attributions stay valid);
+        the new rows join the free list *below* the old pop position, so
+        assignment order continues ascending through the fresh block.
+        Cached fused CHECK binaries retrace automatically on the new
+        ``(T', K)`` operand shape — a one-time compile, never staleness.
+        """
+        if new_capacity <= self.capacity:
+            return
+        pad = jnp.zeros((new_capacity - self.capacity, NUM_KINDS),
+                        jnp.int32)
+        self.buf = jnp.concatenate([self.buf, pad], axis=0)
+        self._free_rows = (
+            list(range(new_capacity - 1, self.capacity - 1, -1))
+            + self._free_rows)
+        self.capacity = new_capacity
 
     def release(self, tenant_id: str) -> None:
         """Recycle a tenant's row, zeroing it for the next occupant."""

@@ -147,7 +147,8 @@ class ServeEngine:
                  quarantine_policy: Optional[QuarantinePolicy] = None,
                  manager: Optional[GuardianManager] = None,
                  name: Optional[str] = None,
-                 jit_steps: bool = True):
+                 jit_steps: bool = True,
+                 telemetry: bool = True):
         self.cfg = cfg
         self.api = get_model(cfg)
         self.guard_enabled = guard
@@ -164,7 +165,8 @@ class ServeEngine:
                 total_slots=n_slots, policy=policy,
                 standalone_fast_path=False,
                 quarantine_policy=quarantine_policy,
-                jit_trusted=jit_steps)
+                jit_trusted=jit_steps,
+                telemetry=telemetry)
             scratch_slots = n_slots // 2
             self.engine_tenant = ENGINE_TENANT
         else:
@@ -172,12 +174,13 @@ class ServeEngine:
             # concerns: refuse per-engine overrides instead of silently
             # ignoring them (configure them on the shared manager)
             if (policy is not FencePolicy.BITWISE
-                    or quarantine_policy is not None or not jit_steps):
+                    or quarantine_policy is not None or not jit_steps
+                    or not telemetry):
                 raise ValueError(
-                    "policy/quarantine_policy/jit_steps are owned by the "
-                    "shared GuardianManager; configure them on the "
-                    "manager (see make_shared_manager) instead of on a "
-                    "co-hosted ServeEngine")
+                    "policy/quarantine_policy/jit_steps/telemetry are "
+                    "owned by the shared GuardianManager; configure them "
+                    "on the manager (see make_shared_manager) instead of "
+                    "on a co-hosted ServeEngine")
             self.manager = manager
             n_slots = manager.bounds.total_slots
             scratch_slots = _pow2(max_batch)
@@ -383,6 +386,9 @@ class ServeEngine:
         self._requests.append(Request(tenant=tenant, rid=rid,
                                       prompt=np.asarray(prompt),
                                       slot=free[0]))
+        tel = self.manager.telemetry
+        if tel.enabled:
+            tel.registry.inc("requests", tenant=tenant)
         # occupancy report: the pressure tracker sees serve tenants too
         # (non-shrinkable — the engine owns slot placement)
         self.manager.elastic.pressure.observe(
@@ -635,7 +641,7 @@ def _scrub_slots(cache, base: int, size: int):
     return dataclasses.replace(cache, k=zero(cache.k), v=zero(cache.v))
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
     ap.add_argument("--reduced", action="store_true")
@@ -653,7 +659,18 @@ def main():
                     help="comma-separated per-tenant fence policies cycled "
                          "across tenants (e.g. 'modulo,check'); empty = "
                          "engine default (bitwise) for all")
-    args = ap.parse_args()
+    ap.add_argument("--bench-out", default=None,
+                    help="append a `name,us_per_call,derived` bench CSV "
+                         "row (per-token wall time) to this file — CI's "
+                         "serve-smoke runs accumulate rows here and gate "
+                         "them via benchmarks.check_regression")
+    ap.add_argument("--bench-name", default="serve.smoke",
+                    help="row name used with --bench-out")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the manager's flight-recorder event trace "
+                         "as Chrome/Perfetto trace_event JSON to this "
+                         "path (load in ui.perfetto.dev)")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -700,6 +717,24 @@ def main():
           f"{dt:.2f}s total, {sum(e.decode_steps for e in engines)} "
           f"decode steps, {int(st.total_launches)} scheduler launches, "
           f"mean step width {st.mean_batch_width:.1f}")
+    if args.trace_out:
+        trace = engines[0].manager.telemetry.trace
+        with open(args.trace_out, "w") as fh:
+            fh.write(trace.to_json())
+        print(f"trace: {args.trace_out} ({len(trace)} events)")
+    if args.bench_out:
+        # per-token wall time: the one number the serve smokes gate on.
+        # Includes trace/compile (cold start) — CI compares against a
+        # baseline recorded the same way, normalized by the median ratio.
+        n_tokens = max(n_out * args.tokens, 1)
+        us = dt / n_tokens * 1e6
+        row = (f"{args.bench_name},{us:.2f},"
+               f"requests={n_out};tokens={n_tokens};"
+               f"launches={int(st.total_launches)};"
+               f"mean_width={st.mean_batch_width:.1f}")
+        with open(args.bench_out, "a") as fh:
+            fh.write(row + "\n")
+        print(f"bench row -> {args.bench_out}: {row}")
     return outs[0]
 
 

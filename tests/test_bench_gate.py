@@ -216,3 +216,57 @@ def test_history_fold_idempotent_per_label_and_bounded():
     assert order == ["sha2", "sha3", "sha4"]
     with pytest.raises(ValueError):
         fold("", TREND_A, "x", keep=0)
+
+
+# ---------------------------------------------------------------------------
+# Sparkline trend report (benchmarks/render_history.py)
+# ---------------------------------------------------------------------------
+
+HISTORY = """push,name,baseline_us,fresh_us,ratio,normalized_ratio,gate
+sha1,sched.batched.2t,100.00,100.00,1.0000,1.0000,
+sha1,mem.4_clients,0.30,0.30,1.0000,1.0000,abs
+sha2,sched.batched.2t,100.00,150.00,1.5000,1.4000,
+sha3,sched.batched.2t,100.00,120.00,1.2000,1.2000,
+sha3,mem.4_clients,0.30,0.30,1.0000,1.0000,abs
+garbage line without commas
+sha3,bad.ratio,1.0,1.0,1.0,not_a_number,
+"""
+
+
+def test_render_history_parse_and_gaps():
+    from benchmarks.render_history import parse_history as ph
+
+    pushes, series = ph(HISTORY)
+    assert pushes == ["sha1", "sha2", "sha3"]
+    assert set(series) == {"sched.batched.2t", "mem.4_clients"}
+    # mem row missing for sha2 -> gap in its series
+    assert "sha2" not in series["mem.4_clients"]
+    assert series["sched.batched.2t"]["sha2"] == pytest.approx(1.4)
+
+
+def test_render_history_band_sparkline():
+    from benchmarks.render_history import GAP, band_sparkline
+    from repro.launch.dashboard import SPARK_CHARS
+
+    s = band_sparkline([1.0, 1.4, None, 1.2])
+    assert len(s) == 4 and s[2] == GAP
+    assert s[0] == SPARK_CHARS[0]          # band min -> lowest glyph
+    assert s[1] == SPARK_CHARS[-1]         # band max -> highest glyph
+    # a flat series renders mid-band, not bottomed out
+    flat = band_sparkline([1.0, 1.0, 1.0])
+    assert flat == SPARK_CHARS[len(SPARK_CHARS) // 2] * 3
+    assert band_sparkline([None, None]) == GAP * 2
+    assert band_sparkline([]) == ""
+
+
+def test_render_history_markdown_report():
+    from benchmarks.render_history import render_markdown
+
+    md = render_markdown(HISTORY)
+    assert "| benchmark | trend |" in md
+    assert "`sched.batched.2t`" in md and "`mem.4_clients`" in md
+    row = next(ln for ln in md.splitlines() if "sched.batched.2t" in ln)
+    # min 1.0, latest 1.2, max 1.4 from the normalized column
+    assert "| 1.000 | 1.200 | 1.400 |" in row
+    # empty history still renders a valid document
+    assert "_(no rows yet)_" in render_markdown("")

@@ -154,13 +154,45 @@ def test_row_recycling_and_reset():
     assert (snap == 0).all()
 
 
-def test_capacity_exhaustion_fails_closed():
+def test_assign_past_capacity_grows_table():
+    """The (T, K) device table is elastic: assigning past capacity
+    doubles it instead of raising; existing rows keep their indices and
+    their counts (regression test for the grow path)."""
     log = ViolationLog(capacity=1)
-    log.assign("a")
-    with pytest.raises(RuntimeError):
-        log.assign("b")
+    r0 = log.assign("a")
+    log.add("a", np.array([1, 2, 3, 4], np.int32))
+    r1 = log.assign("b")                    # grows, never raises
+    assert log.capacity == 2
+    assert r1 != r0
+    assert log.row_of("a") == r0            # index stable across the grow
+    assert log.total("a") == 10             # counts survive the grow
+    assert log.total("b") == 0
+    assert log.buf.shape == (2, 4)
     log.release("a")
-    log.assign("b")                         # freed row is reusable
+    assert log.assign("c") == r0            # freed row still recycles
+
+
+def test_register_past_log_capacity_grows_and_attributes():
+    """Registering more co-resident tenants than max_tenants grows the
+    log rather than refusing the tenant — and CHECK attribution keeps
+    landing on the right (pre- and post-growth) rows."""
+    mgr = GuardianManager(total_slots=512, max_tenants=2,
+                          policy=FencePolicy.CHECK,
+                          quarantine_policy=ThresholdPolicy(
+                              quarantine_after=1 << 30))
+    clients = {t: mgr.register_tenant(t, 64) for t in ("a", "b", "c")}
+    assert mgr.violog.capacity == 4
+    assert sorted(mgr.violog.row_of(t) for t in clients) == [0, 1, 2]
+    for c in clients.values():
+        c.module_load("mixed", make_mixed_kernel())
+    pa, pc = mgr.bounds.lookup("a"), mgr.bounds.lookup("c")
+    # "a" (pre-growth row) and "c" (post-growth row) both go OOB
+    _launch_mixed(mgr, clients["a"], np.full(3, pa.end + 1), pa.base)
+    _launch_mixed(mgr, clients["c"], np.full(5, pc.end + 9), pc.base)
+    snap = mgr.violog.snapshot()
+    assert mgr.violog.counts("a", snap=snap)["gather"] == 3
+    assert mgr.violog.counts("c", snap=snap)["gather"] == 5
+    assert mgr.violog.total("b", snap=snap) == 0
 
 
 def test_duplicate_registration_cannot_reset_counters():
@@ -179,20 +211,24 @@ def test_duplicate_registration_cannot_reset_counters():
     assert mgr.quarantine.state_of("a") is not None
 
 
-def test_register_beyond_log_capacity_leaks_nothing():
-    """A capacity failure during register_tenant must not leak a partition
-    or poison the tenant id (the log row is taken before bounds.create)."""
+def test_register_failure_leaks_nothing():
+    """A partition failure during register_tenant must not leak the log
+    row or poison the tenant id (the row is taken before bounds.create,
+    so the rollback must release exactly what this call created)."""
+    from repro.core import OutOfArenaMemory
+
     mgr = GuardianManager(total_slots=512, max_tenants=2)
     mgr.register_tenant("a", 64)
     mgr.register_tenant("b", 64)
     free = mgr.bounds.free_slots()
-    with pytest.raises(RuntimeError):
-        mgr.register_tenant("c", 64)
+    rows = len(mgr.violog.tenants())
+    with pytest.raises(OutOfArenaMemory):
+        mgr.register_tenant("c", 1024)       # bigger than the arena
     assert mgr.bounds.free_slots() == free   # no partition leaked
+    assert len(mgr.violog.tenants()) == rows  # no log row leaked
     assert mgr.quarantine.state_of("c") is None   # no phantom record
     assert "c" not in mgr.violation_report()["tenants"]
-    mgr.remove_tenant("a")
-    c = mgr.register_tenant("c", 64)         # id usable once capacity frees
+    c = mgr.register_tenant("c", 64)         # id stays usable
     assert c is mgr._clients["c"]
 
 
