@@ -41,6 +41,8 @@ SUITES = {
               "fault containment: detection latency + co-tenant throughput"),
     "elastic": ("benchmarks.elastic_sharing",
                 "elastic vs static partition packing over a churn trace"),
+    "slo": ("benchmarks.slo_isolation",
+            "SLO isolation: tenant classes vs adversarial best-effort"),
     "compress": ("benchmarks.compression",
                  "cross-pod int8 gradient compression (beyond-paper)"),
     "serve_smoke": ("benchmarks.serve_smoke",
@@ -51,8 +53,9 @@ SUITES = {
 #: the suites a --quick run times (must emit rows whose names intersect
 #: the committed baseline so check_regression has something to compare).
 #: mem rows gate=abs (deterministic byte counts), elastic rows gate=skip
-#: (the packing ratio is asserted inside the suite itself)
-QUICK_SUITES = ["sched", "fault", "mem", "elastic"]
+#: (the packing ratio is asserted inside the suite itself), slo gates
+#: its deterministic 1+p99 row (gate=abs) and asserts its bars in-suite
+QUICK_SUITES = ["sched", "fault", "mem", "elastic", "slo"]
 
 
 def main() -> None:

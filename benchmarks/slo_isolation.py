@@ -1,0 +1,200 @@
+"""SLO isolation under an adversarial best-effort tenant — the tenant-
+class benchmark (Tally's priority-scheduling claim, arXiv 2410.07381,
+measured against this repo's own class-less scheduler).
+
+One deterministic workload, replayed in four configurations over the
+same arena (lookahead_cycles=4, max_fuse=8):
+
+* **solo.classed** — the latency-critical tenant alone (its SLO
+  reference run: p99 queue age, final arena bytes).
+* **adversary.classless** — LC + a flooding best-effort tenant, nobody
+  classed: the PR-7 behavior, where the shared lookahead knob holds the
+  LC tenant's under-filled batches up to 4 cycles (p99 = 4).
+* **adversary.classed** — same traffic, LC registered as
+  ``latency_critical`` (budget 2, class lookahead 0), the flooder as
+  ``best_effort``: the class-resolved hold budget dispatches every LC op
+  in its submission cycle (p99 = 0) while BE traffic still fuses under
+  the global lookahead.
+* **preempt** — LC classed with a *nonzero* class lookahead equal to
+  its budget: its EWMA queue age seeds at the budget, arming
+  best-effort preemption — queued BE batches defer at drain-cycle
+  boundaries until the signal decays (``be_preemptions`` > 0).
+
+Queue ages here are deterministic host-side scheduler decisions, not
+wall-clock — the gated row ``slo.lc_p99.adversary`` encodes
+``1 + p99`` (a zero-able metric made gateable: check_regression refuses
+zero baselines and ``gate=abs`` divides raw values), so any future
+change that lets an adversarial BE tenant push classed LC p99 above 0
+moves the row to >= 2.00 and fails the 25% gate.  Timing rows are
+informational (``gate=skip``).  The acceptance bar — classed LC p99
+under the adversary <= 2x its solo p99 — is asserted in-suite, as is
+bit-exact LC arena content across solo/adversary runs (the raw-launch
+analogue of byte-identical generations).
+
+    PYTHONPATH=src python -m benchmarks.slo_isolation
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.slo_isolation
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GuardianManager, TenantClassPolicy
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+LOOKAHEAD = 4
+MAX_FUSE = 8
+LC_SLOTS = 16
+BE_SLOTS = 32
+#: ops per tenant per run — enough lookahead hold/flush periods for the
+#: age histogram to show its steady-state shape
+N_OPS = 8 if QUICK else 32
+LC_BUDGET = 2
+
+
+def _bump_kernel(arena, ptr, n):
+    return arena.at[ptr + jnp.arange(n)].add(1.0), jnp.float32(0)
+
+
+def _bump_kernel_be(arena, ptr, n):
+    # a distinct kernel: BE traffic must be fusion-incompatible with the
+    # LC tenant's ops, so the LC batch stays under-filled (the regime
+    # where the lookahead hold — and therefore the SLO breach — lives)
+    return arena.at[ptr + jnp.arange(n)].add(1.0), jnp.float32(1)
+
+
+def _run(lc_class: Optional[TenantClassPolicy],
+         be_class: Optional[TenantClassPolicy],
+         with_adversary: bool) -> Dict[str, object]:
+    mgr = GuardianManager(total_slots=256, lookahead_cycles=LOOKAHEAD,
+                          max_fuse=MAX_FUSE, telemetry=False)
+    mgr.register_kernel("bump", _bump_kernel, arena_argnums=(0,))
+    mgr.register_kernel("bump_be", _bump_kernel_be, arena_argnums=(0,))
+    lc = mgr.register_tenant("lc", LC_SLOTS, tenant_class=lc_class)
+    lc_ptr = lc.malloc(LC_SLOTS)
+    if with_adversary:
+        # weight 2: the flooder drains two ops per cycle — the classless
+        # run gives it *more* lookahead-held fusion than the LC tenant
+        be = mgr.register_tenant("be", BE_SLOTS, weight=2,
+                                 tenant_class=be_class)
+        be_ptr = be.malloc(BE_SLOTS)
+        for _ in range(2 * N_OPS):
+            be.launch_kernel("bump_be",
+                             args=(jnp.int32(be_ptr.addr), BE_SLOTS))
+    for _ in range(N_OPS):
+        lc.launch_kernel("bump",
+                         args=(jnp.int32(lc_ptr.addr), LC_SLOTS))
+    t0 = time.perf_counter()
+    mgr.run_queued()
+    dt = time.perf_counter() - t0
+    lc.synchronize()
+    stats = mgr.scheduler.stats
+    by_class = stats.queue_age_percentiles_by_class()
+    lc_arena = np.asarray(
+        mgr.arena.buf[lc_ptr.addr:lc_ptr.addr + LC_SLOTS])
+    out = {
+        "seconds": dt,
+        "launches": int(stats.total_launches),
+        "queue_age": stats.queue_age_percentiles(),
+        "by_class": by_class,
+        "be_preemptions": int(stats.be_preemptions),
+        "lc_arena": lc_arena,
+    }
+    return out
+
+
+def _lc_p99(res: Dict[str, object]) -> float:
+    """LC p99 queue age: from the per-class histogram when the run was
+    classed, else from the all-tenant histogram (the classless runs have
+    exactly one interesting tenant-age population per tenant, and the
+    adversary's ages are *lower* than LC's there — lookahead // weight —
+    so the global p99 is the LC p99)."""
+    by_class = res["by_class"]
+    if "latency_critical" in by_class:
+        return float(by_class["latency_critical"]["p99"])
+    return float(res["queue_age"]["p99"])
+
+
+def main(out: List[str]) -> None:
+    lc_pol = TenantClassPolicy.latency_critical(queue_age_budget=LC_BUDGET,
+                                                lookahead_cycles=0)
+    be_pol = TenantClassPolicy.best_effort()
+    solo = _run(lc_pol, None, with_adversary=False)
+    classless = _run(None, None, with_adversary=True)
+    classed = _run(lc_pol, be_pol, with_adversary=True)
+    # preemption config: LC trades a bounded wait (class lookahead ==
+    # budget) for fuller batches; reaching the budget arms BE deferral.
+    # ewma_alpha=1.0 reacts to the instantaneous age (the smoothed
+    # default would average the hold ramp 0,1,2 below the budget)
+    preempt = _run(
+        TenantClassPolicy.latency_critical(queue_age_budget=LC_BUDGET,
+                                           lookahead_cycles=LC_BUDGET,
+                                           ewma_alpha=1.0),
+        be_pol, with_adversary=True)
+
+    solo_p99 = _lc_p99(solo)
+    classless_p99 = _lc_p99(classless)
+    classed_p99 = _lc_p99(classed)
+
+    for key, res in (("solo.classed", solo),
+                     ("adversary.classless", classless),
+                     ("adversary.classed", classed)):
+        us = 1e6 * res["seconds"] / max(res["launches"], 1)
+        qa = res["queue_age"]
+        out.append(f"slo.{key},{us:.2f},"
+                   f"lc_p99={_lc_p99(res):g};p50={qa['p50']:g};"
+                   f"p99={qa['p99']:g};gate=skip")
+        print(out[-1])
+
+    # THE gated row: 1 + classed LC p99 under the adversary.  The +1
+    # makes a perfect 0 gateable (check_regression rejects zero
+    # baselines; gate=abs divides raw values, so a regression to p99=1
+    # reads 2.00x and trips the 25% gate).
+    out.append(f"slo.lc_p99.adversary,{1.0 + classed_p99:.2f},"
+               f"encoding=1+p99_cycles;solo_p99={solo_p99:g};"
+               f"classless_p99={classless_p99:g};gate=abs")
+    print(out[-1])
+
+    us = 1e6 * preempt["seconds"] / max(preempt["launches"], 1)
+    out.append(f"slo.preempt,{us:.2f},"
+               f"be_preemptions={preempt['be_preemptions']};"
+               f"lc_p99={_lc_p99(preempt):g};gate=skip")
+    print(out[-1])
+
+    print(f"LC p99 queue age: solo {solo_p99:g}, adversary classless "
+          f"{classless_p99:g}, adversary classed {classed_p99:g}; "
+          f"be_preemptions {preempt['be_preemptions']}")
+
+    # -- acceptance bars (deterministic scheduler decisions, not noise) --
+    # ISSUE 8: LC p99 under the adversary <= 2x its solo p99 (+1 shifts
+    # the zero-able metric so the ratio is well-defined at p99 = 0)
+    assert (classed_p99 + 1) <= 2 * (solo_p99 + 1), (
+        f"classed LC p99 {classed_p99} > 2x solo p99 {solo_p99}")
+    # the classes must actually buy something vs the classless scheduler
+    assert classless_p99 > classed_p99, (
+        f"classless p99 {classless_p99} <= classed p99 {classed_p99}: "
+        "the adversary scenario no longer stresses the lookahead hold")
+    # budget breach must arm BE deferral in the preempt config
+    assert preempt["be_preemptions"] > 0, (
+        "LC EWMA at budget never deferred a best-effort batch")
+    # data integrity: the LC tenant's arena bytes are identical with and
+    # without the flood, classed or not (N_OPS bumps of +1.0 each)
+    want = np.full(LC_SLOTS, float(N_OPS), np.float32)
+    for key, res in (("solo", solo), ("classless", classless),
+                     ("classed", classed), ("preempt", preempt)):
+        got = res["lc_arena"]
+        assert np.array_equal(got, want), (
+            f"{key}: LC arena bytes {got[:4]}... != {float(N_OPS)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.parse_args()
+    main([])

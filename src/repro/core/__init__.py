@@ -24,6 +24,10 @@ Layering (bottom-up):
                   gauges/histograms) + lifecycle event trace with
                   Chrome/Perfetto export; fed at drain-cycle boundaries,
                   never a device sync
+    tenantclass — SLO classes (latency_critical / best_effort): per-class
+                  lookahead + queue-age budgets driving best-effort
+                  preemption, compute-aware admission, and per-tenant
+                  quarantine thresholds, in one TenantClassPolicy
     manager     — GuardianManager ("grdManager"): sole device owner,
                   validated calls, round-robin spatial multiplexing
     libsim      — simulated closed-source accelerated libraries (Table 6)
@@ -43,6 +47,12 @@ from repro.core.pressure import (
     Ewma,
     PressureTracker,
     derive_lookahead,
+    total_arrival_rate,
+)
+from repro.core.tenantclass import (
+    TenantClass,
+    TenantClassPolicy,
+    as_class_policy,
 )
 from repro.core.fence import (
     FenceParams,
@@ -96,6 +106,7 @@ from repro.core.quarantine import (
     TenantQuarantined,
     TenantState,
     ThresholdPolicy,
+    WeightedRatePolicy,
 )
 from repro.core.sandbox import SandboxError, sandbox, sandbox_report
 from repro.core.violations import (
@@ -109,7 +120,8 @@ __all__ = [
     "Arena", "ArenaSpec", "make_flat_arena",
     "Admission", "AdmissionStatus", "ElasticError", "ElasticManager",
     "ElasticPolicy", "ElasticState", "ResizeEvent",
-    "Ewma", "PressureTracker", "derive_lookahead",
+    "Ewma", "PressureTracker", "derive_lookahead", "total_arrival_rate",
+    "TenantClass", "TenantClassPolicy", "as_class_policy",
     "FenceParams", "FencePolicy", "FenceTable", "apply_fence",
     "apply_fence_mixed", "fence_bitwise", "fence_check", "fence_modulo",
     "fence_modulo_magic", "fence_modulo_magic_dyn",
@@ -127,5 +139,5 @@ __all__ = [
     "KIND_NAMES", "NUM_KINDS", "ViolationKind", "ViolationLog",
     "QuarantineError", "QuarantineManager", "QuarantinePolicy",
     "QuarantineStateMachine", "TenantQuarantined", "TenantState",
-    "ThresholdPolicy",
+    "ThresholdPolicy", "WeightedRatePolicy",
 ]

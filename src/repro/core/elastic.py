@@ -70,6 +70,7 @@ from repro.core.partition import (
 )
 from repro.core.pressure import PressureSample, PressureTracker
 from repro.core.telemetry import SCHEDULER_TRACK
+from repro.core.tenantclass import TenantClassPolicy, as_class_policy
 
 
 class ElasticError(Exception):
@@ -118,6 +119,15 @@ class ElasticPolicy:
     grow_on_failure: bool = False
     compact_on_admit: bool = True    # admission may defragment
     shrink_for_admission: bool = True  # admission may reclaim idle reserves
+    #: compute-aware admission (None = off, the arena-bytes-only
+    #: behavior): while any latency-critical tenant is registered and the
+    #: scheduler's total EWMA arrival rate (ops per drain cycle,
+    #: ``BatchedLaunchScheduler.arrival_rate_total``) is at or above this
+    #: watermark, *best-effort-classed* admissions waitlist even when the
+    #: arena has room — a compute-saturating tenant must not degrade LC
+    #: p99 on arrival.  Retried every poll; the EWMA decays as traffic
+    #: thins, so deferred tenants admit themselves once pressure drops.
+    compute_watermark: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +163,10 @@ class Admission:
     #: scheduler drain-cycle stamp at admit() — the waitlist-age clock
     #: (-1: admitted before the telemetry layer stamped it)
     enqueue_cycle: int = -1
+    #: normalized TenantClassPolicy (or None), forwarded to
+    #: register_tenant on admission; best-effort entries are the ones
+    #: compute-aware admission may defer
+    tenant_class: Optional[TenantClassPolicy] = None
 
 
 class ElasticManager:
@@ -184,7 +198,8 @@ class ElasticManager:
         self._event_dispatched = None
         #: lifetime counters (benchmark / introspection surface)
         self.stats = {"admitted": 0, "waitlisted": 0, "grows": 0,
-                      "shrinks": 0, "relocations": 0, "compactions": 0}
+                      "shrinks": 0, "relocations": 0, "compactions": 0,
+                      "compute_deferred": 0}
 
     def _tel(self):
         """The manager's flight recorder, or None when disabled — every
@@ -245,7 +260,8 @@ class ElasticManager:
     # Admission control                                                  #
     # ------------------------------------------------------------------ #
     def admit(self, tenant_id: str, requested_slots: int,
-              policy=None, weight: int = 1) -> Admission:
+              policy=None, weight: int = 1,
+              tenant_class=None) -> Admission:
         """Admission-controlled registration: the tenant is registered
         when the arena can host it (making room by shrinking idle
         reserves and compacting if needed), and **waitlisted** otherwise
@@ -255,12 +271,19 @@ class ElasticManager:
         but a later entry may fill a hole the head cannot use anyway —
         small tenants are never head-of-line blocked behind a large one.
         Returns the admission handle; ``handle.client`` is the
-        GuardianClient once admitted."""
+        GuardianClient once admitted.
+
+        ``tenant_class`` (any ``register_tenant`` class spec) rides the
+        admission: with ``ElasticPolicy.compute_watermark`` set, a
+        best-effort-classed entry also waitlists while scheduler
+        arrival-rate pressure threatens a registered latency-critical
+        tenant — see :meth:`_compute_saturated`."""
         adm = Admission(tenant_id=tenant_id,
                         requested_slots=requested_slots,
                         status=AdmissionStatus.WAITLISTED,
                         policy=policy, weight=weight,
-                        enqueue_cycle=self.manager.scheduler._cycle)
+                        enqueue_cycle=self.manager.scheduler._cycle,
+                        tenant_class=as_class_policy(tenant_class))
         # never clobber a live tenant's extent state: a duplicate admit
         # of an ACTIVE tenant will be REJECTED by registration, and its
         # existing state must survive that
@@ -281,6 +304,12 @@ class ElasticManager:
 
     def _try_admit(self, adm: Admission, make_room: bool = True) -> bool:
         mgr = self.manager
+        if self._compute_saturated(adm):
+            # compute (not memory) is the bottleneck: keep waitlisted and
+            # re-check at every poll — the arrival EWMA decays as traffic
+            # thins, so the deferral is self-releasing
+            self._retry_waitlist = True
+            return False
         need = next_pow2(max(adm.requested_slots, 1))
         if mgr.bounds.largest_free_block() < need:
             if not make_room or not self._make_room(need):
@@ -288,7 +317,8 @@ class ElasticManager:
         try:
             adm.client = mgr.register_tenant(
                 adm.tenant_id, adm.requested_slots,
-                policy=adm.policy, weight=adm.weight)
+                policy=adm.policy, weight=adm.weight,
+                tenant_class=adm.tenant_class)
         except OutOfArenaMemory:
             return False
         except Exception as e:
@@ -315,6 +345,33 @@ class ElasticManager:
                                      tenant=adm.tenant_id)
             tel.event("admit", adm.tenant_id,
                       slots=adm.requested_slots)
+        return True
+
+    def _compute_saturated(self, adm: Admission) -> bool:
+        """Compute-aware admission check: defer a *best-effort-classed*
+        admission while (a) ``compute_watermark`` is configured, (b) some
+        latency-critical tenant is registered, and (c) the scheduler's
+        total EWMA arrival rate is at or above the watermark.  Class-less
+        and latency-critical admissions never defer on compute — only
+        memory can hold them back (the pre-class behavior)."""
+        wm = self.policy.compute_watermark
+        if wm is None:
+            return False
+        if adm.tenant_class is None or not adm.tenant_class.is_best_effort:
+            return False
+        mgr = self.manager
+        if not any(cp.is_latency_critical
+                   for cp in mgr.class_policies().values()):
+            return False
+        if mgr.scheduler.arrival_rate_total() < wm:
+            return False
+        self.stats["compute_deferred"] += 1
+        self.events.append(f"compute-defer {adm.tenant_id}")
+        tel = self._tel()
+        if tel is not None:
+            tel.registry.inc("compute_deferred", tenant=adm.tenant_id)
+            tel.event("compute_defer", adm.tenant_id,
+                      rate=round(mgr.scheduler.arrival_rate_total(), 3))
         return True
 
     def _make_room(self, need_slots: int) -> bool:

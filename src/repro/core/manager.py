@@ -93,6 +93,8 @@ from repro.core.scheduler import (
     donation_supported,
 )
 from repro.core.telemetry import DRAIN_TRACK, Telemetry
+from repro.core.tenantclass import ClassSpec, TenantClassPolicy, \
+    as_class_policy
 from repro.core.violations import ViolationLog
 
 
@@ -271,6 +273,11 @@ class GuardianManager:
         self.elastic = ElasticManager(self, policy=elastic_policy)
         self._ptr_remap: Dict[str, Dict[int, Dict[int, int]]] = {}
         self._ptr_epoch: Dict[str, int] = {}
+        # compute-aware admission reads the scheduler's total arrival-rate
+        # EWMA; turn the (otherwise adaptive-lookahead-only) tracking on
+        # up front so the signal is warm by the first admission decision
+        if self.elastic.policy.compute_watermark is not None:
+            self.scheduler.enable_arrival_tracking()
 
         # §4.2.3 — pointerToSymbol: kernel name -> compiled twins.
         self.pointer_to_symbol: Dict[str, _KernelEntry] = {}
@@ -285,6 +292,11 @@ class GuardianManager:
         # drains up to w ops per cycle and divides the lookahead hold
         # budget of any batch its ops join (priority against starvation)
         self._tenant_weight: Dict[str, int] = {}
+        # per-tenant SLO class policies (core/tenantclass.py).  Empty
+        # until some tenant registers with one — and while empty, every
+        # class code path in the scheduler stays cold (class-less
+        # behavior is bit-identical to the pre-class manager).
+        self._tenant_class: Dict[str, TenantClassPolicy] = {}
         # all-tenant fence table for the serving plane (one (T,2) bitwise +
         # (T,4) magic row staging, rebuilt only when the partition set
         # changes — the engine-side twin of the scheduler's batch tables)
@@ -308,10 +320,14 @@ class GuardianManager:
     # ------------------------------------------------------------------ #
     def register_tenant(self, tenant_id: str, requested_slots: int,
                         policy: Optional[FencePolicy] = None,
-                        weight: int = 1
+                        weight: int = 1,
+                        tenant_class: Optional[ClassSpec] = None,
                         ) -> GuardianClient:
         """Tenants declare memory needs at init (§4.2.1: "normal in cloud
         environments, where users buy instances with specific resources").
+
+        Returns the tenant's :class:`GuardianClient` — the only handle
+        through which the tenant may touch the device.
 
         ``policy`` overrides the manager default for this tenant's
         launches (e.g. a CHECK canary beside MODULO production tenants);
@@ -325,9 +341,20 @@ class GuardianManager:
         cross-cycle lookahead divides its hold budget by the weight, so a
         priority tenant is never starved waiting for a fuller batch.
 
+        ``tenant_class`` attaches an SLO class: a
+        :class:`~repro.core.tenantclass.TenantClassPolicy`, a bare
+        :class:`~repro.core.tenantclass.TenantClass` (or its string
+        value ``"latency_critical"`` / ``"best_effort"``) for that
+        class's factory defaults, or None for the class-less pre-class
+        behavior (bit-identical by regression test).  The policy carries
+        the queue-age SLO budget, a per-class lookahead override, and
+        optional per-tenant quarantine thresholds — see
+        :mod:`repro.core.tenantclass`.
+
         An EVICTED tenant id is refused until explicitly readmitted
         (``manager.quarantine.readmit``) — eviction must survive a
         re-registration attempt."""
+        cls_policy = as_class_policy(tenant_class)
         if weight < 1:
             raise ValueError(f"tenant weight must be >= 1, got {weight}")
         if policy is FencePolicy.NONE:
@@ -356,13 +383,22 @@ class GuardianManager:
         self._queues[tenant_id] = collections.deque()
         self._tenant_policy[tenant_id] = policy
         self._tenant_weight[tenant_id] = weight
+        if cls_policy is not None:
+            self._tenant_class[tenant_id] = cls_policy
+            # class machinery feeds on arrival-rate + queue-age EWMAs;
+            # start collecting from this tenant's first submit on
+            self.scheduler.enable_arrival_tracking()
         client = GuardianClient(self, tenant_id)
         self._clients[tenant_id] = client
         if self.telemetry.enabled:
             self.telemetry.registry.inc("tenants_registered")
+            extra = {}
+            if cls_policy is not None:
+                extra["tenant_class"] = cls_policy.tenant_class.value
             self.telemetry.event("register", tenant_id,
                                  slots=part.size, weight=weight,
-                                 policy=self.policy_of(tenant_id).value)
+                                 policy=self.policy_of(tenant_id).value,
+                                 **extra)
         return client
 
     def remove_tenant(self, tenant_id: str) -> None:
@@ -405,6 +441,7 @@ class GuardianManager:
         self._part_scalars.pop(tenant_id, None)
         self._tenant_policy.pop(tenant_id, None)
         self._tenant_weight.pop(tenant_id, None)
+        self._tenant_class.pop(tenant_id, None)
         self._ptr_remap.pop(tenant_id, None)
         self._ptr_epoch.pop(tenant_id, None)
         self.elastic.forget(tenant_id)
@@ -463,6 +500,25 @@ class GuardianManager:
     def weight_of(self, tenant_id: str) -> int:
         """The tenant's weighted-round-robin share (1 = plain RR)."""
         return self._tenant_weight.get(tenant_id, 1)
+
+    def class_policy_of(self, tenant_id: str
+                        ) -> Optional[TenantClassPolicy]:
+        """The tenant's SLO class policy, or None for a class-less tenant
+        (which sees exactly the pre-class scheduler behavior)."""
+        return self._tenant_class.get(tenant_id)
+
+    def class_policies(self) -> Dict[str, TenantClassPolicy]:
+        """All classed tenants' policies, keyed by tenant id — the
+        scheduler's preemption scan and elastic admission's LC-presence
+        check both iterate this.  The live dict (do not mutate)."""
+        return self._tenant_class
+
+    @property
+    def has_class_tenants(self) -> bool:
+        """True when any registered tenant carries a class policy — the
+        master switch for the scheduler's class bookkeeping (flush-time
+        EWMA samples, per-class histograms, preemption checks)."""
+        return bool(self._tenant_class)
 
     def fence_table(self) -> Tuple[FenceTable, Dict[str, int]]:
         """Stacked fence rows for every registered tenant, magic table
@@ -1162,9 +1218,15 @@ class GuardianManager:
         the end of the cycle — compatible launches from different tenants
         fuse into one device step (one binary, per-row dynamic bounds).
         With ``lookahead_cycles`` the cycle-boundary flush may hold an
-        under-filled batch for later cycles; the final flush of the drain
-        (``drain=True``) always executes everything, so every result
-        handle is filled when this returns.
+        under-filled batch for later cycles — classed tenants resolve
+        their own hold budget (a latency-critical tenant is never held
+        past ``min(lookahead, queue_age_budget)``), and a flush that
+        starts with a latency-critical tenant's EWMA queue age at or
+        above its budget defers all-best-effort batches to the next
+        cycle (DESIGN.md §Performance isolation).  The final flush of
+        the drain (``drain=True``) always executes everything —
+        preemption included — so every result handle is filled when
+        this returns.
         TIME_SHARE: drain each tenant fully then block (context switch).
         """
         if self.mode is SharingMode.SPATIAL:
@@ -1219,6 +1281,8 @@ class GuardianManager:
             self.elastic.maybe_poll()
 
     def synchronize(self, tenant_id: Optional[str] = None) -> None:
+        """Drain all queues (:meth:`run_queued`) and block until the
+        device arena is ready — the result-handle barrier."""
         self.run_queued()
         jax.block_until_ready(self.arena.buf)
 
@@ -1255,11 +1319,14 @@ class GuardianManager:
 
     def metrics_report(self) -> Dict[str, Any]:
         """The unified flight-recorder report: per-tenant rows (state,
-        policy, weight, extent, utilization, queue-age p50/p90/p99,
-        violation counts), scheduler/launch/drain summaries, jit-cache
-        and elastic stats, registry counters/gauges, trace occupancy.
+        policy, SLO class, weight, extent, utilization, queue-age
+        p50/p90/p99, violation counts), scheduler/launch/drain summaries
+        (including per-class queue-age percentiles and the best-effort
+        preemption count), jit-cache and elastic stats, registry
+        counters/gauges, trace occupancy.
         Subsumes the five legacy surfaces (which remain as views).
-        Synchronizing — an operator surface, never a hot-path call."""
+        Synchronizing — an operator surface, never a hot-path call.
+        docs/operator-guide.md maps every section to its knob."""
         return self.telemetry.report()
 
     def memory_usage(self) -> Dict[str, Any]:

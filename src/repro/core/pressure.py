@@ -167,6 +167,18 @@ class PressureTracker:
         return ew.value if ew is not None and ew.samples else None
 
 
+def total_arrival_rate(ewmas: Iterable[Ewma]) -> float:
+    """Sum of seeded per-tenant arrival-rate EWMAs (ops per drain cycle)
+    — the *compute pressure* signal.  Feeds two consumers: the adaptive
+    lookahead derivation below, and compute-aware admission
+    (``ElasticPolicy.compute_watermark``): a best-effort admission
+    waitlists while this total says the scheduler is already saturated
+    enough to threaten a latency-critical tenant's budget.  Unseeded
+    trackers contribute nothing (a cold scheduler exerts no pressure).
+    """
+    return sum(ew.value for ew in ewmas if ew.samples)
+
+
 def derive_lookahead(rates: Iterable[float], max_fuse: int,
                      cap: int) -> int:
     """Adaptive cross-cycle lookahead budget from observed arrival rates.

@@ -90,6 +90,13 @@ class TenantRecord:
     #: probation — first logged violation on probation evicts
     clean_cycles: int = 0
     probation: bool = False
+    #: scheduler drain-cycle stamps backing *rate-based* policies: the
+    #: cycle the tenant was (re)admitted, and the cycles elapsed since —
+    #: refreshed by the poll so policy objects stay pure functions of
+    #: (counts, record).  A readmission resets the clock along with the
+    #: wiped counters.
+    admit_cycle: int = 0
+    cycles_observed: int = 0
 
 
 class QuarantineStateMachine:
@@ -211,6 +218,56 @@ class ThresholdPolicy(QuarantinePolicy):
                 and sum(counts.values()) >= self.evict_after)
 
 
+@dataclasses.dataclass
+class WeightedRatePolicy(QuarantinePolicy):
+    """Threshold policy over *weighted* violation counts, with optional
+    rate triggers (the richer policies the ROADMAP carried over).
+
+    ``weights`` maps violation kinds to multipliers (unlisted kinds
+    weigh 1.0) — a corrupting ``scatter`` can count 4x a stray
+    ``gather``.  The absolute thresholds compare the weighted total;
+    the ``*_rate`` triggers compare weighted violations *per drain
+    cycle since admission* (``record.cycles_observed``, floored at
+    ``min_cycles`` so one early violation can't spike the rate before
+    there is a baseline).  Any trigger set to None is inert; with both
+    absolute and rate triggers set, either may fire.
+
+    This is also the policy a :class:`~repro.core.tenantclass.
+    TenantClassPolicy`'s containment knobs build — per-tenant class
+    policies override the manager-global policy in the quarantine poll.
+    """
+
+    quarantine_after: Optional[float] = 8
+    evict_after: Optional[float] = None
+    quarantine_rate: Optional[float] = None
+    evict_rate: Optional[float] = None
+    min_cycles: int = 4
+    weights: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def weighted_total(self, counts: Dict[str, int]) -> float:
+        return sum(n * self.weights.get(kind, 1.0)
+                   for kind, n in counts.items())
+
+    def _rate(self, weighted: float, record: TenantRecord) -> float:
+        cycles = max(getattr(record, "cycles_observed", 0),
+                     self.min_cycles, 1)
+        return weighted / cycles
+
+    def should_quarantine(self, tenant_id, counts, record):
+        w = self.weighted_total(counts)
+        if self.quarantine_after is not None and w >= self.quarantine_after:
+            return True
+        return (self.quarantine_rate is not None and w > 0
+                and self._rate(w, record) >= self.quarantine_rate)
+
+    def should_evict(self, tenant_id, counts, record):
+        w = self.weighted_total(counts)
+        if self.evict_after is not None and w >= self.evict_after:
+            return True
+        return (self.evict_rate is not None and w > 0
+                and self._rate(w, record) >= self.evict_rate)
+
+
 # --------------------------------------------------------------------------- #
 # The manager-side driver                                                     #
 # --------------------------------------------------------------------------- #
@@ -255,7 +312,13 @@ class QuarantineManager:
 
     # -- registration hooks (called by the manager) --------------------- #
     def admit(self, tenant_id: str) -> None:
-        self.machine.admit(tenant_id)
+        fresh = self.machine.record_of(tenant_id) is None
+        rec = self.machine.admit(tenant_id)
+        if fresh:
+            # rate-based policies measure violations per cycle since
+            # admission — stamp the clock on the record's first life
+            # (a duplicate registration must not reset a live clock)
+            rec.admit_cycle = self.manager.scheduler._cycle
 
     def forget(self, tenant_id: str) -> None:
         self.machine.forget(tenant_id)
@@ -321,6 +384,11 @@ class QuarantineManager:
             rec = self.machine.record_of(tenant_id)
             if rec is None:
                 continue
+            # refresh the rate clock before the policy reads the record
+            # (policies stay pure functions of (counts, record))
+            rec.cycles_observed = max(
+                self.manager.scheduler._cycle - rec.admit_cycle, 0)
+            policy = self.policy_for(tenant_id)
             counts = log.counts(tenant_id, snap=snap)
             if tel is not None and tel.enabled:
                 # piggyback on the poll's (already dirty-gated) sync: the
@@ -341,7 +409,7 @@ class QuarantineManager:
                 self.evict(tenant_id, reason="probation violation")
                 transitioned.append(tenant_id)
                 continue
-            if rec.state.admissible and self.policy.should_quarantine(
+            if rec.state.admissible and policy.should_quarantine(
                     tenant_id, counts, rec):
                 self.quarantine(
                     tenant_id,
@@ -350,10 +418,23 @@ class QuarantineManager:
                 transitioned.append(tenant_id)
                 rec = self.machine.record_of(tenant_id)
             if (rec.state is TenantState.QUARANTINED
-                    and self.policy.should_evict(tenant_id, counts, rec)):
+                    and policy.should_evict(tenant_id, counts, rec)):
                 self.evict(tenant_id)
                 transitioned.append(tenant_id)
         return transitioned
+
+    def policy_for(self, tenant_id: str) -> QuarantinePolicy:
+        """The policy governing this tenant: a registered
+        :class:`~repro.core.tenantclass.TenantClassPolicy` with any
+        containment knob set overrides the manager-global policy
+        (containment and QoS are configured in one object)."""
+        class_of = getattr(self.manager, "class_policy_of", None)
+        cp = class_of(tenant_id) if class_of is not None else None
+        if cp is not None:
+            override = cp.quarantine_policy()
+            if override is not None:
+                return override
+        return self.policy
 
     @staticmethod
     def _fmt(counts: Dict[str, int]) -> str:
@@ -407,6 +488,9 @@ class QuarantineManager:
         rec = self.machine.readmit(tenant_id)
         rec.probation = False
         rec.clean_cycles = 0
+        # wiped counters restart the rate-based policies' clock too
+        rec.admit_cycle = self.manager.scheduler._cycle
+        rec.cycles_observed = 0
         self.manager.violog.reset(tenant_id)
         self.events.append(f"readmit {tenant_id}")
         self._emit(tenant_id, "readmit")

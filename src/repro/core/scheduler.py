@@ -74,6 +74,21 @@ weight >= lookahead_cycles has budget 0, so its ops always dispatch in
 their submission cycle; property-tested).  The
 end-of-drain flush (``drain=True``) executes everything unconditionally,
 so ``run_queued()`` still returns with every result handle filled.
+
+SLO-aware tenant classes (:mod:`repro.core.tenantclass`): a tenant
+registered with a :class:`TenantClassPolicy` resolves its hold budget
+through the class — a latency-critical tenant's lookahead is capped at
+its ``queue_age_budget`` (its ops are never held for fusion past the
+SLO; the factory default is 0, dispatch-in-submission-cycle), while
+best-effort tenants inherit the global/adaptive budget and fill
+residual batch width.  When a latency-critical tenant's EWMA queue age
+(one sample per drain cycle: the max age it dispatched or is still
+holding) breaches its budget, the cycle-boundary flush starts
+**deferring all-best-effort batches** — preemption at drain-cycle
+boundaries only, never mid-fused-step, and never at the end-of-drain
+flush (the result-handle invariant is class-blind).  Tenants without a
+class policy are untouched: the class machinery is skipped entirely and
+the pre-class behavior is bit-identical (regression-tested).
 """
 
 from __future__ import annotations
@@ -90,7 +105,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fence import FencePolicy, FenceTable
-from repro.core.pressure import Ewma, derive_lookahead
+from repro.core.pressure import Ewma, derive_lookahead, total_arrival_rate
 from repro.core.telemetry import Histogram, QUEUE_AGE_BOUNDS, \
     SCHEDULER_TRACK
 
@@ -241,6 +256,9 @@ class SchedulerStats:
     #: launches that fused *across* drain cycles: dispatched in a width>1
     #: step at a later cycle than they were submitted (the lookahead win)
     lookahead_fused: int = 0
+    #: all-best-effort batches deferred at a cycle boundary because a
+    #: latency-critical tenant's EWMA queue age breached its budget
+    be_preemptions: int = 0
     #: queue age (dispatch cycle - submit cycle) summed over dispatched
     #: scheduler launches, + the sample count backing mean_queue_age
     queue_age_sum: int = 0
@@ -261,6 +279,12 @@ class SchedulerStats:
     #: telemetry switch.
     queue_age_hist: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(QUEUE_AGE_BOUNDS))
+    #: lifetime queue-age histograms split by tenant class (the ROADMAP's
+    #: "per-class p50/p99 queue age") — populated only for tenants
+    #: registered with a class policy, so a class-less scheduler carries
+    #: an empty dict and pays nothing
+    class_queue_age: Dict[str, Histogram] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def total_launches(self) -> int:
@@ -312,6 +336,7 @@ class SchedulerStats:
             "lookahead_fused": float(self.lookahead_fused),
             "mean_queue_age": self.mean_queue_age,
             "lookahead_budget": float(self.lookahead_budget),
+            "be_preemptions": float(self.be_preemptions),
         }
 
     def queue_age_percentiles(
@@ -321,6 +346,14 @@ class SchedulerStats:
         deque-backed mean alone cannot answer tail-latency questions).
         Zeros when nothing has dispatched."""
         return self.queue_age_hist.percentiles(qs)
+
+    def queue_age_percentiles_by_class(
+            self, qs: Sequence[float] = (50, 90, 99)
+    ) -> Dict[str, Dict[str, float]]:
+        """Per-tenant-class queue-age percentiles (empty for a class-less
+        scheduler) — the benchmarks/slo_isolation.py gate source."""
+        return {cls: h.percentiles(qs)
+                for cls, h in sorted(self.class_queue_age.items())}
 
 
 class BatchedLaunchScheduler:
@@ -360,6 +393,23 @@ class BatchedLaunchScheduler:
         self._arrival_ewma: Dict[str, Ewma] = {}
         self._cycle_arrivals: Dict[str, int] = {}
         self._adaptive_budget = 0
+        #: arrival-rate EWMAs update when *any* consumer needs them:
+        #: adaptive lookahead, compute-aware admission
+        #: (ElasticPolicy.compute_watermark), or a registered tenant
+        #: class — see enable_arrival_tracking().  Off by default so a
+        #: consumer-less scheduler's flush stays byte-identical.
+        self._track_arrivals = adaptive_lookahead
+        # -- tenant-class state (inert until a class policy registers) --
+        #: per-tenant queue-age EWMA, one sample per drain cycle (the max
+        #: age the tenant dispatched or still holds) — the signal
+        #: best-effort preemption compares against LC budgets
+        self._qage_ewma: Dict[str, Ewma] = {}
+        #: max dispatched queue age per classed tenant *this flush*
+        self._flush_max_age: Dict[str, int] = {}
+        #: latched per flush: defer all-best-effort batches this cycle
+        self._preempting = False
+        #: latched per flush: any class-policied tenant registered
+        self._class_tracking = False
         self._cycle = 0
         self._pending: List[LaunchRequest] = []
         # (name, policy, arg-sig, T) -> jitted fused step; LRU-bounded
@@ -407,10 +457,26 @@ class BatchedLaunchScheduler:
     # ------------------------------------------------------------------ #
     def submit(self, req: LaunchRequest) -> None:
         req.submit_cycle = self._cycle
-        if self.adaptive_lookahead:
+        if self._track_arrivals:
             self._cycle_arrivals[req.tenant_id] = \
                 self._cycle_arrivals.get(req.tenant_id, 0) + 1
         self._pending.append(req)
+
+    def enable_arrival_tracking(self) -> None:
+        """Turn on per-tenant arrival-rate EWMAs (idempotent).  Called by
+        the manager when a consumer beyond adaptive lookahead appears: a
+        tenant registers with a class policy, or the elastic policy sets
+        ``compute_watermark``.  Tracking alone never changes scheduling —
+        the adaptive budget is only derived when ``adaptive_lookahead``
+        is set (the class-less bit-identical guarantee)."""
+        self._track_arrivals = True
+
+    def arrival_rate_total(self) -> float:
+        """EWMA total arrivals per drain cycle across tenants — the
+        compute-pressure signal elastic admission compares against
+        ``ElasticPolicy.compute_watermark``.  0.0 while tracking is off
+        or cold."""
+        return total_arrival_rate(self._arrival_ewma.values())
 
     @property
     def current_lookahead(self) -> int:
@@ -431,6 +497,10 @@ class BatchedLaunchScheduler:
                 ew = self._arrival_ewma[t] = Ewma(alpha=0.5)
             ew.update(self._cycle_arrivals.get(t, 0))
         self._cycle_arrivals.clear()
+        if not self.adaptive_lookahead:
+            # tracking serves compute-aware admission / class telemetry
+            # only: the budget (and its stats mirror) must stay untouched
+            return
         self._adaptive_budget = derive_lookahead(
             (ew.value for ew in self._arrival_ewma.values()),
             self.max_fuse, self.adaptive_lookahead_cap)
@@ -458,6 +528,10 @@ class BatchedLaunchScheduler:
             del self._vrow_cache[key]
         self._arrival_ewma.pop(tenant_id, None)
         self._cycle_arrivals.pop(tenant_id, None)
+        # a departed LC tenant's queue-age history must not keep
+        # preempting best-effort co-tenants
+        self._qage_ewma.pop(tenant_id, None)
+        self._flush_max_age.pop(tenant_id, None)
 
     def invalidate_table_rows(self, bounds: Tuple[int, int]) -> None:
         """Drop staged FenceTables referencing a dead partition's
@@ -478,12 +552,26 @@ class BatchedLaunchScheduler:
         ``drain=True`` (the end-of-drain flush, and the only mode when
         lookahead is off) executes everything unconditionally, so
         ``run_queued()`` always returns with every result handle filled.
+
+        Tenant classes add one more cycle-boundary decision: when a
+        latency-critical tenant's EWMA queue age has breached its budget
+        (:meth:`_lc_budget_breached`, computed from signals through the
+        *previous* cycle — preemption is decided at the boundary, never
+        mid-flush), every all-best-effort batch is deferred like a
+        lookahead hold.  ``drain=True`` ignores preemption entirely: a
+        drain's final flush fills every result handle, class or no
+        class.
         """
-        if self.adaptive_lookahead:
+        if self._track_arrivals:
             # fold this cycle's arrivals into the EWMA before deciding
             # holds: the budget always reflects traffic through *this*
             # cycle (deterministic — mirrored in tests/test_scheduler.py)
             self._update_arrival_rates()
+        self._class_tracking = self.manager.has_class_tenants
+        self._preempting = (self._class_tracking and not drain
+                            and self._lc_budget_breached())
+        if self._class_tracking:
+            self._flush_max_age.clear()
         work, self._pending = self._pending, []
         held: List[LaunchRequest] = []
         blocked: Set[str] = set()
@@ -494,18 +582,25 @@ class BatchedLaunchScheduler:
             if not work:
                 break
             batch, work = self._take_batch(work, blocked)
-            if not drain and self._should_hold(batch):
+            preempt = self._preempting and self._all_best_effort(batch)
+            if not drain and (preempt or self._should_hold(batch)):
                 held.extend(batch)
                 blocked.update(r.tenant_id for r in batch)
+                if preempt:
+                    self.stats.be_preemptions += 1
                 tel = getattr(self.manager, "telemetry", None)
                 if tel is not None and tel.enabled:
-                    tel.registry.inc("lookahead_holds")
-                    tel.event("lookahead_hold", SCHEDULER_TRACK,
+                    name = "be_preempt" if preempt else "lookahead_hold"
+                    tel.registry.inc(
+                        "be_preemptions" if preempt else "lookahead_holds")
+                    tel.event(name, SCHEDULER_TRACK,
                               width=len(batch),
                               tenants=",".join(r.tenant_id for r in batch))
             else:
                 self._execute(batch)
         self._pending = held
+        if self._class_tracking:
+            self._observe_class_queue_ages(held)
         self._cycle += 1
 
     # ------------------------------------------------------------------ #
@@ -559,14 +654,71 @@ class BatchedLaunchScheduler:
         wait one cycle.  Weight-1 tenants always keep the full budget
         (they are the ones lookahead exists for).  ``lookahead`` is the
         *effective* budget — the static knob, or the adaptive
-        arrival-rate derivation when the knob is 0."""
-        look = self.current_lookahead
+        arrival-rate derivation when the knob is 0.
+
+        A classed tenant resolves ``lookahead`` through its
+        :class:`~repro.core.tenantclass.TenantClassPolicy` first
+        (per-class override, capped at the SLO budget for
+        latency-critical tenants) before the weight math applies; a
+        class-less tenant sees exactly the pre-class arithmetic."""
+        cp = self.manager.class_policy_of(tenant_id)
+        look = (cp.hold_budget(self.current_lookahead)
+                if cp is not None else self.current_lookahead)
         w = max(self.manager.weight_of(tenant_id), 1)
         if w == 1:
             return look
         if w >= look:
             return 0
         return look // w
+
+    # -- tenant-class machinery (inert while no tenant is classed) ------ #
+    def _lc_budget_breached(self) -> bool:
+        """True when any latency-critical tenant's EWMA queue age has
+        reached its SLO budget — the signal that arms best-effort
+        preemption for this flush.  The EWMA must hold a *positive*
+        observation: a budget of 0 means zero tolerance for any queueing,
+        not a standing veto while every observed age is 0 (which would
+        starve best-effort tenants forever)."""
+        for tid, cp in self.manager.class_policies().items():
+            if not cp.is_latency_critical:
+                continue
+            ew = self._qage_ewma.get(tid)
+            if (ew is not None and ew.samples and ew.value > 0
+                    and ew.value >= cp.queue_age_budget):
+                return True
+        return False
+
+    def _all_best_effort(self, batch: List[LaunchRequest]) -> bool:
+        """Preemption only defers batches made *entirely* of best-effort
+        ops — a mixed batch carries latency-critical work and must not
+        wait on its co-members' account."""
+        for r in batch:
+            cp = self.manager.class_policy_of(r.tenant_id)
+            if cp is None or not cp.is_best_effort:
+                return False
+        return True
+
+    def _observe_class_queue_ages(self, held: List[LaunchRequest]) -> None:
+        """One EWMA sample per classed tenant per flush: the max of the
+        ages it dispatched this flush and the current ages of its ops
+        still held at flush end, else 0.  The explicit 0 on idle/fully-
+        dispatched cycles makes the signal *decay* — a latency-critical
+        tenant that went quiet (or departed mid-breach, see
+        :meth:`invalidate_tenant_rows`) releases best-effort preemption
+        instead of pinning it forever."""
+        held_age: Dict[str, int] = {}
+        for r in held:
+            if r.submit_cycle >= 0:
+                age = self._cycle - r.submit_cycle
+                if age > held_age.get(r.tenant_id, -1):
+                    held_age[r.tenant_id] = age
+        for tid, cp in self.manager.class_policies().items():
+            sample = max(self._flush_max_age.get(tid, 0),
+                         held_age.get(tid, 0))
+            ew = self._qage_ewma.get(tid)
+            if ew is None:
+                ew = self._qage_ewma[tid] = Ewma(cp.ewma_alpha)
+            ew.update(sample)
 
     # ------------------------------------------------------------------ #
     def _execute(self, batch: List[LaunchRequest]) -> None:
@@ -592,6 +744,24 @@ class BatchedLaunchScheduler:
                         h = hists[r.tenant_id] = reg.hist(
                             "queue_age_cycles", r.tenant_id)
                     h.observe(age)
+                if self._class_tracking:
+                    cp = self.manager.class_policy_of(r.tenant_id)
+                    if cp is not None:
+                        cls = cp.tenant_class.value
+                        ch = self.stats.class_queue_age.get(cls)
+                        if ch is None:
+                            ch = self.stats.class_queue_age[cls] = \
+                                Histogram(QUEUE_AGE_BOUNDS)
+                        ch.observe(age)
+                        if hists is not None:
+                            key = "class:" + cls
+                            h = hists.get(key)
+                            if h is None:
+                                h = hists[key] = reg.hist(
+                                    "queue_age_cycles", key)
+                            h.observe(age)
+                        if age > self._flush_max_age.get(r.tenant_id, -1):
+                            self._flush_max_age[r.tenant_id] = age
                 if age > 0 and len(batch) > 1:
                     self.stats.lookahead_fused += 1
                     flushed_held = True

@@ -565,8 +565,9 @@ class Telemetry:
     # ------------------------------------------------------------------ #
     def report(self) -> Dict[str, Any]:
         """One dict unifying the five legacy surfaces plus the registry:
-        per-tenant rows (state, policy, weight, extent, utilization,
-        queue-age p50/p90/p99, violation counts), the scheduler/launch
+        per-tenant rows (state, policy, SLO class, weight, extent,
+        utilization, queue-age p50/p90/p99, violation counts), the
+        scheduler/launch
         summaries, the drain-cycle wall-time histogram, jit-cache and
         elastic stats.  Synchronizing (the violation view snapshots the
         device log) — an operator surface, never a hot-path call."""
@@ -579,9 +580,11 @@ class Telemetry:
             sub = mgr._suballoc.get(t)
             state = mgr.quarantine.state_of(t)
             util = self.registry.gauge("arena_utilization", tenant=t)
+            cp = mgr.class_policy_of(t)
             tenants[t] = {
                 "state": state.value if state else "active",
                 "policy": mgr.policy_of(t).value,
+                "class": cp.tenant_class.value if cp is not None else None,
                 "weight": mgr.weight_of(t),
                 "partition": {"base": part.base, "size": part.size},
                 "live_slots": sub.live_bytes() if sub is not None
@@ -596,6 +599,8 @@ class Telemetry:
             "scheduler": {
                 **stats.summary(),
                 "queue_age": stats.queue_age_percentiles(),
+                "queue_age_by_class":
+                    stats.queue_age_percentiles_by_class(),
                 "fused_width": self.registry.percentiles(
                     "fused_step_width"),
             },

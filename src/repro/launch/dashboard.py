@@ -62,16 +62,18 @@ def _pcts(d: Dict[str, float], unit: str = "") -> str:
 
 
 def format_tenants(report: Dict[str, Any]) -> List[str]:
-    lines = [f"{'tenant':<18}{'state':<12}{'policy':<9}{'wt':>3}"
+    lines = [f"{'tenant':<18}{'state':<12}{'policy':<9}{'cls':>4}{'wt':>3}"
              f"{'extent':>15}{'util':>6}{'q50':>5}{'q99':>5}{'viol':>6}"]
+    short_cls = {"latency_critical": "lc", "best_effort": "be"}
     for name, row in sorted(report.get("tenants", {}).items()):
         part = row.get("partition", {})
         extent = f"[{part.get('base', 0)},{part.get('base', 0) + part.get('size', 0)})"
         util = row.get("utilization")
         age = row.get("queue_age", {})
+        cls = short_cls.get(row.get("class"), "-")
         lines.append(
             f"{name:<18}{row.get('state', '?'):<12}"
-            f"{row.get('policy', '?'):<9}{row.get('weight', 1):>3}"
+            f"{row.get('policy', '?'):<9}{cls:>4}{row.get('weight', 1):>3}"
             f"{extent:>15}"
             f"{('-' if util is None else f'{util:.2f}'):>6}"
             f"{age.get('p50', 0.0):>5g}{age.get('p99', 0.0):>5g}"
@@ -111,7 +113,11 @@ def format_report(report: Dict[str, Any],
          f"  max {int(sched.get('max_batch_width', 0))}"),
         (f"queue age   {_pcts(sched.get('queue_age', {}))} cycles"
          f"   lookahead fused {int(sched.get('lookahead_fused', 0))},"
-         f" budget {int(sched.get('lookahead_budget', 0))}"),
+         f" budget {int(sched.get('lookahead_budget', 0))}"
+         f"   be preempts {int(sched.get('be_preemptions', 0))}"),
+        *(f"  {cls:<18}{_pcts(p)} cycles"
+          for cls, p in sorted(
+              sched.get("queue_age_by_class", {}).items())),
         f"fused width {_pcts(sched.get('fused_width', {}))}",
         _rule("drain cycles"),
         f"wall time   {_pcts(drain, unit='us')}",

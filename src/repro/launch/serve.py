@@ -139,6 +139,12 @@ class ServeEngine:
     side.  Pass ``manager=`` (see :func:`make_shared_manager`) to co-host
     several engines on one manager — their compatible steps fuse into one
     device step per lockstep drain (:func:`serve_engines`).
+
+    Serve tenants may carry an SLO class (``register_tenant``'s
+    ``tenant_class``): it governs elastic admission (compute watermark)
+    and per-class reporting; the decode steps themselves run as trusted
+    steps under the engine's scratch tenant, outside the raw-launch
+    queue-age machinery.
     """
 
     def __init__(self, cfg, *, max_batch: int = 8, max_len: int = 256,
@@ -272,14 +278,22 @@ class ServeEngine:
 
     def register_tenant(self, name: str, slots: int,
                         policy: Optional[FencePolicy] = None,
-                        weight: int = 1):
+                        weight: int = 1,
+                        tenant_class=None):
         """Carve a pool partition for ``name``; returns the Partition.
 
         ``policy`` optionally overrides the engine default for this
         tenant's rows (per-row mixed fencing); ``weight`` is the tenant's
-        weighted-round-robin share of batch rows."""
+        weighted-round-robin share of batch rows; ``tenant_class`` is any
+        ``GuardianManager.register_tenant`` class spec (a
+        TenantClassPolicy, a TenantClass, or ``"latency_critical"`` /
+        ``"best_effort"``) attaching an SLO class to the tenant.  Note
+        the engine's own *launches* ride under its scratch tenant, so a
+        serve tenant's class governs admission and reporting; queue-age
+        SLO enforcement applies to raw-launch tenants."""
         self.manager.register_tenant(name, slots, policy=policy,
-                                     weight=weight)
+                                     weight=weight,
+                                     tenant_class=tenant_class)
         self._tenants.add(name)
         return self.manager.bounds.lookup(name)
 
@@ -358,6 +372,10 @@ class ServeEngine:
             self.rejected.extend(dropped)
 
     def submit(self, tenant: str, prompt: np.ndarray) -> int:
+        """Queue one generation request; returns the request id keyed in
+        :meth:`run`'s result dict.  Raises if the tenant is quarantined.
+        Claims a KV slot from the tenant's pool partition, growing it
+        through the elastic control plane when hard-full."""
         self.manager.quarantine.check_admission(tenant, "submit")
         part = self.manager.bounds.lookup(tenant)
         # a manager-registered tenant becomes this engine's to serve (and
@@ -659,6 +677,12 @@ def main(argv=None):
                     help="comma-separated per-tenant fence policies cycled "
                          "across tenants (e.g. 'modulo,check'); empty = "
                          "engine default (bitwise) for all")
+    ap.add_argument("--classes", default="",
+                    help="comma-separated per-tenant SLO classes cycled "
+                         "across tenants — 'latency_critical'/'lc', "
+                         "'best_effort'/'be', or '-' for class-less; "
+                         "empty = class-less for all (the pre-class "
+                         "behavior)")
     ap.add_argument("--bench-out", default=None,
                     help="append a `name,us_per_call,derived` bench CSV "
                          "row (per-token wall time) to this file — CI's "
@@ -687,16 +711,22 @@ def main(argv=None):
                                jit_steps=not args.no_jit)]
     pols = [FencePolicy(p.strip()) for p in args.policies.split(",")
             if p.strip()]
+    aliases = {"lc": "latency_critical", "be": "best_effort", "-": None}
+    classes = [aliases.get(c.strip(), c.strip())
+               for c in args.classes.split(",") if c.strip()]
     per = max(engines[0]._pool_slots()
               // max(args.tenants * len(engines), 1) // 2, 2)
     for e, eng in enumerate(engines):
         for t in range(args.tenants):
             pol = pols[t % len(pols)] if pols else None
+            cls = classes[t % len(classes)] if classes else None
             tenant = f"tenant{t}" if len(engines) == 1 \
                 else f"e{e}.tenant{t}"
-            eng.register_tenant(tenant, per, policy=pol)
+            eng.register_tenant(tenant, per, policy=pol, tenant_class=cls)
             if pol is not None:
                 print(f"{tenant}: policy={pol.value}")
+            if cls is not None:
+                print(f"{tenant}: class={cls}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         t = i % args.tenants

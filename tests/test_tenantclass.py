@@ -1,0 +1,385 @@
+"""SLO-aware tenant classes (DESIGN.md §Performance isolation): class-
+resolved hold budgets (an LC op is never held past its SLO budget),
+best-effort preemption at drain-cycle boundaries, compute-aware elastic
+admission, per-class quarantine thresholds — and the regression contract
+that a class-less (or all-best-effort-default) manager behaves
+bit-identically to the pre-class scheduler.
+
+Deterministic sweeps mirror the scheduler's hold arithmetic exactly
+(queue ages are host-side cycle counts, not wall-clock); the hypothesis
+mirror re-derives max-held-age = min(lookahead, budget) over random
+knob settings (tests/_hyp.py convention)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    AdmissionStatus,
+    ElasticPolicy,
+    FencePolicy,
+    GuardianManager,
+    TenantClass,
+    TenantClassPolicy,
+    TenantState,
+    ThresholdPolicy,
+    WeightedRatePolicy,
+    as_class_policy,
+)
+from repro.core.quarantine import TenantRecord
+
+
+def bump(arena, ptr, n):
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals + 1.0), None
+
+
+def bump2(arena, ptr, n):
+    # fusion-incompatible twin (different kernel name/signature): the
+    # best-effort flood must not join the LC tenant's batches, so the
+    # LC batch stays under-filled and the lookahead hold engages
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(vals + 1.0), None
+
+
+def evil_write(arena, target, n):
+    idx = target + jnp.arange(n, dtype=jnp.int32)
+    return arena.at[idx].set(999.0), None
+
+
+def _lc_be_workload(lookahead, lc_class=None, be_class=None,
+                    n_ops=8, be_weight=4, **mgr_kw):
+    """One LC-shaped tenant (1 op/cycle, own kernel) + one flooding
+    tenant (``be_weight`` ops/cycle, incompatible kernel).  With
+    ``be_weight >= lookahead`` the flooder's hold budget is 0
+    (weight >= lookahead cutoff), so every nonzero queue age in
+    ``stats.queue_ages`` belongs to the LC tenant — max-age assertions
+    need no per-tenant attribution."""
+    mgr = GuardianManager(total_slots=512, lookahead_cycles=lookahead,
+                          max_fuse=16, **mgr_kw)
+    lc = mgr.register_tenant("lc", 64, tenant_class=lc_class)
+    be = mgr.register_tenant("be", 64, weight=be_weight,
+                             tenant_class=be_class)
+    lc.module_load("bump", bump)
+    be.module_load("bump2", bump2)
+    lp, bp = lc.malloc(8), be.malloc(8)
+    for _ in range(n_ops):
+        lc.launch_kernel("bump", ptrs=[lp], args=(8,))
+    for _ in range(be_weight * n_ops):
+        be.launch_kernel("bump2", ptrs=[bp], args=(8,))
+    mgr.run_queued()
+    return mgr
+
+
+# ---------------------------------------------------------------------------
+# Regression contract: class-less behavior is bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_classless_and_all_best_effort_defaults_bit_identical():
+    """A best_effort() default policy inherits the global lookahead and
+    never triggers preemption without a latency-critical co-tenant —
+    registering every tenant as best_effort must reproduce the
+    class-less run decision-for-decision (dispatch log), age-for-age,
+    byte-for-byte."""
+    runs = []
+    for classed in (False, True):
+        be = TenantClassPolicy.best_effort() if classed else None
+        mgr = _lc_be_workload(lookahead=3, lc_class=be, be_class=be,
+                              be_weight=2)
+        runs.append((list(mgr.scheduler.dispatch_log),
+                     list(mgr.scheduler.stats.queue_ages),
+                     np.asarray(mgr.arena.buf)))
+    assert runs[0][0] == runs[1][0], "dispatch order diverged"
+    assert runs[0][1] == runs[1][1], "queue ages diverged"
+    np.testing.assert_array_equal(runs[0][2], runs[1][2])
+
+
+def test_classless_manager_leaves_class_machinery_cold():
+    """No class policy registered: no arrival tracking, no queue-age
+    EWMAs, no per-class histograms, no preemptions — the class layer
+    must cost a class-less deployment nothing (and report as absent)."""
+    mgr = _lc_be_workload(lookahead=2)
+    sch = mgr.scheduler
+    assert not mgr.has_class_tenants
+    assert sch._arrival_ewma == {} and sch._qage_ewma == {}
+    assert sch.stats.be_preemptions == 0
+    assert sch.stats.class_queue_age == {}
+    rep = mgr.metrics_report()
+    assert rep["scheduler"]["queue_age_by_class"] == {}
+    assert all(row["class"] is None for row in rep["tenants"].values())
+
+
+# ---------------------------------------------------------------------------
+# Class-resolved hold budgets: LC ops never held past their SLO budget
+# ---------------------------------------------------------------------------
+
+
+def test_lc_hold_budget_sweep():
+    """Deterministic sweep over the global lookahead: class-less, the LC
+    tenant's max queue age equals the lookahead; classed latency-critical
+    with class lookahead 0 it drops to 0; inheriting the global lookahead
+    (lookahead_cycles=None) it is capped at min(lookahead, budget).
+    Arena bytes are identical in all runs — classes change dispatch
+    timing, never results."""
+    for look in (1, 2, 3, 4):
+        arenas = []
+        classless = _lc_be_workload(look)
+        assert max(classless.scheduler.stats.queue_ages) == look
+        arenas.append(np.asarray(classless.arena.buf))
+
+        immediate = _lc_be_workload(
+            look, lc_class=TenantClassPolicy.latency_critical(
+                queue_age_budget=2, lookahead_cycles=0),
+            be_class=TenantClassPolicy.best_effort())
+        assert max(immediate.scheduler.stats.queue_ages) == 0
+        by_cls = immediate.scheduler.stats.queue_age_percentiles_by_class()
+        assert by_cls["latency_critical"]["p99"] == 0
+        assert by_cls["latency_critical"]["count"] == 8
+        arenas.append(np.asarray(immediate.arena.buf))
+
+        budget = 2
+        capped = _lc_be_workload(
+            look, lc_class=TenantClassPolicy.latency_critical(
+                queue_age_budget=budget, lookahead_cycles=None))
+        assert max(capped.scheduler.stats.queue_ages) == min(look, budget)
+        arenas.append(np.asarray(capped.arena.buf))
+
+        for a in arenas[1:]:
+            np.testing.assert_array_equal(arenas[0], a)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(look=st.integers(min_value=1, max_value=4),
+       budget=st.integers(min_value=0, max_value=4))
+def test_lc_hold_budget_property(look, budget):
+    """Property mirror of the sweep: an inherited-lookahead LC tenant's
+    max queue age is exactly min(global lookahead, SLO budget)."""
+    mgr = _lc_be_workload(
+        look, lc_class=TenantClassPolicy.latency_critical(
+            queue_age_budget=budget, lookahead_cycles=None),
+        n_ops=6)
+    assert max(mgr.scheduler.stats.queue_ages) == min(look, budget)
+
+
+# ---------------------------------------------------------------------------
+# Best-effort preemption at drain-cycle boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_budget_breach_defers_best_effort_batches():
+    """LC with class lookahead == budget reaches its budget every hold
+    period; an unsmoothed EWMA (alpha=1.0) registers the breach, and
+    queued all-best-effort batches defer at the next cycle boundaries.
+    Every deferred op still lands (the drain flush ignores preemption:
+    result handles must fill), so arena bytes match the classless run."""
+    classless = _lc_be_workload(4, be_weight=2, n_ops=12)
+    preempt = _lc_be_workload(
+        4, lc_class=TenantClassPolicy.latency_critical(
+            queue_age_budget=2, lookahead_cycles=2, ewma_alpha=1.0),
+        be_class=TenantClassPolicy.best_effort(),
+        be_weight=2, n_ops=12)
+    st_ = preempt.scheduler.stats
+    assert st_.be_preemptions > 0
+    by_cls = st_.queue_age_percentiles_by_class()
+    assert by_cls["latency_critical"]["p99"] <= 2
+    np.testing.assert_array_equal(np.asarray(classless.arena.buf),
+                                  np.asarray(preempt.arena.buf))
+    # the flight recorder saw the deferrals too
+    rep = preempt.metrics_report()
+    assert rep["scheduler"]["be_preemptions"] == st_.be_preemptions
+    assert rep["counters"]["be_preemptions"][""] == st_.be_preemptions
+
+
+def test_no_preemption_without_breach():
+    """A latency-critical tenant whose ops always dispatch in their
+    submission cycle (class lookahead 0) never breaches, so best-effort
+    traffic is never deferred."""
+    mgr = _lc_be_workload(
+        4, lc_class=TenantClassPolicy.latency_critical(
+            queue_age_budget=2, lookahead_cycles=0),
+        be_class=TenantClassPolicy.best_effort(), be_weight=2)
+    assert mgr.scheduler.stats.be_preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# Compute-aware elastic admission
+# ---------------------------------------------------------------------------
+
+
+def test_compute_aware_admission_defers_then_admits():
+    """With ``compute_watermark`` set, a best-effort admission waitlists
+    while the scheduler's total arrival-rate EWMA says an LC tenant is
+    under compute pressure — and admits itself once the EWMA decays."""
+    mgr = GuardianManager(
+        total_slots=512,
+        elastic_policy=ElasticPolicy(compute_watermark=1.5))
+    lc = mgr.register_tenant("lc", 64, weight=2,
+                             tenant_class="latency_critical")
+    lc.module_load("bump", bump)
+    p = lc.malloc(8)
+    for _ in range(16):        # 2 ops/cycle over 8 cycles: EWMA -> 2.0
+        lc.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.run_queued()
+    assert mgr.scheduler.arrival_rate_total() == pytest.approx(2.0)
+
+    adm = mgr.elastic.admit("be", 64, tenant_class="best_effort")
+    assert adm.status is AdmissionStatus.WAITLISTED
+    assert mgr.elastic.stats["compute_deferred"] >= 1
+    # a class-less admission is never compute-deferred (pre-class
+    # behavior: only memory holds it back)
+    plain = mgr.elastic.admit("plain", 64)
+    assert plain.status is AdmissionStatus.ADMITTED
+
+    # light traffic decays the EWMA: 2.0 -> 1.5 (still deferred at the
+    # >= watermark) -> 1.25 (admitted by the poll in run_queued)
+    lc.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.run_queued()
+    assert adm.status is AdmissionStatus.WAITLISTED
+    lc.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.run_queued()
+    assert adm.status is AdmissionStatus.ADMITTED
+    assert adm.client is not None
+
+
+def test_no_compute_deferral_without_watermark():
+    """compute_watermark=None (the default): best-effort admissions see
+    the arena-bytes-only admission path regardless of traffic."""
+    mgr = GuardianManager(total_slots=512)
+    lc = mgr.register_tenant("lc", 64, weight=2,
+                             tenant_class="latency_critical")
+    lc.module_load("bump", bump)
+    p = lc.malloc(8)
+    for _ in range(16):
+        lc.launch_kernel("bump", ptrs=[p], args=(8,))
+    mgr.run_queued()
+    adm = mgr.elastic.admit("be", 64, tenant_class="best_effort")
+    assert adm.status is AdmissionStatus.ADMITTED
+    assert mgr.elastic.stats["compute_deferred"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-class quarantine thresholds (containment folded into the policy)
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_rate_policy_unit():
+    rec = TenantRecord(tenant_id="t")
+    pol = WeightedRatePolicy(quarantine_after=8,
+                             weights={"scatter_oob": 4.0})
+    assert pol.weighted_total({"scatter_oob": 2}) == 8.0
+    assert pol.should_quarantine("t", {"scatter_oob": 2}, rec)
+    assert not pol.should_quarantine("t", {"gather_oob": 7}, rec)
+
+    rate = WeightedRatePolicy(quarantine_after=None, quarantine_rate=1.0,
+                              min_cycles=4)
+    rec.cycles_observed = 2      # clamped up to min_cycles=4
+    assert rate.should_quarantine("t", {"gather_oob": 4}, rec)
+    rec.cycles_observed = 8      # 4 / 8 = 0.5 < 1.0
+    assert not rate.should_quarantine("t", {"gather_oob": 4}, rec)
+
+    ev = WeightedRatePolicy(quarantine_after=2, evict_after=16)
+    assert ev.should_quarantine("t", {"gather_oob": 2}, rec)
+    assert not ev.should_evict("t", {"gather_oob": 8}, rec)
+    assert ev.should_evict("t", {"gather_oob": 16}, rec)
+
+
+def test_class_quarantine_threshold_overrides_global():
+    """A tenant class carrying containment knobs replaces the manager's
+    global policy for that tenant only: the classed offender quarantines
+    at its tighter threshold while an identical class-less offender
+    stays ACTIVE under the (loose) global policy."""
+    mgr = GuardianManager(
+        total_slots=512, policy=FencePolicy.CHECK,
+        quarantine_policy=ThresholdPolicy(quarantine_after=100))
+    victim = mgr.register_tenant("victim", 64)
+    strict = mgr.register_tenant(
+        "strict", 64,
+        tenant_class=TenantClassPolicy.best_effort(quarantine_after=2))
+    loose = mgr.register_tenant("loose", 64)
+    vpart = mgr.bounds.lookup("victim")
+    for c in (strict, loose):
+        c.module_load("evil", evil_write)
+        c.launch_kernel("evil", args=(jnp.int32(vpart.base), 8))
+    mgr.run_queued()
+    assert mgr.quarantine.state_of("strict") is TenantState.QUARANTINED
+    assert mgr.quarantine.state_of("loose") is TenantState.ACTIVE
+
+
+# ---------------------------------------------------------------------------
+# register_tenant spec normalization + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_register_tenant_class_specs():
+    mgr = GuardianManager(total_slots=512)
+    mgr.register_tenant("s", 32, tenant_class="latency_critical")
+    mgr.register_tenant("e", 32, tenant_class=TenantClass.BEST_EFFORT)
+    pol = TenantClassPolicy.latency_critical(queue_age_budget=5)
+    mgr.register_tenant("p", 32, tenant_class=pol)
+    mgr.register_tenant("none", 32)
+
+    cp = mgr.class_policy_of("s")
+    assert cp.is_latency_critical and cp.queue_age_budget == 2 \
+        and cp.lookahead_cycles == 0       # factory defaults
+    assert mgr.class_policy_of("e").is_best_effort
+    assert mgr.class_policy_of("p") is pol
+    assert mgr.class_policy_of("none") is None
+    assert mgr.has_class_tenants
+
+    with pytest.raises(ValueError):
+        mgr.register_tenant("bad", 32, tenant_class="gold_tier")
+    with pytest.raises(ValueError):
+        TenantClassPolicy.latency_critical(queue_age_budget=-1)
+    assert as_class_policy(None) is None
+
+    rep = mgr.metrics_report()
+    assert rep["tenants"]["s"]["class"] == "latency_critical"
+    assert rep["tenants"]["none"]["class"] is None
+
+    # teardown clears the class registry (has_class_tenants is the
+    # scheduler's master switch — it must not stick after departures)
+    for t in ("s", "e", "p"):
+        mgr.remove_tenant(t)
+    assert not mgr.has_class_tenants
+
+
+# ---------------------------------------------------------------------------
+# Serving plane: LC generations undisturbed by a best-effort flood
+# ---------------------------------------------------------------------------
+
+
+def test_serve_lc_generations_identical_under_be_flood():
+    """ISSUE 8 acceptance: a latency-critical serve tenant's generations
+    are byte-identical to its solo run while best-effort co-tenants
+    flood the engine."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+    floods = [rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+              for _ in range(4)]
+
+    solo = ServeEngine(cfg, max_batch=8, max_len=64)
+    solo.register_tenant("lc", 2, tenant_class="latency_critical")
+    rid = solo.submit("lc", prompt)
+    want = solo.run(max_new_tokens=6)[rid]
+
+    eng = ServeEngine(cfg, max_batch=8, max_len=64)
+    eng.register_tenant("lc", 2, tenant_class="latency_critical")
+    eng.register_tenant("be0", 2, tenant_class="best_effort")
+    eng.register_tenant("be1", 2, tenant_class="best_effort")
+    rid2 = eng.submit("lc", prompt)
+    for i, fp in enumerate(floods):
+        eng.submit(f"be{i % 2}", fp)
+    out = eng.run(max_new_tokens=6)
+    assert out[rid2] == want, "best-effort flood perturbed LC generations"
+    rep = eng.manager.metrics_report()
+    assert rep["tenants"]["lc"]["class"] == "latency_critical"
+    assert rep["tenants"]["be0"]["class"] == "best_effort"
