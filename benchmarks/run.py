@@ -47,6 +47,8 @@ SUITES = {
                  "cross-pod int8 gradient compression (beyond-paper)"),
     "serve_smoke": ("benchmarks.serve_smoke",
                     "serve-path smoke timings (the four CI configs)"),
+    "serve_cont": ("benchmarks.serve_continuous",
+                   "continuous batching vs lockstep/independent serving"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
 }
 
@@ -55,7 +57,7 @@ SUITES = {
 #: mem rows gate=abs (deterministic byte counts), elastic rows gate=skip
 #: (the packing ratio is asserted inside the suite itself), slo gates
 #: its deterministic 1+p99 row (gate=abs) and asserts its bars in-suite
-QUICK_SUITES = ["sched", "fault", "mem", "elastic", "slo"]
+QUICK_SUITES = ["sched", "fault", "mem", "elastic", "slo", "serve_cont"]
 
 
 def main() -> None:

@@ -1,0 +1,183 @@
+"""Continuous batching vs lockstep waves vs independent serving, over a
+mixed-length arrival trace (the tentpole's acceptance bar).
+
+Three drivers replay the same request set (short decode budgets plus a
+few long stragglers) against the same reduced model:
+
+* **independent** — one request at a time on one slab engine (the
+  no-sharing floor: every request pays a full prefill+decode drain
+  sequence alone);
+* **lockstep** — ``serve_engines`` waves on a slab engine: a wave runs
+  until its LONGEST request's budget is exhausted, so short requests
+  ride (and waste) the stragglers' cycles;
+* **continuous** — ``serve_continuous`` on a paged engine: a finished
+  short request's row refills from the admission queue at the next
+  drain-cycle boundary.
+
+The headline metric is **manager drain cycles to serve the trace**
+(counted by wrapping ``run_queued`` — deterministic, host-side, exact),
+reported alongside wall time.  The acceptance bar is
+``cycles_lockstep / cycles_continuous >= 1.2`` and is asserted in-suite
+(timing rows are ``gate=skip``: interpret-mode wall clock is noise).
+Two invariants ride along: the elastic plane must dispatch **zero
+data-moving relocation steps** (paged resizes are page-table rewrites),
+and every continuous generation must be **bit-identical** to its
+independent solo run.
+
+    PYTHONPATH=src python -m benchmarks.serve_continuous
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.serve_continuous
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.launch.serve import (
+    ServeEngine,
+    make_shared_manager,
+    serve_continuous,
+    serve_engines,
+)
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+RATIO_BAR = 1.2
+
+MAX_LEN = 64
+PLEN = 6
+
+
+def _trace():
+    """Mixed-budget trace: one long straggler per lockstep wave, the
+    rest short — the regime where waves waste the most row-cycles."""
+    if QUICK:
+        B, short_budget, long_budget = 4, 3, 10
+        n_short, n_long = 6, 2
+    else:
+        B, short_budget, long_budget = 8, 4, 28
+        n_short, n_long = 14, 2
+    budgets = []
+    n = n_short + n_long
+    longs_placed = 0
+    for i in range(n):
+        # one long at the head of each wave of B requests
+        if i % B == 0 and longs_placed < n_long:
+            budgets.append(long_budget)
+            longs_placed += 1
+        else:
+            budgets.append(short_budget)
+    prompts = [[(7 * i + 3 * j) % 211 + 1 for j in range(PLEN)]
+               for i in range(n)]
+    return B, prompts, budgets
+
+
+def _count_drains(mgr) -> List[int]:
+    """Wrap the manager's drain entrypoint with a cycle counter."""
+    count = [0]
+    orig = mgr.run_queued
+
+    def counted(*a, **kw):
+        count[0] += 1
+        return orig(*a, **kw)
+
+    mgr.run_queued = counted
+    return count
+
+
+def _independent(cfg, prompts, budgets):
+    """One request at a time on one reused slab engine (compile once)."""
+    eng = ServeEngine(cfg, max_batch=2, max_len=MAX_LEN, seed=0)
+    eng.register_tenant("solo", 2)
+    cycles = _count_drains(eng.manager)
+    outs = []
+    t0 = time.perf_counter()
+    for p, b in zip(prompts, budgets):
+        rid = eng.submit("solo", p)
+        outs.append(eng.run(max_new_tokens=b)[rid])
+    return time.perf_counter() - t0, cycles[0], outs
+
+
+def _lockstep(cfg, B, prompts, budgets):
+    """serve_engines waves: each wave's budget is its longest request's."""
+    eng = ServeEngine(cfg, max_batch=B, max_len=MAX_LEN, seed=0)
+    eng.register_tenant("t", B)
+    cycles = _count_drains(eng.manager)
+    outs: Dict[int, List[int]] = {}
+    order = []
+    t0 = time.perf_counter()
+    for w0 in range(0, len(prompts), B):
+        wave = list(range(w0, min(w0 + B, len(prompts))))
+        rids = [eng.submit("t", prompts[i]) for i in wave]
+        order.extend(rids)
+        out = serve_engines([eng],
+                            max_new_tokens=max(budgets[i] for i in wave))[0]
+        outs.update(out)
+    dt = time.perf_counter() - t0
+    # a wave over-generates for its short requests; trim to budget
+    trimmed = [outs[r][:budgets[i]] for i, r in enumerate(order)]
+    return dt, cycles[0], trimmed
+
+
+def _continuous(cfg, B, prompts, budgets):
+    mgr = make_shared_manager(1, max_batch=B, paged=True, max_len=MAX_LEN)
+    eng = ServeEngine(cfg, max_batch=B, max_len=MAX_LEN, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("t", B)
+    cycles = _count_drains(mgr)
+    rids = [eng.submit("t", p, max_new=b)
+            for p, b in zip(prompts, budgets)]
+    t0 = time.perf_counter()
+    out = serve_continuous([eng], max_new_tokens=max(budgets))[0]
+    dt = time.perf_counter() - t0
+    reloc = mgr.elastic.stats["reloc_steps"]
+    return dt, cycles[0], [out[r] for r in rids], reloc
+
+
+def main(out: List[str]):
+    cfg = get_config("stablelm-3b").reduced()
+    B, prompts, budgets = _trace()
+    n_tokens = sum(budgets)
+
+    i_dt, i_cycles, i_outs = _independent(cfg, prompts, budgets)
+    l_dt, l_cycles, l_outs = _lockstep(cfg, B, prompts, budgets)
+    c_dt, c_cycles, c_outs, reloc = _continuous(cfg, B, prompts, budgets)
+
+    for name, dt, cycles in (("independent", i_dt, i_cycles),
+                             ("lockstep", l_dt, l_cycles),
+                             ("batched", c_dt, c_cycles)):
+        us = 1e6 * dt / n_tokens
+        out.append(f"serve.continuous.{name},{us:.2f},"
+                   f"cycles={cycles};requests={len(prompts)};"
+                   f"tokens={n_tokens};gate=skip")
+        print(out[-1])
+
+    vs_lock = l_cycles / max(c_cycles, 1)
+    vs_ind = i_cycles / max(c_cycles, 1)
+    out.append(f"serve.continuous.vs_lockstep,{vs_lock:.3f},"
+               f"cycles_lockstep={l_cycles};cycles_continuous={c_cycles};"
+               f"bar={RATIO_BAR};gate=skip")
+    print(out[-1])
+    out.append(f"serve.continuous.vs_independent,{vs_ind:.3f},"
+               f"cycles_independent={i_cycles};"
+               f"cycles_continuous={c_cycles};gate=skip")
+    print(out[-1])
+    print(f"drain cycles: independent {i_cycles}, lockstep {l_cycles}, "
+          f"continuous {c_cycles} ({vs_lock:.2f}x vs lockstep, "
+          f"bar {RATIO_BAR}x); reloc_steps={reloc}")
+
+    # deterministic in-suite bars (cycle counts, not wall clock)
+    assert vs_lock >= RATIO_BAR, (
+        f"continuous/lockstep cycle ratio {vs_lock:.2f} below "
+        f"{RATIO_BAR} bar")
+    assert reloc == 0, f"paged serving dispatched {reloc} relocation steps"
+    for i, (c, s) in enumerate(zip(c_outs, i_outs)):
+        assert c == s, f"request {i}: continuous diverged from solo run"
+    for i, (l, s) in enumerate(zip(l_outs, i_outs)):
+        assert l == s, f"request {i}: lockstep diverged from solo run"
+
+
+if __name__ == "__main__":
+    main([])

@@ -128,6 +128,13 @@ class ElasticPolicy:
     #: p99 on arrival.  Retried every poll; the EWMA decays as traffic
     #: thins, so deferred tenants admit themselves once pressure drops.
     compute_watermark: Optional[float] = None
+    #: proactive compaction at *idle* drain cycles (the serve plane's
+    #: page-table-rewrite compaction is near-free, so waiting for an
+    #: admission to need the hole is pure fragmentation debt).  Off by
+    #: default; ``compact_interval`` is the number of consecutive idle
+    #: drain cycles between passes.
+    background_compact: bool = False
+    compact_interval: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,10 +203,16 @@ class ElasticManager:
         #: per-resize-event relocation-step dedupe (see _notify); None
         #: outside a notification
         self._event_dispatched = None
+        #: tenants whose extents are *virtual* (page-table-indirected —
+        #: the global paged serve pool): relocation commits bounds + a
+        #: host-side map rewrite only, no device copy step
+        self._virtual: set = set()
+        #: consecutive idle drain cycles (background-compaction cadence)
+        self._idle_cycles = 0
         #: lifetime counters (benchmark / introspection surface)
         self.stats = {"admitted": 0, "waitlisted": 0, "grows": 0,
                       "shrinks": 0, "relocations": 0, "compactions": 0,
-                      "compute_deferred": 0}
+                      "compute_deferred": 0, "reloc_steps": 0}
 
     def _tel(self):
         """The manager's flight recorder, or None when disabled — every
@@ -230,6 +243,16 @@ class ElasticManager:
                 cb(ev)
         finally:
             self._event_dispatched = None
+
+    def mark_virtual(self, tenant_id: str) -> None:
+        """Declare ``tenant_id``'s extent virtual: its slot ids are page
+        numbers indirected through a manager-owned page map (the global
+        paged serve pool), so relocation/compaction needs no device copy
+        — the subscriber rewrites the map and the KV bytes stay put."""
+        self._virtual.add(tenant_id)
+
+    def is_virtual(self, tenant_id: str) -> bool:
+        return tenant_id in self._virtual
 
     def hold(self) -> None:
         """Enter a serve run: data-moving resizes defer until released
@@ -588,13 +611,19 @@ class ElasticManager:
                 moves = tuple(
                     (old.base + b, new.base + rel_map.get(b, b), n)
                     for b, n in sorted(sub._live.items()))
+            elif tenant_id in self._virtual:
+                # virtual extent (global paged pool): the slot ids are
+                # page numbers behind a host-owned map — the subscriber
+                # rewrites the map, no bytes move and nothing needs
+                # scrubbing (the vacated range is numbers, not data)
+                moves = ()
             else:
                 # no suballocator (serve tenant): the engine listener
                 # moves the pool slots; the flat extent is copied
                 # wholesale so raw arena bytes follow too
                 span = min(old.size, new.size)
                 moves = ((old.base, new.base, span),)
-            zeros = ((old.base, old.size),)
+            zeros = ((old.base, old.size),) if moves else ()
             self._run_flat_relocation(
                 tenant_id, moves, zeros,
                 src_extent=(old.base, old.size),
@@ -701,6 +730,7 @@ class ElasticManager:
         mgr = self.manager
         mgr.pointer_to_symbol.pop(name, None)   # paranoid: never stale
         mgr.register_trusted_kernel(name, fn, pool_arena=pool_arena)
+        self.stats["reloc_steps"] += 1
         try:
             return mgr._dispatch_trusted_direct(tenant_id, name)
         finally:
@@ -757,11 +787,25 @@ class ElasticManager:
     # ------------------------------------------------------------------ #
     # Drain-cycle boundary poll                                          #
     # ------------------------------------------------------------------ #
-    def maybe_poll(self) -> None:
+    def maybe_poll(self, idle: bool = False) -> None:
         """Cheap cadence gate called by the manager's drain loop — one
-        flag read when nothing changed (the ViolationLog discipline)."""
+        flag read when nothing changed (the ViolationLog discipline).
+
+        ``idle=True`` marks a drain cycle that dispatched no work; with
+        ``policy.background_compact`` every ``compact_interval``-th
+        consecutive idle cycle runs a proactive compaction pass, so
+        fragmentation is paid down while the device would sit idle
+        anyway (for virtual/paged tenants the pass is pure host
+        bookkeeping — page-map rewrites, zero copy steps)."""
         if self._holds > 0:
             return
+        if idle and self.policy.background_compact:
+            self._idle_cycles += 1
+            if self._idle_cycles >= self.policy.compact_interval:
+                self._idle_cycles = 0
+                self.compact()
+        elif not idle:
+            self._idle_cycles = 0
         if not self.pressure.dirty and not self._retry_waitlist:
             return
         self.poll()

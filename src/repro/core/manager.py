@@ -1256,8 +1256,10 @@ class GuardianManager:
                 self.quarantine.maybe_poll()
                 # elastic boundary work: pressure-driven grow/shrink and
                 # waitlist admission (one flag read when nothing changed —
-                # host arithmetic only, never a device sync)
-                self.elastic.maybe_poll()
+                # host arithmetic only, never a device sync).  A drain
+                # with no remaining work is an *idle* cycle — the window
+                # background compaction is allowed to use.
+                self.elastic.maybe_poll(idle=not pending)
                 if recording:
                     # dispatch wall time, not completion: nothing here
                     # blocks on the device (async dispatch stays async)

@@ -590,6 +590,12 @@ class Telemetry:
                 "live_slots": sub.live_bytes() if sub is not None
                 else None,
                 "utilization": util,
+                # serving-plane gauges (continuous driver): batch rows
+                # currently held and fraction of the page extent in use
+                "inflight": self.registry.gauge("serve_inflight",
+                                                tenant=t),
+                "page_occupancy": self.registry.gauge("page_occupancy",
+                                                      tenant=t),
                 "queue_age": self.registry.percentiles(
                     "queue_age_cycles", tenant=t),
                 "violations": vio["tenants"].get(t, {}),

@@ -50,11 +50,25 @@ def _kv_index_map(b, p, page_table, seq_lens, base, mask):
     return (phys, 0, 0, 0)
 
 
-def _q_index_map(b, p, page_table, seq_lens, base, mask):
+def _kv_index_map_mapped(b, p, page_table, seq_lens, base, mask, page_map,
+                         *, phys_mask):
+    """Virtual-extent variant: the fence clamps the (untrusted) id into
+    the tenant's *virtual* page extent, then the manager-owned page_map
+    translates virtual -> physical — still inside the index map, before
+    the DMA descriptor forms.  The translated id gets a second, static
+    clamp to the physical pool (defense in depth: the map itself is a
+    trusted operand, but a stale row costs a wrong-page read, never an
+    OOB one)."""
+    virt = _fence(page_table[b, p], base[b], mask[b])
+    phys = jax.lax.bitwise_and(page_map[virt], phys_mask)
+    return (phys, 0, 0, 0)
+
+
+def _q_index_map(b, p, page_table, seq_lens, base, mask, *extra):
     return (b, 0, 0)
 
 
-def _o_index_map(b, p, page_table, seq_lens, base, mask):
+def _o_index_map(b, p, page_table, seq_lens, base, mask, *extra):
     return (b, 0, 0)
 
 
@@ -104,21 +118,49 @@ def _kernel(page_table, seq_lens, base, mask,   # scalar prefetch (SMEM)
         o_ref[0] = o.reshape(H, D).astype(o_ref.dtype)
 
 
+def _kernel_mapped(page_table, seq_lens, base, mask, page_map,
+                   q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    """Same body — page_map only steers the BlockSpec index maps."""
+    _kernel(page_table, seq_lens, base, mask,
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fenced_paged_attention(q, k_pages, v_pages, page_table, seq_lens,
-                           fence_base, fence_mask, *, interpret=True):
-    """q (B,H,D); pools (P,page,KH,D); returns (B,H,D)."""
+                           fence_base, fence_mask, page_map=None, *,
+                           interpret=True):
+    """q (B,H,D); pools (P,page,KH,D); returns (B,H,D).
+
+    ``page_map`` (n_virt,) int32, optional: page_table then holds
+    *virtual* ids — fenced into the tenant's virtual extent, translated
+    through the manager-owned map, and statically clamped to the pool
+    (which must be pow2-sized) inside the index map.  This is the
+    serve-path layout behind elastic zero-copy compaction."""
     B, H, D = q.shape
     P_total, page, KH, D2 = k_pages.shape
     max_pages = page_table.shape[1]
 
+    if page_map is not None:
+        if P_total & (P_total - 1):
+            raise ValueError(
+                f"page_map translation needs a pow2 physical pool, "
+                f"got P_total={P_total}")
+        num_scalar = 5
+        kernel_fn = _kernel_mapped
+        kv_map = functools.partial(_kv_index_map_mapped,
+                                   phys_mask=P_total - 1)
+    else:
+        num_scalar = 4
+        kernel_fn = _kernel
+        kv_map = _kv_index_map
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=num_scalar,
         grid=(B, max_pages),
         in_specs=[
             pl.BlockSpec((1, H, D), _q_index_map),
-            pl.BlockSpec((1, page, KH, D), _kv_index_map),
-            pl.BlockSpec((1, page, KH, D), _kv_index_map),
+            pl.BlockSpec((1, page, KH, D), kv_map),
+            pl.BlockSpec((1, page, KH, D), kv_map),
         ],
         out_specs=pl.BlockSpec((1, H, D), _o_index_map),
         scratch_shapes=[
@@ -129,15 +171,17 @@ def fenced_paged_attention(q, k_pages, v_pages, page_table, seq_lens,
     )
 
     kernel = pl.pallas_call(
-        _kernel,
+        kernel_fn,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )
-    return kernel(page_table.astype(jnp.int32),
-                  seq_lens.astype(jnp.int32),
-                  fence_base.astype(jnp.int32),
-                  fence_mask.astype(jnp.int32),
-                  q, k_pages, v_pages)
+    scalars = [page_table.astype(jnp.int32),
+               seq_lens.astype(jnp.int32),
+               fence_base.astype(jnp.int32),
+               fence_mask.astype(jnp.int32)]
+    if page_map is not None:
+        scalars.append(page_map.astype(jnp.int32))
+    return kernel(*scalars, q, k_pages, v_pages)

@@ -24,9 +24,10 @@ def _on_tpu() -> bool:
 
 
 def paged_attention(q, k_pages, v_pages, page_table, seq_lens,
-                    fence_base, fence_mask):
+                    fence_base, fence_mask, page_map=None):
     return _paged(q, k_pages, v_pages, page_table, seq_lens,
-                  fence_base, fence_mask, interpret=not _on_tpu())
+                  fence_base, fence_mask, page_map,
+                  interpret=not _on_tpu())
 
 
 def gather_rows(table, idx, fence_base, fence_mask):

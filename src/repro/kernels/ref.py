@@ -18,13 +18,19 @@ def fence_ref(idx, base, mask):
 
 
 def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
-                        fence_base, fence_mask):
-    """q (B,H,D); pools (P,page,KH,D) -> (B,H,D).  float32 math."""
+                        fence_base, fence_mask, page_map=None):
+    """q (B,H,D); pools (P,page,KH,D) -> (B,H,D).  float32 math.
+
+    With ``page_map`` the table holds virtual ids: fence into the virtual
+    extent, translate through the map, clamp to the (pow2) pool."""
     B, H, D = q.shape
     P_total, page, KH, _ = k_pages.shape
     G = H // KH
     max_pages = page_table.shape[1]
     phys = fence_ref(page_table, fence_base[:, None], fence_mask[:, None])
+    if page_map is not None:
+        phys = jnp.take(page_map.astype(jnp.int32), phys,
+                        axis=0) & (P_total - 1)
     k = k_pages[phys]                    # (B, max_pages, page, KH, D)
     v = v_pages[phys]
     S = max_pages * page

@@ -63,12 +63,15 @@ def _pcts(d: Dict[str, float], unit: str = "") -> str:
 
 def format_tenants(report: Dict[str, Any]) -> List[str]:
     lines = [f"{'tenant':<18}{'state':<12}{'policy':<9}{'cls':>4}{'wt':>3}"
-             f"{'extent':>15}{'util':>6}{'q50':>5}{'q99':>5}{'viol':>6}"]
+             f"{'extent':>15}{'util':>6}{'infl':>5}{'pg%':>5}"
+             f"{'q50':>5}{'q99':>5}{'viol':>6}"]
     short_cls = {"latency_critical": "lc", "best_effort": "be"}
     for name, row in sorted(report.get("tenants", {}).items()):
         part = row.get("partition", {})
         extent = f"[{part.get('base', 0)},{part.get('base', 0) + part.get('size', 0)})"
         util = row.get("utilization")
+        infl = row.get("inflight")
+        pg = row.get("page_occupancy")
         age = row.get("queue_age", {})
         cls = short_cls.get(row.get("class"), "-")
         lines.append(
@@ -76,6 +79,8 @@ def format_tenants(report: Dict[str, Any]) -> List[str]:
             f"{row.get('policy', '?'):<9}{cls:>4}{row.get('weight', 1):>3}"
             f"{extent:>15}"
             f"{('-' if util is None else f'{util:.2f}'):>6}"
+            f"{('-' if infl is None else f'{int(infl)}'):>5}"
+            f"{('-' if pg is None else f'{pg:.0%}'):>5}"
             f"{age.get('p50', 0.0):>5g}{age.get('p99', 0.0):>5g}"
             f"{row.get('violations', {}).get('total', 0):>6}")
     return lines

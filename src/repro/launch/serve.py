@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.arena import PagePool
 from repro.core.elastic import ElasticError, ResizeEvent
 from repro.core.fence import FenceParams, FencePolicy
 from repro.core.manager import GuardianManager
@@ -71,6 +72,7 @@ from repro.launch.steps import (
     split_cache_pool,
 )
 from repro.models import get_model
+from repro.models import kvcache as KV
 from repro.models.guard import GuardSpec
 
 #: The engine's own manager tenant: owns the scratch partition where idle
@@ -89,6 +91,14 @@ class Request:
     slot: int                      # absolute slot in the shared pool
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: paged mode: the request's *virtual* page ids (allocated at join
+    #: time from the tenant's page extent, freed when the row leaves)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    #: per-request generation budget (continuous driver; None = the
+    #: driver-level ``max_new_tokens``)
+    max_new: Optional[int] = None
+    #: earliest drain cycle this request may join (arrival-trace replay)
+    arrive: int = 0
 
 
 @dataclasses.dataclass
@@ -116,18 +126,52 @@ class _RunState:
     decode_sig: Optional[tuple] = None
 
 
+@dataclasses.dataclass
+class _ContState:
+    """One engine's in-flight state under the continuous driver
+    (:func:`serve_continuous`): requests join and leave the fused step at
+    drain-cycle boundaries, so a finished short request's row refills
+    immediately instead of idling until the batch's longest request
+    completes.  All sequence bookkeeping (page tables, seq lens, budgets)
+    is host-authoritative — rebuilt into the meta operand every cycle —
+    because a cycle may run *both* a prefill (joiners) and a decode
+    (continuers) and the two steps' returned metas each advance every
+    row."""
+
+    rows: List[Optional[Request]]      # B entries; None = idle row
+    left: np.ndarray                   # (B,) tokens still to emit
+    lens: np.ndarray                   # (B,) host-authoritative seq lens
+    nxt: jax.Array                     # (B,) device next-token operand
+    #: per-cycle (tokens (B,) device array, row-owner rids) — tokens stay
+    #: on device until _cont_finalize materializes the whole trail in one
+    #: transfer
+    trail: List[tuple] = dataclasses.field(default_factory=list)
+    default_new: int = 16
+    cycles: int = 0
+    prefills: int = 0
+    decodes: int = 0
+    served: List[int] = dataclasses.field(default_factory=list)
+
+
 def make_shared_manager(n_engines: int, max_batch: int = 8,
                         policy: FencePolicy = FencePolicy.BITWISE,
+                        paged: bool = False, max_len: int = 256,
                         **kw) -> GuardianManager:
     """A GuardianManager sized so ``n_engines`` engines (each with its
     scratch partition plus up to one pool's worth of tenant slots) share
     one global slot space — the multi-engine fused-decode configuration.
     A guarded shared engine always fences, even while one tenant runs
     (``standalone_fast_path=False``), so generations are bit-identical
-    solo vs shared."""
+    solo vs shared.
+
+    ``paged=True`` sizes the slot space in *virtual pages* instead of
+    sequence slots (one slot per page — see ``ServeEngine(paged=True)``):
+    co-hosted paged engines carve tenant page extents out of one global
+    page space backing one shared physical page pool."""
+    unit = max(max_len // KV.PAGE_SIZE, 1) if paged else 1
     return GuardianManager(
-        total_slots=n_engines * 2 * _pow2(max_batch), policy=policy,
-        standalone_fast_path=False, **kw)
+        total_slots=n_engines * 2 * _pow2(max_batch) * unit,
+        policy=policy, standalone_fast_path=False, **kw)
 
 
 class ServeEngine:
@@ -154,26 +198,46 @@ class ServeEngine:
                  manager: Optional[GuardianManager] = None,
                  name: Optional[str] = None,
                  jit_steps: bool = True,
-                 telemetry: bool = True):
+                 telemetry: bool = True,
+                 paged: bool = False,
+                 max_inflight: Optional[int] = None,
+                 temperature: float = 0.0,
+                 top_k: int = 0):
         self.cfg = cfg
         self.api = get_model(cfg)
         self.guard_enabled = guard
         self.max_batch = max_batch
         self.max_len = max_len
+        self.paged = paged
+        self.max_inflight = min(max_inflight or max_batch, max_batch)
+        self.temperature = temperature
+        self.top_k = top_k
+        if paged and cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                "paged serve mode needs the global paged KV layout "
+                f"(dense/moe transformers); {cfg.family!r} engines use "
+                "the slab layout")
+        #: paged mode: virtual pages per request (= max_len / page size)
+        self.pages_per_req = max(max_len // KV.PAGE_SIZE, 1)
+        slot_unit = self.pages_per_req if paged else 1
         self.params = self.api.init(jax.random.PRNGKey(seed))
         if manager is None:
             # pool = 2x the batch slots: the upper half is the engine's
             # scratch partition where idle batch rows park.
             # standalone_fast_path=False: a guarded engine always fences,
             # even with a single tenant (bit-identical solo vs shared).
-            n_slots = 2 * _pow2(max_batch)
+            n_slots = 2 * _pow2(max_batch) * slot_unit
             self.manager = GuardianManager(
                 total_slots=n_slots, policy=policy,
                 standalone_fast_path=False,
                 quarantine_policy=quarantine_policy,
                 jit_trusted=jit_steps,
                 telemetry=telemetry)
-            scratch_slots = n_slots // 2
+            # paged: parked rows only need ONE request's worth of scratch
+            # page ids (they all resolve to the allocator-owned garbage
+            # page); slab: half the pool is the per-row scratch slots
+            scratch_slots = _pow2(self.pages_per_req) if paged \
+                else n_slots // 2
             self.engine_tenant = ENGINE_TENANT
         else:
             # fencing, containment and step compilation are manager-wide
@@ -189,7 +253,8 @@ class ServeEngine:
                     "on a co-hosted ServeEngine")
             self.manager = manager
             n_slots = manager.bounds.total_slots
-            scratch_slots = _pow2(max_batch)
+            scratch_slots = _pow2(self.pages_per_req) if paged \
+                else _pow2(max_batch)
             policy = manager.policy
             if name is None:
                 name = "e%d" % sum(
@@ -203,22 +268,42 @@ class ServeEngine:
         # model shape share one KV pool — globally-partitioned slot ids
         # address it directly through the shared fence table, and the
         # per-engine footprint does not grow with the engine count.
-        pool_key = (f"{cfg.name}:{cfg.family}:{cfg.n_layers}x"
-                    f"{cfg.d_model}v{cfg.vocab}:s{n_slots}:l{max_len}")
-        self._steps = build_trusted_serve_steps(self.api, pool_key)
+        if paged:
+            # Geometry-only pool key: the global page pool is one
+            # (L, P, page, KH, D) tensor — engines serving *different*
+            # model shapes with the same KV geometry share it (and the
+            # manager drain), keeping model identity in the step key so
+            # their step symbols stay distinct.
+            self._n_phys = _pow2(n_slots)
+            pool_key = (f"paged:L{cfg.decoder_layers}:kh{cfg.n_kv_heads}:"
+                        f"d{cfg.head_dim}:pg{KV.PAGE_SIZE}:"
+                        f"P{self._n_phys}:f32")
+            step_key = (f"{cfg.name}:{cfg.family}:{cfg.n_layers}x"
+                        f"{cfg.d_model}v{cfg.vocab}:{pool_key}")
+        else:
+            pool_key = (f"{cfg.name}:{cfg.family}:{cfg.n_layers}x"
+                        f"{cfg.d_model}v{cfg.vocab}:s{n_slots}:l{max_len}")
+            step_key = None
+        self._steps = build_trusted_serve_steps(
+            self.api, pool_key, step_key=step_key,
+            temperature=temperature, top_k=top_k)
         # A later co-hosted engine adopts the already-registered pool:
         # build its cache with a single-slot pool instead (the meta half —
         # slot ids, seq lens, page tables — is slot-count independent), so
         # the dominant allocation happens once per pool, not once per
         # engine.
-        cache_slots = 1 if self._steps.pool_name in self.manager.arenas \
-            else n_slots
-        if cfg.family == "ssm":
-            cache = self.api.init_cache(max_batch, slots=cache_slots)
+        adopted = self._steps.pool_name in self.manager.arenas
+        if paged:
+            cache = KV.init_global_kv_cache(
+                cfg, max_batch, max_len, 1 if adopted else self._n_phys,
+                dtype=jnp.float32)
+        elif cfg.family == "ssm":
+            cache = self.api.init_cache(max_batch,
+                                        slots=1 if adopted else n_slots)
         else:
             cache = self.api.init_cache(max_batch, max_len,
                                         dtype=jnp.float32,
-                                        slots=cache_slots)
+                                        slots=1 if adopted else n_slots)
         pool, self._meta = split_cache_pool(cache)
         self._client = self.manager.register_tenant(self.engine_tenant,
                                                     scratch_slots)
@@ -235,10 +320,18 @@ class ServeEngine:
         # idempotent: a co-hosted engine adopts the existing pool (its
         # single-slot throwaway tensors are dropped before any write)
         self._pool = self._steps.register(self.manager, pool)
+        if paged and self._pool.pages is None:
+            # one virt->phys allocator per pool arena, shared by every
+            # co-hosted engine; virt space = the manager's page-granular
+            # slot space, phys space = the pool tensor's page axis
+            self._pool.pages = PagePool(self._n_phys, n_slots)
         self.rejected: List[int] = []     # rids dropped by quarantine
         self._requests: List[Request] = []
         self._rid = 0
         self.decode_steps = 0
+        #: sampled decode steps thread a fresh PRNG key per cycle
+        self._sample_key = jax.random.PRNGKey(seed ^ 0x5EED) \
+            if temperature > 0 else None
         # evictions fired *during* run() must survive the run-end cache
         # commit: the committed cache is re-scrubbed from this list
         self._in_run = False
@@ -295,7 +388,14 @@ class ServeEngine:
                                      weight=weight,
                                      tenant_class=tenant_class)
         self._tenants.add(name)
-        return self.manager.bounds.lookup(name)
+        part = self.manager.bounds.lookup(name)
+        if self.paged:
+            # the tenant's partition is a *virtual page* extent: back it
+            # with physical pages now (hand-over is all-or-nothing) and
+            # tell the elastic plane resizes need no copy step
+            self._pool.pages.bind_extent(name, part.base, part.size)
+            self.manager.elastic.mark_virtual(name)
+        return part
 
     def quarantine_tenant(self, name: str, reason: str = "") -> List[int]:
         """Reject the tenant via the manager's quarantine (the subscription
@@ -328,6 +428,28 @@ class ServeEngine:
             or ev.tenant_id == self.engine_tenant
         if not mine:
             return
+        if self.paged:
+            # zero-copy resize: the extent is virtual pages — rewrite the
+            # PagePool map (bytes stay in their physical pages) and the
+            # in-flight requests' virtual ids; no relocation step exists
+            pages = self._pool.pages
+            if ev.tenant_id != self.engine_tenant:
+                if ev.moved:
+                    pages.rebase_extent(ev.tenant_id, ev.new_base)
+                    delta = ev.new_base - ev.old_base
+                    for r in self._requests:
+                        if r.tenant == ev.tenant_id and not r.done \
+                                and r.pages:
+                            r.pages = [p + delta for p in r.pages]
+                if ev.new_size > ev.old_size:
+                    pages.bind_extent(ev.tenant_id, ev.new_base,
+                                      ev.new_size)
+                elif ev.new_size < ev.old_size:
+                    pages.shrink_extent(ev.tenant_id, ev.new_size)
+            else:
+                self._scratch = self.manager.bounds.lookup(
+                    self.engine_tenant)
+            return
         if ev.moved:
             size = min(ev.old_size, ev.new_size)
             name = (f"elastic.pool[{self._steps.pool_name}]:"
@@ -356,7 +478,22 @@ class ServeEngine:
             # the same whole-pool scrub.  This zeroing is the KV-leak
             # barrier — the reclaimed slots must hand over empty.
             part = self.manager.bounds.lookup(tenant_id)
-            if self._in_run:
+            if self.paged:
+                # translate the virtual extent to its physical pages
+                # BEFORE releasing them (the map rows zero on release),
+                # then zero those pages — the KV-leak barrier for the
+                # global pool
+                pages = self._pool.pages
+                pm = pages.page_map
+                phys = tuple(int(pm[v]) for v in
+                             range(part.base, part.base + part.size)
+                             if int(pm[v]))
+                pages.release_extent(tenant_id)
+                if self._in_run:
+                    self._pending_scrubs.append(("phys", phys))
+                else:
+                    self.cache = _scrub_phys_pages(self.cache, phys)
+            elif self._in_run:
                 # run() holds a newer local cache that overwrites
                 # self.cache at run-end (and, under donation, may have
                 # consumed these very buffers) — scrub the committed
@@ -371,16 +508,34 @@ class ServeEngine:
                               if r.done or r.tenant != tenant_id]
             self.rejected.extend(dropped)
 
-    def submit(self, tenant: str, prompt: np.ndarray) -> int:
+    def submit(self, tenant: str, prompt: np.ndarray,
+               max_new: Optional[int] = None, arrive: int = 0) -> int:
         """Queue one generation request; returns the request id keyed in
         :meth:`run`'s result dict.  Raises if the tenant is quarantined.
         Claims a KV slot from the tenant's pool partition, growing it
-        through the elastic control plane when hard-full."""
+        through the elastic control plane when hard-full.
+
+        ``max_new`` (continuous driver) caps this request's generation
+        below the driver-wide budget; ``arrive`` is the earliest drain
+        cycle the request may join the batch (arrival-trace replay).  In
+        paged mode no slot is claimed here — virtual pages are allocated
+        when the request joins a batch row, so a queued request costs
+        nothing until it runs."""
         self.manager.quarantine.check_admission(tenant, "submit")
         part = self.manager.bounds.lookup(tenant)
         # a manager-registered tenant becomes this engine's to serve (and
         # therefore to scrub on eviction) the moment it submits here
         self._tenants.add(tenant)
+        if self.paged:
+            rid = self._rid
+            self._rid += 1
+            self._requests.append(Request(
+                tenant=tenant, rid=rid, prompt=np.asarray(prompt),
+                slot=-1, max_new=max_new, arrive=arrive))
+            tel = self.manager.telemetry
+            if tel.enabled:
+                tel.registry.inc("requests", tenant=tenant)
+            return rid
         used = {r.slot for r in self._requests if not r.done
                 and r.tenant == tenant}
         free = [s for s in range(part.base, part.end) if s not in used]
@@ -433,6 +588,21 @@ class ServeEngine:
         # the engine default (the homogeneous path stays bit-identical)
         mixed = bool((pol != self.policy.code).any())
         row_policy = jnp.asarray(pol) if mixed else None
+        if self.paged:
+            # kv space = per-row *virtual page* extents (the fence-table
+            # rows ARE page extents in paged mode); virt->phys goes
+            # through the manager-owned map, then the "page" clamp keeps
+            # even a corrupted map entry inside the pool tensor
+            return GuardSpec(
+                policy=self.policy,
+                vocab=FenceParams(base=0, size=_pow2(self.cfg.vocab)),
+                kv=slot_params,
+                expert=(FenceParams(base=0, size=_pow2(
+                    self.cfg.moe.num_experts)) if self.cfg.moe else None),
+                page=FenceParams(base=0, size=self._n_phys),
+                row_policy=row_policy,
+                page_map=jnp.asarray(self._pool.pages.page_map),
+            )
         pages = self.cache.kv.pages_per_slot if hasattr(self.cache, "kv") \
             else (self.cache.pages_per_slot if hasattr(self.cache, "k")
                   else 1)
@@ -495,7 +665,11 @@ class ServeEngine:
         """Prefill all pending, then decode until done/limit.  Every step
         is a LaunchRequest drained by the manager's scheduler.  Engines
         sharing a manager should run through :func:`serve_engines`
-        instead, so their steps fuse."""
+        (slab/lockstep) or :func:`serve_continuous` (paged) instead, so
+        their steps share drains."""
+        if self.paged:
+            return serve_continuous([self],
+                                    max_new_tokens=max_new_tokens)[0]
         return serve_engines([self], max_new_tokens=max_new_tokens)[0]
 
     # -- lockstep phases (driven by serve_engines) --------------------- #
@@ -512,7 +686,7 @@ class ServeEngine:
         slot_ids = np.full((B,), self._scratch.base, np.int32)
         for i, r in enumerate(rows):
             slot_ids[i] = r.slot
-        meta = self._meta_with_slots(jnp.asarray(slot_ids))
+        meta = _reset_seq_lens(self._meta_with_slots(jnp.asarray(slot_ids)))
         guard = self._guard_for_rows(rows + [None] * (B - len(rows)))
 
         if self.cfg.family == "encdec":
@@ -571,9 +745,7 @@ class ServeEngine:
         # a mid-run eviction was deferred to here: re-apply to the cache
         # we just committed (zeroing is idempotent, nothing re-registers
         # inside a single-threaded run)
-        for base, size in self._pending_scrubs:
-            self.cache = _scrub_slots(self.cache, base, size)
-        self._pending_scrubs.clear()
+        self._apply_pending_scrubs()
         # rows whose tenant was quarantined/evicted mid-run were already
         # dropped + recorded in self.rejected: they must not also be
         # reported as served (their clamped generations are discarded)
@@ -584,6 +756,14 @@ class ServeEngine:
                 r.done = True
                 out[r.rid] = r.generated
         return out
+
+    def _apply_pending_scrubs(self) -> None:
+        for item in self._pending_scrubs:
+            if item and item[0] == "phys":
+                self.cache = _scrub_phys_pages(self.cache, item[1])
+            else:
+                self.cache = _scrub_slots(self.cache, *item)
+        self._pending_scrubs.clear()
 
     def _meta_with_slots(self, slot_ids):
         c = self._meta
@@ -596,6 +776,251 @@ class ServeEngine:
                 return dataclasses.replace(c, kv=kv, state=st)
             return dataclasses.replace(c, kv=kv)
         return c
+
+    # -- continuous batching (paged mode; serve_continuous drives) ----- #
+    def _admissible(self, tenant: str) -> bool:
+        state = self.manager.quarantine.state_of(tenant)
+        return state is None or state.admissible
+
+    def _used_pages(self, tenant: str) -> set:
+        used: set = set()
+        for r in self._requests:
+            if r.tenant == tenant and not r.done:
+                used.update(r.pages)
+        return used
+
+    def _alloc_pages(self, tenant: str) -> Optional[List[int]]:
+        """``pages_per_req`` free virtual ids from the tenant's extent,
+        growing through the elastic plane once when full (in paged mode a
+        grow — even a relocating one — is host bookkeeping only, so it is
+        safe at any drain-cycle boundary)."""
+        part = self.manager.bounds.lookup(tenant)
+        used = self._used_pages(tenant)
+        free = [v for v in range(part.base, part.end) if v not in used]
+        if len(free) < self.pages_per_req:
+            try:
+                part = self.manager.elastic.grow(tenant)
+            except (ElasticError, OutOfArenaMemory):
+                return None
+            used = self._used_pages(tenant)
+            free = [v for v in range(part.base, part.end)
+                    if v not in used]
+            if len(free) < self.pages_per_req:
+                return None
+        return free[:self.pages_per_req]
+
+    def _cont_begin(self, max_new_tokens: int) -> _ContState:
+        self._in_run = True
+        B = self.max_batch
+        return _ContState(rows=[None] * B,
+                          left=np.zeros((B,), np.int64),
+                          lens=np.zeros((B,), np.int64),
+                          nxt=jnp.zeros((B,), jnp.int32),
+                          default_new=max_new_tokens)
+
+    def _cont_leave(self, st: _ContState) -> None:
+        """Cycle boundary: rows whose request exhausted its budget (or
+        whose tenant lost admissibility) leave — their virtual pages
+        return to the tenant's free pool immediately."""
+        for i, r in enumerate(st.rows):
+            if r is None:
+                continue
+            if not self._admissible(r.tenant):
+                r.pages = []
+                st.rows[i] = None
+                continue
+            if st.left[i] <= 0:
+                r.pages = []
+                r.done = True
+                st.served.append(r.rid)
+                st.rows[i] = None
+
+    def _cont_join(self, st: _ContState) -> List[int]:
+        """Refill idle rows from the admission queue (FIFO, gated on the
+        request's arrival cycle and page availability).  Pages are
+        allocated here — a queued request costs nothing until it joins.
+        Returns the joined row indices (this cycle's prefill set)."""
+        active = sum(1 for r in st.rows if r is not None)
+        waiting = [r for r in self._requests
+                   if not r.done and not r.pages
+                   and r.arrive <= st.cycles
+                   and self._admissible(r.tenant)]
+        joiners: List[int] = []
+        wi = 0
+        for i in range(self.max_batch):
+            if st.rows[i] is not None or active >= self.max_inflight:
+                continue
+            while wi < len(waiting):
+                r = waiting[wi]
+                wi += 1
+                pages = self._alloc_pages(r.tenant)
+                if pages is None:
+                    continue    # tenant page-full: later arrivals may fit
+                r.pages = pages
+                st.rows[i] = r
+                st.left[i] = r.max_new if r.max_new is not None \
+                    else st.default_new
+                st.lens[i] = 0
+                joiners.append(i)
+                active += 1
+                break
+        # allocator invariant: active requests never share a page, and
+        # every page stays inside its owner's virtual extent (cheap host
+        # ints — this is the join/leave-churn aliasing check)
+        seen: Dict[int, str] = {}
+        for r in st.rows:
+            if r is None:
+                continue
+            part = self.manager.bounds.lookup(r.tenant)
+            for p in r.pages:
+                assert part.base <= p < part.end, \
+                    f"page {p} outside {r.tenant} extent"
+                assert p not in seen, \
+                    f"page {p} aliased: {seen[p]} vs {r.tenant}"
+                seen[p] = r.tenant
+        return joiners
+
+    def _cont_meta(self, st: _ContState, active: set):
+        """Host-authoritative meta for one step: rows in ``active`` carry
+        their real page table + seq len; every other row parks on the
+        engine's scratch page ids (which the PagePool maps to the
+        allocator-owned garbage page — parked writes land nowhere)."""
+        B, P = self.max_batch, self.pages_per_req
+        scratch = [self._scratch.base + (j % self._scratch.size)
+                   for j in range(P)]
+        pt = np.empty((B, P), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(st.rows):
+            if r is not None and i in active:
+                pt[i] = r.pages
+                lens[i] = int(st.lens[i])
+            else:
+                pt[i] = scratch
+        return dataclasses.replace(
+            self._meta, page_table=jnp.asarray(pt),
+            slot_ids=jnp.zeros((B,), jnp.int32),
+            seq_lens=jnp.asarray(lens))
+
+    def _cont_dispatch(self, st: _ContState, joiners: List[int]):
+        """Enqueue this cycle's steps: one prefill covering the joiner
+        rows and one decode covering the continuing rows (each step parks
+        the other set on scratch pages, so their pool writes are
+        disjoint and dispatch order is irrelevant).  Returns the result
+        handles + row sets for :meth:`_cont_finish`."""
+        continuers = [i for i, r in enumerate(st.rows)
+                      if r is not None and i not in set(joiners)]
+        pre_req = dec_req = None
+        plen = 0
+        if joiners:
+            # per-step guard: rows parked for THIS step fence to the
+            # engine's scratch extent (whose virtual ids resolve to the
+            # garbage page) — fencing them with their tenant's extent
+            # would wrap the scratch ids INTO the tenant's live pages
+            guard = self._guard_for_rows(
+                [r if i in set(joiners) else None
+                 for i, r in enumerate(st.rows)])
+            plen = max(len(st.rows[i].prompt) for i in joiners)
+            toks = np.zeros((self.max_batch, plen), np.int32)
+            for i in joiners:
+                toks[i, :len(st.rows[i].prompt)] = st.rows[i].prompt
+            pre_req = self._client.launch_kernel(
+                self._steps.prefill_name,
+                args=(self.params, self._cont_meta(st, set(joiners)),
+                      {"tokens": jnp.asarray(toks)}, guard))
+            st.prefills += 1
+        if continuers:
+            guard = self._guard_for_rows(
+                [r if i in set(continuers) else None
+                 for i, r in enumerate(st.rows)])
+            meta = self._cont_meta(st, set(continuers))
+            if self._sample_key is not None:
+                self._sample_key, sub = jax.random.split(self._sample_key)
+                x = (st.nxt, sub)
+            else:
+                x = st.nxt
+            dec_req = self._client.launch_kernel(
+                self._steps.decode_name,
+                args=(self.params, meta, x, guard))
+            st.decodes += 1
+            self.decode_steps += 1
+        return pre_req, dec_req, joiners, continuers, plen
+
+    def _cont_finish(self, st: _ContState, pre_req, dec_req,
+                     joiners: List[int], continuers: List[int],
+                     plen: int) -> None:
+        """Merge the cycle's results on device (no host sync), record the
+        emitted tokens, advance budgets/lens."""
+        if pre_req is not None and dec_req is not None:
+            _, pre_nxt = pre_req.result
+            _, dec_nxt = dec_req.result
+            mask = np.zeros((self.max_batch,), bool)
+            mask[joiners] = True
+            nxt = jnp.where(jnp.asarray(mask), pre_nxt, dec_nxt)
+        elif pre_req is not None:
+            _, nxt = pre_req.result
+        elif dec_req is not None:
+            _, nxt = dec_req.result
+        else:
+            st.cycles += 1
+            return
+        emitting = set(joiners) | set(continuers)
+        owners = tuple(
+            st.rows[i].rid if i in emitting and st.rows[i] is not None
+            else None for i in range(self.max_batch))
+        st.trail.append((nxt, owners))
+        st.nxt = nxt
+        for i in joiners:
+            # the device wrote the *padded* wave length (lockstep
+            # semantics: pad tokens are cached and attended)
+            st.lens[i] = plen
+            st.left[i] -= 1
+        for i in continuers:
+            st.lens[i] += 1
+            st.left[i] -= 1
+        st.cycles += 1
+
+    def _cont_waiting(self, st: _ContState) -> bool:
+        return any(not r.done and not r.pages
+                   and self._admissible(r.tenant)
+                   for r in self._requests)
+
+    def _cont_gauges(self, st: _ContState) -> None:
+        tel = self.manager.telemetry
+        if not tel.enabled:
+            return
+        inflight: Dict[str, int] = {}
+        for r in st.rows:
+            if r is not None:
+                inflight[r.tenant] = inflight.get(r.tenant, 0) + 1
+        for t in self._tenants:
+            tel.registry.set_gauge("serve_inflight",
+                                   float(inflight.get(t, 0)), tenant=t)
+            try:
+                part = self.manager.bounds.lookup(t)
+            except Exception:
+                continue
+            tel.registry.set_gauge(
+                "page_occupancy",
+                len(self._used_pages(t)) / max(part.size, 1), tenant=t)
+        pages = self._pool.pages
+        if pages is not None:
+            tel.registry.set_gauge("pool_page_occupancy",
+                                   pages.occupancy())
+
+    def _cont_finalize(self, st: _ContState) -> Dict[int, List[int]]:
+        self._in_run = False
+        self._apply_pending_scrubs()
+        if st.trail:
+            # one transfer materializes every cycle's emitted tokens
+            toks = np.asarray(jnp.stack([t for t, _ in st.trail]))
+            by_rid = {r.rid: r for r in self._requests}
+            for c, (_, owners) in enumerate(st.trail):
+                for i, rid in enumerate(owners):
+                    if rid is not None and rid in by_rid:
+                        by_rid[rid].generated.append(int(toks[c, i]))
+        by_rid = {r.rid: r for r in self._requests}
+        return {rid: by_rid[rid].generated for rid in st.served
+                if rid in by_rid}
 
 
 def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
@@ -613,6 +1038,9 @@ def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
     if any(e.manager is not mgr for e in engines[1:]):
         raise ValueError("serve_engines needs engines sharing one "
                          "GuardianManager (see make_shared_manager)")
+    if any(e.paged for e in engines):
+        raise ValueError("paged engines batch per-request — drive them "
+                         "with serve_continuous")
     # elastic resizes that move data defer for the whole run: the staged
     # guards / slot-id operands of in-flight steps must never go stale
     mgr.elastic.hold()
@@ -633,8 +1061,110 @@ def serve_engines(engines: List[ServeEngine], max_new_tokens: int = 16
             e._in_run = False
 
 
+def serve_continuous(engines: List["ServeEngine"],
+                     max_new_tokens: int = 16
+                     ) -> List[Dict[int, List[int]]]:
+    """Per-request continuous-batching driver for *paged* engines sharing
+    one GuardianManager.
+
+    Every drain cycle each engine (1) retires rows whose request
+    exhausted its budget — their virtual pages free immediately — and
+    (2) refills idle rows from the admission queue (FIFO, arrival-gated,
+    capped by ``max_inflight``).  A cycle with joiners dispatches a
+    prefill for the joining rows *and* a decode for the continuing rows;
+    the two steps park each other's rows on scratch pages (all mapping to
+    the allocator-owned garbage page), so their pool writes are disjoint
+    and the merged next-token vector is a single on-device ``where`` —
+    the loop never syncs to the host.  All engines' steps ride ONE
+    manager drain per cycle.
+
+    Unlike the lockstep driver this one takes no elastic hold: paged
+    resizes and compactions are page-table rewrites (host bookkeeping,
+    zero relocation copy steps), so they are safe at every cycle
+    boundary.  Returns one ``rid -> tokens`` dict per engine, in order;
+    per-request generations are bit-identical to a solo lockstep run of
+    the same prompt (uniform prompt padding assumed, as everywhere)."""
+    if not engines:
+        return []
+    mgr = engines[0].manager
+    if any(e.manager is not mgr for e in engines[1:]):
+        raise ValueError("serve_continuous needs engines sharing one "
+                         "GuardianManager (see make_shared_manager)")
+    if not all(e.paged for e in engines):
+        raise ValueError("serve_continuous drives paged engines; slab "
+                         "engines lockstep through serve_engines")
+    states = [e._cont_begin(max_new_tokens) for e in engines]
+    stalled = 0
+    try:
+        while True:
+            handles = []
+            busy = False
+            dispatched = False
+            eligible_waiting = False
+            for e, st in zip(engines, states):
+                e._cont_leave(st)
+                joiners = e._cont_join(st)
+                handles.append((e, st) + e._cont_dispatch(st, joiners))
+                if handles[-1][2] is not None or handles[-1][3] is not None:
+                    dispatched = True
+                if any(r is not None for r in st.rows) \
+                        or e._cont_waiting(st):
+                    busy = True
+                eligible_waiting = eligible_waiting or any(
+                    not r.done and not r.pages and r.arrive <= st.cycles
+                    and e._admissible(r.tenant) for r in e._requests)
+            if not busy:
+                break
+            # eligible requests exist but nothing could join or run for
+            # several consecutive cycles: every tenant is page-full with
+            # no active rows to free them — fail loudly, don't spin
+            stalled = stalled + 1 if (not dispatched
+                                      and eligible_waiting) else 0
+            if stalled > 3:
+                raise RuntimeError(
+                    "serve_continuous stalled: waiting requests but no "
+                    "tenant can allocate pages (extents too small?)")
+            mgr.run_queued()
+            for e, st, pre, dec, joiners, continuers, plen in handles:
+                e._cont_finish(st, pre, dec, joiners, continuers, plen)
+                e._cont_gauges(st)
+        return [e._cont_finalize(st) for e, st in zip(engines, states)]
+    finally:
+        for e in engines:
+            e._in_run = False
+
+
 def _pow2(n: int) -> int:
     return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
+
+
+def _reset_seq_lens(meta):
+    """A lockstep wave prefills EVERY row, so each row's sequence starts
+    at 0 — without this an engine reused across run() calls would carry
+    the previous wave's seq_lens into the new prefill (stale write
+    positions + attention over dead tokens)."""
+    if hasattr(meta, "seq_lens"):
+        return dataclasses.replace(
+            meta, seq_lens=jnp.zeros_like(meta.seq_lens))
+    if hasattr(meta, "kv") and hasattr(meta.kv, "seq_lens"):
+        kv = dataclasses.replace(
+            meta.kv, seq_lens=jnp.zeros_like(meta.kv.seq_lens))
+        return dataclasses.replace(meta, kv=kv)
+    return meta
+
+
+def _scrub_phys_pages(cache, phys):
+    """Zero a set of *physical* pages of the global paged pool (axis 1 of
+    the 5-dim k/v tensors) — the paged-mode eviction scrub."""
+    if not phys:
+        return cache
+    idx = jnp.asarray(tuple(phys), jnp.int32)
+
+    def zero(arr):
+        z = jnp.zeros((arr.shape[0], len(phys), *arr.shape[2:]), arr.dtype)
+        return arr.at[:, idx].set(z)
+
+    return dataclasses.replace(cache, k=zero(cache.k), v=zero(cache.v))
 
 
 def _scrub_slots(cache, base: int, size: int):

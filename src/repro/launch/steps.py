@@ -342,20 +342,35 @@ class TrustedStepBundle:
 
 
 def build_trusted_serve_steps(api: ModelAPI, pool_key: str,
-                              verify: bool = False) -> TrustedStepBundle:
+                              verify: bool = False,
+                              step_key: Optional[str] = None,
+                              temperature: float = 0.0,
+                              top_k: int = 0) -> TrustedStepBundle:
     """Trusted prefill/decode step functions for one model API.
 
     The step rebuilds the cache from the manager-threaded pool + the
     engine's meta operand, runs the model, and splits the result back.
-    Greedy sampling (argmax) happens *inside* the step: the engine's
-    decode loop stays fully asynchronous — per step it receives
-    ``(meta, next_ids)`` and never materializes the ``(B, vocab)``
-    logits on the host.
+    Sampling happens *inside* the step: the engine's decode loop stays
+    fully asynchronous — per step it receives ``(meta, next_ids)`` and
+    never materializes the ``(B, vocab)`` logits on the host.
 
     ``pool_key`` must identify the pool geometry (slot count, page
-    layout) on top of the model shape — see ``ServeEngine`` — so two
-    engines share a symbol entry iff they can share the pool.
+    layout); ``step_key`` (default: ``pool_key``) additionally carries
+    the model identity when the pool is the *global paged* layout shared
+    by engines serving different model shapes — such engines address one
+    pool arena but keep distinct step symbols (a shared name with
+    different step functions would silently run the first engine's model
+    for everyone).
+
+    ``temperature > 0`` builds the *sampled* decode step: its token
+    operand is ``(toks, key)`` — the PRNG key threads as an operand, so
+    the step stays pure and jit-cached — and next ids draw from the
+    temperature-scaled, optionally top-k-truncated distribution.  The
+    greedy default (``temperature=0``) compiles the exact argmax program
+    of previous revisions, bit-identical, under the unsuffixed symbol
+    names.
     """
+    sk = step_key or pool_key
 
     def prefill_step(arena, pool, params, meta, batch, guard):
         cache = join_cache_pool(pool, meta)
@@ -364,17 +379,32 @@ def build_trusted_serve_steps(api: ModelAPI, pool_key: str,
         return arena, new_pool, (
             new_meta, jnp.argmax(logits, -1).astype(jnp.int32))
 
-    def decode_step(arena, pool, params, meta, toks, guard):
-        cache = join_cache_pool(pool, meta)
-        cache, logits = api.decode(params, cache, toks, guard=guard)
-        new_pool, new_meta = split_cache_pool(cache)
-        return arena, new_pool, (
-            new_meta, jnp.argmax(logits, -1).astype(jnp.int32))
+    if temperature > 0:
+        def decode_step(arena, pool, params, meta, x, guard):
+            toks, key = x
+            cache = join_cache_pool(pool, meta)
+            cache, logits = api.decode(params, cache, toks, guard=guard)
+            new_pool, new_meta = split_cache_pool(cache)
+            logits = logits.astype(jnp.float32)
+            if top_k:
+                kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+                logits = jnp.where(logits < kth, -jnp.inf, logits)
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+            return arena, new_pool, (new_meta, nxt.astype(jnp.int32))
+        decode_name = f"serve.decode.sampled[{sk}:t{temperature}:k{top_k}]"
+    else:
+        def decode_step(arena, pool, params, meta, toks, guard):
+            cache = join_cache_pool(pool, meta)
+            cache, logits = api.decode(params, cache, toks, guard=guard)
+            new_pool, new_meta = split_cache_pool(cache)
+            return arena, new_pool, (
+                new_meta, jnp.argmax(logits, -1).astype(jnp.int32))
+        decode_name = f"serve.decode[{sk}]"
 
     return TrustedStepBundle(
         pool_name=f"serve.pool[{pool_key}]",
-        prefill_name=f"serve.prefill[{pool_key}]",
-        decode_name=f"serve.decode[{pool_key}]",
+        prefill_name=f"serve.prefill[{sk}]",
+        decode_name=decode_name,
         prefill_fn=prefill_step,
         decode_fn=decode_step,
         verify=verify,

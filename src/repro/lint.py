@@ -157,6 +157,56 @@ def _audit_serve_prefill() -> SandboxProof:
                   arena_argnums=(0, 1), mode="extent")
 
 
+def _paged_serve_fixture():
+    """Global paged KV layout (serve continuous-batching path): virtual
+    page extents + manager-owned page_map, phys clamp as defense in
+    depth — the audit proves the 5-dim pool accesses stay inside the
+    declared extents."""
+    from repro.configs import get_config
+    from repro.core.fence import FenceParams, FencePolicy
+    from repro.launch.steps import split_cache_pool
+    from repro.models import get_model
+    from repro.models import kvcache as KV
+    from repro.models.guard import GuardSpec
+
+    cfg = get_config("stablelm-3b").reduced()
+    api = get_model(cfg)
+    B, max_len, n_phys = 4, KV.PAGE_SIZE, 8
+    n_virt = 8
+    cache = jax.eval_shape(
+        lambda: KV.init_global_kv_cache(cfg, B, max_len, n_phys))
+    pool, meta = split_cache_pool(cache)
+    params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    guard = GuardSpec(
+        policy=FencePolicy.BITWISE,
+        vocab=FenceParams(base=0, size=256),
+        kv=FenceParams(base=0, size=n_virt),
+        page=FenceParams(base=0, size=n_phys),
+        page_map=_i32(n_virt))
+    return api, B, guard, pool, meta, params
+
+
+def _audit_paged_serve_decode() -> SandboxProof:
+    from repro.launch.steps import build_trusted_serve_steps
+
+    api, B, guard, pool, meta, params = _paged_serve_fixture()
+    bundle = build_trusted_serve_steps(api, "lint.paged")
+    return verify(bundle.decode_fn,
+                  (_f32(1024), pool, params, meta, _i32(B), guard),
+                  arena_argnums=(0, 1), mode="extent")
+
+
+def _audit_paged_serve_prefill() -> SandboxProof:
+    from repro.launch.steps import build_trusted_serve_steps
+
+    api, B, guard, pool, meta, params = _paged_serve_fixture()
+    bundle = build_trusted_serve_steps(api, "lint.paged")
+    batch = {"tokens": _i32(B, 16)}
+    return verify(bundle.prefill_fn,
+                  (_f32(1024), pool, params, meta, batch, guard),
+                  arena_argnums=(0, 1), mode="extent")
+
+
 def _audit_train_step() -> SandboxProof:
     from repro.configs import ShapeConfig, get_config
     from repro.launch.mesh import make_local_mesh
@@ -184,6 +234,8 @@ AUDITS: Tuple[Tuple[str, Callable[[], SandboxProof]], ...] = (
     ("kernels.flash_attention", _audit_flash_attention),
     ("steps.serve.prefill", _audit_serve_prefill),
     ("steps.serve.decode", _audit_serve_decode),
+    ("steps.serve.paged.prefill", _audit_paged_serve_prefill),
+    ("steps.serve.paged.decode", _audit_paged_serve_decode),
     ("steps.train", _audit_train_step),
 )
 

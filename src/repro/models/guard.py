@@ -26,6 +26,8 @@ import dataclasses
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fence import (
     FenceParams,
@@ -52,6 +54,12 @@ class GuardSpec:
     #: per-batch-row policy codes (FencePolicy.code) for row-mixed batches;
     #: applies to ROW_SPACES only.  None -> ``policy`` everywhere.
     row_policy: Optional[jax.Array] = None
+    #: virtual->physical page translation for the *global* paged pool
+    #: (``(P_total,)`` int32, manager-owned).  Tenant partitions live in a
+    #: virtual page space; fenced virtual ids index this map, so elastic
+    #: compaction is a host rewrite of the map — no KV bytes move.  None
+    #: for the slab layout (and for slab-relative "page" fencing).
+    page_map: Optional[jax.Array] = None
 
     def params_for(self, which: str) -> Optional[FenceParams]:
         return getattr(self, which)
@@ -63,10 +71,31 @@ class GuardSpec:
 # fence._fence_params_flatten), the policy is aux data.
 jax.tree_util.register_pytree_node(
     GuardSpec,
-    lambda g: ((g.vocab, g.kv, g.state, g.expert, g.page, g.row_policy),
+    lambda g: ((g.vocab, g.kv, g.state, g.expert, g.page, g.row_policy,
+                g.page_map),
                g.policy),
     lambda policy, ch: GuardSpec(policy, *ch),
 )
+
+
+def _broadcast_params(params: FenceParams, idx: jax.Array) -> FenceParams:
+    """Per-row (B,) bound arrays against a (B, ...) index: append trailing
+    singleton axes so the fence broadcasts row-wise (the paged serve path
+    fences a (B, P) page table with per-row tenant extents).  Scalar and
+    already-matching params pass through untouched."""
+    base = params.base
+    if not isinstance(base, (jax.Array, np.ndarray)) or base.ndim == 0 \
+            or base.ndim >= idx.ndim:
+        return params
+
+    def expand(v):
+        if isinstance(v, (jax.Array, np.ndarray)) and v.ndim:
+            return v.reshape(v.shape + (1,) * (idx.ndim - v.ndim))
+        return v
+
+    return FenceParams(base=expand(params.base), size=expand(params.size),
+                       magic_m=expand(params.magic_m),
+                       magic_s=expand(params.magic_s))
 
 
 def fence(spec: Optional[GuardSpec], which: str, idx: jax.Array) -> jax.Array:
@@ -81,11 +110,30 @@ def fence(spec: Optional[GuardSpec], which: str, idx: jax.Array) -> jax.Array:
     params = spec.params_for(which)
     if params is None:
         return idx
+    params = _broadcast_params(params, idx)
     if spec.row_policy is not None and which in ROW_SPACES:
-        fenced, _ok = apply_fence_mixed(spec.row_policy, idx, params)
+        row_policy = spec.row_policy
+        if row_policy.ndim < idx.ndim:
+            row_policy = row_policy.reshape(
+                row_policy.shape + (1,) * (idx.ndim - row_policy.ndim))
+        fenced, _ok = apply_fence_mixed(row_policy, idx, params)
     else:
         fenced, _ok = apply_fence(spec.policy, idx, params)
     return fenced.astype(idx.dtype)
+
+
+def fence_pages(spec: Optional[GuardSpec],
+                virt: jax.Array) -> jax.Array:
+    """Resolve already-fenced *virtual* page ids to physical pages of the
+    global paged pool: translate through the manager-owned ``page_map``,
+    then clamp into the pool extent (space "page" — defense in depth: even
+    a corrupted map entry stays inside the pool tensor).  Without a
+    ``page_map`` this is the slab-relative "page" fence unchanged."""
+    if spec is None:
+        return virt
+    if spec.page_map is not None:
+        virt = jnp.take(spec.page_map, virt, axis=0).astype(virt.dtype)
+    return fence(spec, "page", virt)
 
 
 def full_guard(policy: FencePolicy = FencePolicy.BITWISE, *,

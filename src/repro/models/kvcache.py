@@ -14,10 +14,17 @@ Two levels of pooling (see DESIGN.md §Hardware adaptation):
    Both batch and slot axes shard over the data axes, so every gather is
    shard-local under GSPMD (no cross-host page traffic).
 
-2. **Global paged pool** (the Pallas kernel `kernels/paged_attention`):
-   a single flat page pool with per-sequence page lists, fenced in the
-   scalar-prefetch — the closest TPU analogue of the paper's PTX fence.
-   Used on real TPU via ops.py; validated in interpret mode in tests.
+2. **Global paged pool** (``k.ndim == 5``: ``(L, P_total, page, KH, D)``,
+   the continuous-batching serve layout + the Pallas kernel
+   `kernels/paged_attention`): one flat page pool shared by every tenant,
+   with per-request page lists in *virtual* page ids.  Virtual ids are
+   fenced into the owning tenant's extent (space "kv", per-row params),
+   then translated virt->phys through the manager-owned
+   ``GuardSpec.page_map`` and clamped into the pool (space "page") — see
+   :func:`repro.models.guard.fence_pages`.  Elastic compaction rewrites
+   the map instead of moving KV bytes.  The same indirection is fenced in
+   the Pallas kernel's scalar-prefetch on TPU — the closest analogue of
+   the paper's PTX fence.
 
 SSM/recurrent state uses the same slot discipline: ``(L, slots, ...state)``
 with fenced slot ids (space "state").
@@ -32,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.guard import GuardSpec, fence
+from repro.models.guard import GuardSpec, fence, fence_pages
 
 PAGE_SIZE = 64
 
@@ -44,7 +51,16 @@ def _pow2_at_least(n: int) -> int:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PagedKVCache:
-    """Slab-paged KV pool (pytree).  k/v: (L, slots, P, page, KH, D)."""
+    """Paged KV pool (pytree).
+
+    Two layouts, told apart by rank:
+
+    * slab (6-dim): k/v ``(L, slots, P, page, KH, D)`` — page_table holds
+      slab-relative logical->physical page ids, slot_ids pick the slab;
+    * global (5-dim): k/v ``(L, P_total, page, KH, D)`` — page_table holds
+      *virtual* page ids into the shared pool (slot_ids are unused and
+      kept only for pytree-shape compatibility).
+    """
 
     k: jax.Array
     v: jax.Array
@@ -53,16 +69,20 @@ class PagedKVCache:
     seq_lens: jax.Array       # (B,) int32: tokens currently cached
 
     @property
+    def global_paged(self) -> bool:
+        return self.k.ndim == 5
+
+    @property
     def pages_per_slot(self) -> int:
-        return self.k.shape[2]
+        return self.k.shape[1] if self.global_paged else self.k.shape[2]
 
     @property
     def page_size(self) -> int:
-        return self.k.shape[3]
+        return self.k.shape[2] if self.global_paged else self.k.shape[3]
 
     @property
     def max_len(self) -> int:
-        return self.pages_per_slot * self.page_size
+        return self.page_table.shape[1] * self.page_size
 
 
 def kv_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
@@ -109,9 +129,40 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     )
 
 
+def init_global_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         total_pages: int, *,
+                         page_size: int = PAGE_SIZE,
+                         dtype=jnp.float32,
+                         n_layers: Optional[int] = None) -> PagedKVCache:
+    """Global paged pool: one ``(L, total_pages, page, KH, D)`` tensor
+    shared by every tenant; each batch row carries ``max_len //
+    page_size`` virtual page ids (see module docstring, layout 2)."""
+    L = n_layers if n_layers is not None else cfg.decoder_layers
+    pages_per_req = max(max_len // page_size, 1)
+    shape = (L, total_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return PagedKVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        page_table=jnp.zeros((batch, pages_per_req), jnp.int32),
+        slot_ids=jnp.zeros((batch,), jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Fenced read / write paths
 # ---------------------------------------------------------------------------
+
+def _fenced_phys_pages(cache: PagedKVCache, table: jax.Array,
+                       guard: Optional[GuardSpec]) -> jax.Array:
+    """Global layout: virtual page ids -> fenced physical page ids.
+
+    The virtual ids are fenced into the owning tenant's extent (space
+    "kv" — per-row params on the serve path), translated through the
+    manager's page_map, then clamped into the pool (space "page")."""
+    virt = fence(guard, "kv", table)
+    return fence_pages(guard, virt)
+
 
 def gather_layer_kv(cache: PagedKVCache, layer: jax.Array,
                     guard: Optional[GuardSpec] = None,
@@ -122,6 +173,17 @@ def gather_layer_kv(cache: PagedKVCache, layer: jax.Array,
     positions are masked by the caller via ``seq_lens``.
     """
     from repro.distributed.sharding import constrain
+    if cache.global_paged:
+        phys = _fenced_phys_pages(cache, cache.page_table, guard)  # (B,P)
+        k_l = jax.lax.dynamic_index_in_dim(cache.k, layer, axis=0,
+                                           keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(cache.v, layer, axis=0,
+                                           keepdims=False)
+        k_p = jnp.take(k_l, phys, axis=0)      # (B, P, page, KH, D)
+        v_p = jnp.take(v_l, phys, axis=0)
+        B, P, page, KH, D = k_p.shape
+        return (k_p.reshape(B, P * page, KH, D),
+                v_p.reshape(B, P * page, KH, D))
     slots = fence(guard, "kv", cache.slot_ids)            # (B,)
     pages = fence(guard, "page", cache.page_table)        # (B,P)
     k_l = jax.lax.dynamic_index_in_dim(cache.k, layer, axis=0,
@@ -159,6 +221,16 @@ def append_token_kv(cache: PagedKVCache, layer: jax.Array,
     pos = cache.seq_lens                                   # (B,)
     logical_page = pos // page_size
     offset = pos % page_size
+    if cache.global_paged:
+        virt = jnp.take_along_axis(cache.page_table,
+                                   logical_page[:, None], axis=1)[:, 0]
+        phys = _fenced_phys_pages(cache, virt, guard)      # (B,)
+        idx_l = jnp.broadcast_to(jnp.asarray(layer, jnp.int32), (B,))
+        k = cache.k.at[idx_l, phys, offset].set(
+            k_new[:, 0], mode="promise_in_bounds")
+        v = cache.v.at[idx_l, phys, offset].set(
+            v_new[:, 0], mode="promise_in_bounds")
+        return dataclasses.replace(cache, k=k, v=v)
     slots = fence(guard, "kv", cache.slot_ids)
     phys = jnp.take_along_axis(cache.page_table,
                                logical_page[:, None], axis=1)[:, 0]
@@ -203,6 +275,17 @@ def write_prefill_kv(cache: PagedKVCache, layer: jax.Array,
         v_new = jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
         S += pad
     n_pages = S // page_size
+    if cache.global_paged:
+        phys = _fenced_phys_pages(
+            cache, cache.page_table[:, :n_pages], guard)          # (B,n)
+        k_pg = k_new.reshape(B, n_pages, page_size, KH, D)
+        v_pg = v_new.reshape(B, n_pages, page_size, KH, D)
+        ll = jnp.broadcast_to(jnp.asarray(layer, jnp.int32), (B, n_pages))
+        k = cache.k.at[ll, phys].set(
+            k_pg.astype(cache.k.dtype), mode="promise_in_bounds")
+        v = cache.v.at[ll, phys].set(
+            v_pg.astype(cache.v.dtype), mode="promise_in_bounds")
+        return dataclasses.replace(cache, k=k, v=v)
     slots = fence(guard, "kv", cache.slot_ids)                    # (B,)
     pages = fence(guard, "page", cache.page_table[:, :n_pages])   # (B,n)
     k_pg = k_new.reshape(B, n_pages, page_size, KH, D)

@@ -164,6 +164,79 @@ def test_paged_attention_isolation_sweep(seed, logsize):
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KH,D,page,P_total,max_pages",
+    [
+        (2, 4, 4, 16, 8, 32, 4),
+        (4, 8, 2, 32, 16, 64, 8),
+        (3, 6, 2, 16, 4, 32, 16),
+    ])
+def test_paged_attention_page_map_sweep(dtype, B, H, KH, D, page, P_total,
+                                        max_pages):
+    """Serve-path layout: page tables hold VIRTUAL ids translated through
+    a manager-owned page_map after the fence.  Kernel vs oracle."""
+    rng = np.random.default_rng(B * 100 + H + 1)
+    n_virt = 2 * P_total
+    q = jnp.asarray(rng.normal(size=(B, H, D)), dtype)
+    kp = jnp.asarray(rng.normal(size=(P_total, page, KH, D)), dtype)
+    vp = jnp.asarray(rng.normal(size=(P_total, page, KH, D)), dtype)
+    half = n_virt // 2
+    base = jnp.asarray(rng.choice([0, half], size=B), jnp.int32)
+    mask = jnp.full((B,), half - 1, jnp.int32)
+    pmap = jnp.asarray(rng.permutation(P_total)[
+        rng.integers(0, P_total, size=n_virt)], jnp.int32)
+    pt = jnp.asarray(rng.integers(0, n_virt, size=(B, max_pages)),
+                     jnp.int32)
+    lens = jnp.asarray(rng.integers(1, max_pages * page, size=B),
+                       jnp.int32)
+    out = ops.paged_attention(q, kp, vp, pt, lens, base, mask, pmap)
+    ref = R.paged_attention_ref(q, kp, vp, pt, lens, base, mask, pmap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("seed,logsize", [(3, 3), (11, 4), (29, 5)])
+def test_paged_attention_page_map_isolation(seed, logsize):
+    """Serve-path isolation proof: with virtual extents + page_map
+    translation, an adversarial page table full of other-tenant virtual
+    ids still only reaches the physical pages the map assigns to the
+    attacker's own extent — mutating every other physical page changes
+    nothing."""
+    rng = np.random.default_rng(seed)
+    P_total = 2 ** logsize
+    n_virt = P_total
+    half = n_virt // 2
+    B, H, KH, D, page, max_pages = 2, 4, 2, 16, 4, 4
+    # tenant A owns virtual [0, half) mapped to ODD physical pages; the
+    # rest of the pool (even pages + page 0) belongs to others
+    pmap = np.zeros((n_virt,), np.int32)
+    a_phys = [p for p in range(1, P_total) if p % 2 == 1][:half]
+    for v, p in enumerate(a_phys):
+        pmap[v] = p
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = np.asarray(rng.normal(size=(P_total, page, KH, D)), np.float32)
+    vp = np.asarray(rng.normal(size=(P_total, page, KH, D)), np.float32)
+    # adversarial: virtual ids spray the whole virtual space
+    pt = jnp.asarray(rng.integers(0, n_virt, size=(B, max_pages)),
+                     jnp.int32)
+    lens = jnp.full((B,), max_pages * page, jnp.int32)
+    base = jnp.zeros((B,), jnp.int32)        # fenced into [0, half)
+    mask = jnp.full((B,), half - 1, jnp.int32)
+    pmapj = jnp.asarray(pmap)
+    out1 = ops.paged_attention(q, jnp.asarray(kp), jnp.asarray(vp), pt,
+                               lens, base, mask, pmapj)
+    kp2, vp2 = kp.copy(), vp.copy()
+    others = [p for p in range(P_total) if p not in set(a_phys)]
+    kp2[others] = 31337.0                    # clobber every foreign page
+    vp2[others] = -31337.0
+    out2 = ops.paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), pt,
+                               lens, base, mask, pmapj)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
 @pytest.mark.parametrize("T,K,E", [(1, 1, 4), (17, 2, 8), (300, 8, 32),
                                    (64, 4, 16)])
 def test_moe_histogram_sweep(T, K, E):
