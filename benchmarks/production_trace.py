@@ -1,0 +1,446 @@
+"""Trace-driven production macro-benchmark: a mixed fleet under a
+deterministic diurnal/bursty arrival trace, reported through the
+request-span SLO ledger (the ROADMAP's "production traffic
+macro-benchmark" item).
+
+Two serving tiers plus a co-resident training tenant share the run:
+
+* **continuous tier** — a paged stablelm-3b engine continuously batching
+  56 tenants (8 premium latency-critical, 8 standard latency-critical on
+  a tight slack budget, 40 best-effort) whose requests arrive on a
+  sine-modulated (diurnal) schedule with burst cycles spliced in, all
+  replayed through ``serve_continuous``'s arrival gating.  A training
+  tenant seeded by ``examples/train_100m.py`` (the demo-100m recipe:
+  dense update steps over its own fenced partition) injects one raw
+  launch into **every drain cycle**, so serving and training contend for
+  the same scheduler throughout.  One best-effort tenant is quarantined
+  mid-trace and one request is withdrawn pre-trace, so the
+  violation-cause histogram exercises every terminal state.
+* **slab tier** — four lockstep engines co-hosted on a second manager,
+  one per serve-capable model family: dense (minicpm-2b), MoE
+  (qwen3-moe-30b-a3b), SSM (xlstm-350m) and hybrid (zamba2-7b) — two
+  non-transformer families in the fleet — serving 12 tenants each in
+  ``serve_engines`` waves (epoch loop) until the queue drains.
+
+105 simulated tenants total, in quick and full mode alike (quick shrinks
+token budgets, never the fleet).  The per-class latency / throughput /
+SLO-violation report is derived entirely from the span ledger
+(``telemetry.spans``), and the suite asserts the span invariants on
+every closed span: components sum exactly to end-to-end latency, no
+span leaks open.
+
+Gating: ``production.lc_attainment`` encodes ``1 + premium-class SLO
+violations`` (deterministic drain-cycle accounting, identical in quick
+and full mode — any premium violation at least doubles the row, so it
+is ``gate=abs``); throughput rows are wall-clock and ``gate=skip``,
+self-asserted in-suite.  ``production.spans.overhead`` measures the
+span layer's tax on a working continuous drain with the same off/on/off
+ABA bracket as ``telemetry.overhead`` (bar 1.05x, asserted in-suite).
+
+    PYTHONPATH=src python -m benchmarks.production_trace
+    PYTHONPATH=src python -m benchmarks.production_trace --quick
+"""
+
+from __future__ import annotations
+
+import gc
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+#: fleet shape — identical in quick and full mode (the acceptance bar
+#: is >= 100 simulated tenants over a mixed fleet)
+N_PREMIUM, N_STANDARD, N_BE = 8, 8, 40
+SLAB_FAMILIES = ("minicpm-2b", "qwen3-moe-30b-a3b", "xlstm-350m",
+                 "zamba2-7b")
+TENANTS_PER_SLAB = 12
+
+#: premium tenants get slack headroom (their zero-violation count is the
+#: gate=abs row); standard tenants run a deliberately tight budget so the
+#: violation-cause histogram has real entries
+PREMIUM_BUDGET = 16
+STANDARD_BUDGET = 2
+
+PLEN = 4
+MAX_LEN = 64          # one KV page per request (PAGE_SIZE=64)
+OVERHEAD_BAR = 1.05
+
+
+def _knobs():
+    """Quick mode shrinks tokens and the trace horizon, not the fleet."""
+    if QUICK:
+        return dict(horizon=16, reqs_per_tenant=1, max_new=3,
+                    slab_new=2, reps=3)
+    return dict(horizon=48, reqs_per_tenant=2, max_new=5,
+                slab_new=4, reps=5)
+
+
+def _arrival_trace(n: int, horizon: int,
+                   rng: np.random.Generator) -> List[int]:
+    """``n`` arrival cycles in [0, horizon): a diurnal sine ramp with two
+    burst cycles spliced in at 5x density.  Seeded rng -> deterministic
+    replay."""
+    c = np.arange(horizon)
+    w = 1.0 + 0.9 * np.sin(2.0 * np.pi * c / horizon - np.pi / 2.0)
+    for b in (horizon // 4, (5 * horizon) // 8):
+        w[b] *= 5.0
+    return sorted(int(x) for x in
+                  rng.choice(horizon, size=n, p=w / w.sum()))
+
+
+def _count_drains(mgr) -> List[int]:
+    count = [0]
+    orig = mgr.run_queued
+
+    def counted(*a, **kw):
+        count[0] += 1
+        return orig(*a, **kw)
+
+    mgr.run_queued = counted
+    return count
+
+
+# --------------------------------------------------------------------- #
+# Tier A: continuous paged serving + co-resident training tenant        #
+# --------------------------------------------------------------------- #
+def _train_kernel(arena, ptr, n):
+    """One demo-100m-flavored training step: a fenced read-modify-write
+    over the training tenant's partition (examples/train_100m.py's
+    launch shape, without the full optimizer loop)."""
+    import jax.numpy as jnp
+
+    idx = ptr + jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.take(arena, idx, axis=0)
+    return arena.at[idx].set(jnp.tanh(vals) * 0.999 + 0.001), None
+
+
+def _continuous_tier(k) -> Dict:
+    from repro.configs import get_config
+    from repro.core.manager import GuardianManager
+    from repro.core.tenantclass import TenantClassPolicy
+    from repro.launch.serve import ServeEngine, serve_continuous
+
+    cfg = get_config("stablelm-3b").reduced()
+    mgr = GuardianManager(total_slots=128, standalone_fast_path=False)
+    eng = ServeEngine(cfg, max_batch=8, max_len=MAX_LEN, paged=True,
+                      manager=mgr, name="cont")
+
+    premium = [f"a.lc.p{i}" for i in range(N_PREMIUM)]
+    standard = [f"a.lc.s{i}" for i in range(N_STANDARD)]
+    best = [f"a.be{i}" for i in range(N_BE)]
+    for t in premium:
+        eng.register_tenant(t, 1, tenant_class=TenantClassPolicy.
+                            latency_critical(queue_age_budget=
+                                             PREMIUM_BUDGET))
+    for t in standard:
+        eng.register_tenant(t, 1, tenant_class=TenantClassPolicy.
+                            latency_critical(queue_age_budget=
+                                             STANDARD_BUDGET))
+    for t in best:
+        eng.register_tenant(t, 1, tenant_class="best_effort")
+
+    # the co-resident training tenant: raw fenced launches on the same
+    # manager, injected into every drain cycle below
+    train = mgr.register_tenant("train-100m", 8,
+                                tenant_class="best_effort")
+    train.module_load("train_step", _train_kernel)
+    tptr = train.malloc(8)
+    train.memcpy_h2d(tptr, np.zeros(8, np.float32))
+    mgr.synchronize()
+
+    serve_tenants = premium + standard + best
+    rng = np.random.default_rng(0)
+    arrivals = _arrival_trace(len(serve_tenants) * k["reqs_per_tenant"],
+                              k["horizon"], rng)
+    rids: Dict[str, List[int]] = {}
+    ai = 0
+    for rep in range(k["reqs_per_tenant"]):
+        for t in serve_tenants:
+            prompt = rng.integers(1, cfg.vocab - 1,
+                                  size=PLEN).astype(np.int32)
+            rids.setdefault(t, []).append(
+                eng.submit(t, prompt, max_new=k["max_new"],
+                           arrive=arrivals[ai]))
+            ai += 1
+
+    # terminal-state diversity: one request withdrawn before the trace
+    # runs, one best-effort tenant quarantined mid-trace (drain 6) with
+    # a late-arriving request still queued then (deterministic eviction)
+    wd_rid = eng.submit(best[-1], np.ones(PLEN, np.int32),
+                        max_new=k["max_new"], arrive=k["horizon"])
+    assert eng.withdraw(wd_rid)
+    sacrifice = best[-2]
+    rids[sacrifice].append(
+        eng.submit(sacrifice, np.ones(PLEN, np.int32),
+                   max_new=k["max_new"], arrive=k["horizon"] - 1))
+
+    drains = [0]
+    orig = mgr.run_queued
+
+    def drive(*a, **kw):
+        drains[0] += 1
+        # training rides EVERY serving drain cycle
+        train.launch_kernel("train_step", ptrs=[tptr], args=(8,))
+        if drains[0] == 6:
+            mgr.quarantine.quarantine(sacrifice, reason="bench-inject")
+        return orig(*a, **kw)
+
+    mgr.run_queued = drive
+
+    t0 = time.perf_counter()
+    out = serve_continuous([eng], max_new_tokens=k["max_new"])[0]
+    dt = time.perf_counter() - t0
+
+    tokens = sum(len(v) for v in out.values())
+    # every non-sacrificed request served; sacrificed ones may have
+    # completed before the mid-trace quarantine, never after
+    non_sac = {r for t, rs in rids.items() if t != sacrifice for r in rs}
+    assert non_sac <= set(out), sorted(non_sac - set(out))
+    assert set(out) - non_sac <= set(rids[sacrifice])
+    led = mgr.telemetry.spans
+    assert led.open_count() == 0, "continuous tier leaked open spans"
+    premium_viol = sum(led.by_tenant.get(t, {}).get("violated", 0)
+                       for t in premium)
+    return dict(mgr=mgr, dt=dt, tokens=tokens, requests=len(out),
+                cycles=drains[0], premium_viol=premium_viol,
+                train_cycles=drains[0],
+                tenants=len(serve_tenants) + 1)
+
+
+# --------------------------------------------------------------------- #
+# Tier B: mixed-family slab fleet in lockstep waves                     #
+# --------------------------------------------------------------------- #
+def _slab_tier(k) -> Dict:
+    from repro.configs import get_config
+    from repro.core.manager import GuardianManager
+    from repro.core.tenantclass import TenantClassPolicy
+    from repro.launch.serve import ServeEngine, serve_engines
+
+    mgr = GuardianManager(total_slots=128, standalone_fast_path=False)
+    engines, families = [], set()
+    submitted = 0
+    rng = np.random.default_rng(1)
+    for e, arch in enumerate(SLAB_FAMILIES):
+        cfg = get_config(arch).reduced()
+        families.add(cfg.family)
+        eng = ServeEngine(cfg, max_batch=4, max_len=32, manager=mgr,
+                          name=f"s{e}")
+        for i in range(TENANTS_PER_SLAB):
+            cls = TenantClassPolicy.latency_critical(
+                queue_age_budget=64) if i < 3 else "best_effort"
+            eng.register_tenant(f"b{e}.t{i}", 2, tenant_class=cls)
+        for i in range(TENANTS_PER_SLAB):
+            eng.submit(f"b{e}.t{i}",
+                       rng.integers(1, cfg.vocab - 1,
+                                    size=PLEN).astype(np.int32))
+            submitted += 1
+        engines.append(eng)
+
+    served = 0
+    waves = 0
+    t0 = time.perf_counter()
+    while served < submitted:          # epoch loop: wave until drained
+        outs = serve_engines(engines, max_new_tokens=k["slab_new"])
+        got = sum(len(o) for o in outs)
+        assert got > 0, "slab wave served nothing while requests remain"
+        served += got
+        waves += 1
+        assert waves <= 4 * TENANTS_PER_SLAB, "slab epoch loop ran away"
+    dt = time.perf_counter() - t0
+
+    tokens = served * k["slab_new"]
+    led = mgr.telemetry.spans
+    assert led.open_count() == 0, "slab tier leaked open spans"
+    return dict(mgr=mgr, dt=dt, tokens=tokens, requests=served,
+                waves=waves, families=families,
+                tenants=len(SLAB_FAMILIES) * TENANTS_PER_SLAB)
+
+
+# --------------------------------------------------------------------- #
+# Span-layer overhead: off/on/off ABA bracket on a continuous drain     #
+# --------------------------------------------------------------------- #
+def _overhead_setup(telemetry: bool):
+    from repro.configs import get_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_config("stablelm-3b").reduced()
+    eng = ServeEngine(cfg, max_batch=4, max_len=MAX_LEN, paged=True,
+                      telemetry=telemetry)
+    for i in range(4):
+        eng.register_tenant(f"o{i}", 1)
+    return eng
+
+
+def _overhead_window(eng) -> float:
+    """One timed window: submit a request per tenant, serve it to
+    completion (the finalize's token materialization is the sync).
+    Retired requests are pruned afterwards so repeated windows stay
+    O(1) — the telemetry-side gauges scan the request list per cycle,
+    and letting it grow would bias the on-window only."""
+    from repro.launch.serve import serve_continuous
+
+    t0 = time.perf_counter()
+    for i in range(4):
+        eng.submit(f"o{i}", np.arange(1, 1 + PLEN, dtype=np.int32),
+                   max_new=2)
+    serve_continuous([eng], max_new_tokens=2)
+    dt = time.perf_counter() - t0
+    eng._requests = [r for r in eng._requests if not r.done]
+    return dt
+
+
+def _bench_span_overhead(out: List[str], reps: int) -> None:
+    """Same methodology as ``telemetry.overhead`` (see
+    benchmarks/scheduler_throughput.py): each rep scores an on-window
+    against the mean of its two bracketing off-windows, the median over
+    reps rejects load spikes, and the best of up to three trials is
+    asserted — noise only ever inflates the ratio."""
+    on, off = _overhead_setup(True), _overhead_setup(False)
+    _overhead_window(on)               # warmup + compile
+    _overhead_window(off)
+    assert not off.manager.telemetry.enabled
+    best = math.inf
+    trials = 0
+    gc_was_on = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(3):
+            trials += 1
+            ratios = []
+            for _ in range(reps):
+                t_a = _overhead_window(off)
+                t_on = _overhead_window(on)
+                t_b = _overhead_window(off)
+                ratios.append(2.0 * t_on / (t_a + t_b))
+            best = min(best, float(np.median(ratios)))
+            if best <= OVERHEAD_BAR:
+                break
+    finally:
+        if gc_was_on:
+            gc.enable()
+    led = on.manager.telemetry.spans
+    assert led.open_count() == 0 and led.totals.get("complete", 0) > 0
+    # spans compiled in, telemetry off: the ledger never engaged
+    led_off = off.manager.telemetry.spans
+    assert led_off.open_count() == 0 and not led_off.totals
+    out.append(f"production.spans.overhead,{best:.3f},"
+               f"ratio={best:.3f};trials={trials};"
+               f"bar={OVERHEAD_BAR};gate=skip")
+    print(out[-1])
+    assert best <= OVERHEAD_BAR, (
+        f"span layer cost {best:.3f}x on a working continuous drain "
+        f"across {trials} trials (bar {OVERHEAD_BAR}x) — a span path "
+        "is doing device work")
+
+
+# --------------------------------------------------------------------- #
+def _assert_reconciled(mgr) -> int:
+    """Every closed span's phase components sum exactly to its
+    end-to-end latency (the tentpole invariant)."""
+    n = 0
+    for sp in mgr.telemetry.spans.closed:
+        comps = sp.components()
+        assert sum(comps.values()) == sp.e2e_cycles, (
+            f"span {sp.tenant}/r{sp.rid}: components {comps} "
+            f"!= e2e {sp.e2e_cycles}")
+        n += 1
+    return n
+
+
+def _class_report(mgr) -> Dict[str, Dict]:
+    """Per-class latency percentiles (drain cycles, from the closed
+    spans) merged with the ledger's attainment rows."""
+    led = mgr.telemetry.spans
+    by_cls: Dict[str, List[int]] = {}
+    for sp in led.closed:
+        cls = sp.cls if sp.cls is not None else "unclassified"
+        by_cls.setdefault(cls, []).append(sp.e2e_cycles)
+    rep = {}
+    for cls, row in led.to_dict()["classes"].items():
+        lat = sorted(by_cls.get(cls, [0]))
+        rep[cls] = {
+            **row,
+            "p50_cycles": lat[len(lat) // 2],
+            "p99_cycles": lat[min(len(lat) - 1,
+                                  int(len(lat) * 0.99))],
+        }
+    return rep
+
+
+def main(out: List[str]):
+    k = _knobs()
+    a = _continuous_tier(k)
+    b = _slab_tier(k)
+
+    n_tenants = a["tenants"] + b["tenants"]
+    non_tf = {f for f in b["families"] if f not in ("dense", "moe")}
+    assert n_tenants >= 100, f"fleet too small: {n_tenants}"
+    assert len(non_tf) >= 2, f"need >=2 non-transformer families: {non_tf}"
+    assert a["train_cycles"] > 0
+    n_spans = _assert_reconciled(a["mgr"]) + _assert_reconciled(b["mgr"])
+    assert n_spans >= a["requests"] + b["requests"]
+
+    for name, tier in (("continuous", a), ("slab", b)):
+        us = 1e6 * tier["dt"] / max(tier["tokens"], 1)
+        extra = f"cycles={tier['cycles']}" if name == "continuous" \
+            else f"waves={tier['waves']}"
+        out.append(f"production.{name}.tok,{us:.2f},"
+                   f"tokens={tier['tokens']};requests={tier['requests']};"
+                   f"tenants={tier['tenants']};{extra};gate=skip")
+        print(out[-1])
+
+    # the gate=abs row: premium-class SLO violations, encoded 1+count so
+    # the zero-violation baseline is 1.00 and any violation >= 2x fails.
+    # Drain-cycle accounting is deterministic and quick/full-invariant
+    # (the premium budget dominates both horizons).
+    ledger_a = a["mgr"].telemetry.spans.to_dict()
+    lc = ledger_a["classes"].get("latency_critical",
+                                 {"attained": 0, "violated": 0})
+    out.append(f"production.lc_attainment,{1 + a['premium_viol']:.2f},"
+               f"premium_violations={a['premium_viol']};"
+               f"lc_attained={lc['attained']};"
+               f"lc_violated={lc['violated']};"
+               f"tenants={n_tenants};gate=abs")
+    print(out[-1])
+    assert a["premium_viol"] == 0, (
+        f"premium latency-critical tenants violated "
+        f"{a['premium_viol']} SLOs (budget {PREMIUM_BUDGET} cycles)")
+    # the tight-budget standard class must actually register violations
+    # (otherwise the cause histogram is untested), and every terminal
+    # state must appear in the ledger
+    assert lc["violated"] > 0, "standard-LC tight budget never violated"
+    assert ledger_a["evicted"] > 0 and ledger_a["withdrawn"] > 0
+
+    print("\nper-class SLO report (continuous tier):")
+    for cls, row in sorted(_class_report(a["mgr"]).items()):
+        causes = ",".join(f"{c}={n}" for c, n in
+                          sorted(row["causes"].items())) or "-"
+        print(f"  {cls:<18} attained {row['attained']:>3}  "
+              f"violated {row['violated']:>3} "
+              f"({row['attainment']:.1%})  p50 {row['p50_cycles']} "
+              f"p99 {row['p99_cycles']} cycles  causes: {causes}")
+    print("per-class SLO report (slab tier):")
+    for cls, row in sorted(_class_report(b["mgr"]).items()):
+        print(f"  {cls:<18} attained {row['attained']:>3}  "
+              f"violated {row['violated']:>3} "
+              f"({row['attainment']:.1%})  p50 {row['p50_cycles']} "
+              f"p99 {row['p99_cycles']} cycles")
+    print(f"fleet: {n_tenants} tenants "
+          f"({len(b['families'])} families: {sorted(b['families'])}), "
+          f"training rode {a['train_cycles']} drain cycles, "
+          f"{n_spans} spans reconciled")
+
+    _bench_span_overhead(out, k["reps"])
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv[1:]:
+        os.environ["BENCH_QUICK"] = "1"
+        QUICK = True
+    main([])

@@ -49,6 +49,9 @@ SUITES = {
                     "serve-path smoke timings (the four CI configs)"),
     "serve_cont": ("benchmarks.serve_continuous",
                    "continuous batching vs lockstep/independent serving"),
+    "production": ("benchmarks.production_trace",
+                   "trace-driven production macro-bench (mixed fleet, "
+                   "SLO ledger report)"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
 }
 
@@ -56,8 +59,11 @@ SUITES = {
 #: the committed baseline so check_regression has something to compare).
 #: mem rows gate=abs (deterministic byte counts), elastic rows gate=skip
 #: (the packing ratio is asserted inside the suite itself), slo gates
-#: its deterministic 1+p99 row (gate=abs) and asserts its bars in-suite
-QUICK_SUITES = ["sched", "fault", "mem", "elastic", "slo", "serve_cont"]
+#: its deterministic 1+p99 row (gate=abs) and asserts its bars in-suite,
+#: production gates its quick/full-invariant 1+LC-violations row
+#: (gate=abs) with throughput rows gate=skip self-asserted
+QUICK_SUITES = ["sched", "fault", "mem", "elastic", "slo", "serve_cont",
+                "production"]
 
 
 def main() -> None:

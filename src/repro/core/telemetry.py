@@ -19,7 +19,22 @@ module unifies them behind two host-side primitives:
   lookahead hold/flush, fence elision via proven steps, drain cycles)
   stamped with the scheduler's monotonic drain-cycle counter plus a wall
   clock, exportable as Chrome/Perfetto ``trace_event`` JSON (one track
-  per tenant, one per scheduler) for ``ui.perfetto.dev``.
+  per tenant, one per scheduler, one per completed serve request) for
+  ``ui.perfetto.dev``.  Ring overflow is counted (:attr:`EventTrace.
+  dropped`) and surfaced in ``metrics_report()`` / ``repro.top``.
+* :class:`RequestSpan` / :class:`SpanLedger` — request-level tracing for
+  the serving plane.  Every serve request owns a span whose lifetime is
+  partitioned into phases (``queue``/``hold``/``prefill``/``decode``/
+  ``preempt``/``stall``) on the **drain-cycle clock**: the serving
+  drivers mark phase transitions at existing drain-cycle boundaries, so
+  the per-phase component cycles always sum *exactly* to the end-to-end
+  latency (asserted in tests/test_spans.py and the production
+  macro-bench).  Closing a span feeds the per-tenant-class SLO
+  attainment ledger (attained/violated + violation-cause histogram — a
+  latency-critical span violates when its *slack* cycles, the
+  queue+hold+preempt+stall sum, exceed the class's ``queue_age_budget``)
+  and emits per-request Perfetto tracks linked to the submit instant by
+  flow events.
 
 **Sync-freedom invariant** (the ViolationLog discipline): nothing here
 ever reads device memory.  Counters and histograms are fed from host
@@ -55,11 +70,16 @@ __all__ = [
     "MetricsRegistry",
     "TraceEvent",
     "EventTrace",
+    "RequestSpan",
+    "SpanLedger",
     "Telemetry",
     "QUEUE_AGE_BOUNDS",
     "WIDTH_BOUNDS",
     "WALL_US_BOUNDS",
     "SLOTS_BOUNDS",
+    "E2E_CYCLE_BOUNDS",
+    "SPAN_PHASES",
+    "SLACK_PHASES",
 ]
 
 #: global (non-tenant) series key inside the registry maps — a plain
@@ -74,6 +94,9 @@ WIDTH_BOUNDS: Tuple[float, ...] = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
 WALL_US_BOUNDS: Tuple[float, ...] = tuple(float(4 ** i) for i in range(14))
 #: slot counts (compaction moves, partition sizes): pow4 up to 2^30
 SLOTS_BOUNDS: Tuple[float, ...] = tuple(float(4 ** i) for i in range(16))
+#: end-to-end request latencies in drain cycles: pow2 up to 4096
+E2E_CYCLE_BOUNDS: Tuple[float, ...] = \
+    (0.0,) + tuple(float(1 << i) for i in range(13))
 
 
 class Histogram:
@@ -177,6 +200,8 @@ class MetricsRegistry:
         "fused_step_width": WIDTH_BOUNDS,
         "drain_cycle_us": WALL_US_BOUNDS,
         "compaction_slots_moved": SLOTS_BOUNDS,
+        "request_e2e_cycles": E2E_CYCLE_BOUNDS,
+        "request_e2e_us": WALL_US_BOUNDS,
     }
 
     def __init__(self, enabled: bool = True):
@@ -350,22 +375,28 @@ class MetricsRegistry:
 
 class TraceEvent:
     """One flight-recorder entry: ``track`` is the Perfetto thread the
-    event renders on (a tenant id, or the scheduler/drain tracks),
-    ``cycle`` the scheduler's drain-cycle stamp, ``ts_us`` wall
-    microseconds from trace start, ``dur_us`` present for duration
-    events (drain cycles)."""
+    event renders on (a tenant id, the scheduler/drain tracks, or a
+    per-request ``tenant:rN`` track), ``cycle`` the scheduler's
+    drain-cycle stamp, ``ts_us`` wall microseconds from trace start,
+    ``dur_us`` present for duration events (drain cycles, span phases).
+    ``flow`` optionally attaches a Chrome flow-event record
+    (``("s"|"t"|"f", flow_id)``) so e.g. a request's submit instant links
+    to its span slices across tracks with a Perfetto arrow."""
 
-    __slots__ = ("name", "track", "cycle", "ts_us", "dur_us", "args")
+    __slots__ = ("name", "track", "cycle", "ts_us", "dur_us", "args",
+                 "flow")
 
     def __init__(self, name: str, track: str, cycle: int, ts_us: float,
                  dur_us: Optional[float] = None,
-                 args: Optional[Dict[str, Any]] = None):
+                 args: Optional[Dict[str, Any]] = None,
+                 flow: Optional[Tuple[str, int]] = None):
         self.name = name
         self.track = track
         self.cycle = cycle
         self.ts_us = ts_us
         self.dur_us = dur_us
         self.args = args or {}
+        self.flow = flow
 
     def to_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "track": self.track,
@@ -400,16 +431,26 @@ class EventTrace:
         #: lifetime append count (ring drops are visible as
         #: ``emitted - len(events())``)
         self.emitted = 0
+        #: lifetime count of events the ring silently evicted at
+        #: capacity — surfaced in ``metrics_report()["trace"]`` and as a
+        #: ``repro.top`` warning so an undersized ring is never mistaken
+        #: for a complete trace
+        self.dropped = 0
 
     def emit(self, name: str, track: str, cycle: int,
              dur_us: Optional[float] = None,
-             ts_us: Optional[float] = None, **args: Any) -> None:
+             ts_us: Optional[float] = None,
+             flow: Optional[Tuple[str, int]] = None,
+             **args: Any) -> None:
         if not self.enabled:
             return
         if ts_us is None:
             ts_us = (time.perf_counter_ns() - self._t0) / 1000.0
+        if len(self._events) == self.capacity:
+            self.dropped += 1
         self._events.append(TraceEvent(name, track, cycle, ts_us,
-                                       dur_us=dur_us, args=args))
+                                       dur_us=dur_us, args=args,
+                                       flow=flow))
         self.emitted += 1
 
     def now_us(self) -> float:
@@ -461,10 +502,302 @@ class EventTrace:
                 rec["ts"] = ev.ts_us
                 rec["s"] = "t"
             body.append(rec)
+            if ev.flow is not None:
+                letter, fid = ev.flow
+                frec: Dict[str, Any] = {
+                    "name": "request", "cat": "guardian.flow",
+                    "ph": letter, "id": fid, "pid": pid, "tid": tid,
+                    "ts": ev.ts_us,
+                }
+                if letter == "f":
+                    frec["bp"] = "e"
+                body.append(frec)
         return {"traceEvents": out + body, "displayTimeUnit": "ms"}
 
     def to_json(self, **kw: Any) -> str:
         return json.dumps(self.to_chrome(), **kw)
+
+
+#: the exhaustive partition of a serve request's lifetime (drain-cycle
+#: clock).  ``queue``: submitted but not yet picked; ``hold``: picked
+#: into a run but parked this cycle (inflight cap / no idle row);
+#: ``prefill``/``decode``: on-device compute cycles; ``preempt``:
+#: bypassed by a latency-critical joiner; ``stall``: blocked on the
+#: paged-KV pool (page-full / compaction stall).
+SPAN_PHASES: Tuple[str, ...] = (
+    "queue", "hold", "prefill", "decode", "preempt", "stall")
+
+#: the non-compute phases — their sum is a request's *slack*, the
+#: quantity an SLO class budgets (``TenantClassPolicy.queue_age_budget``)
+SLACK_PHASES: Tuple[str, ...] = ("queue", "hold", "preempt", "stall")
+
+
+class RequestSpan:
+    """One serve request's lifetime, partitioned into phases on the
+    drain-cycle clock.
+
+    The span is a sequence of half-open phase segments
+    ``(phase, cycle0, cycle1, us0, us1)`` with ``cycle1`` of each equal
+    to ``cycle0`` of the next, so the per-phase cycle components sum
+    *exactly* to the end-to-end latency by construction — the
+    reconciliation invariant tests and the macro-bench assert.  Phase
+    transitions are recorded at drain-cycle boundaries by the serve
+    drivers; a transition within one cycle renames the pending phase
+    rather than emitting a zero-length segment.
+
+    Pure host bookkeeping: never reads device memory, never syncs.
+    Spans are created by :class:`SpanLedger` (None when telemetry is
+    off — every call site guards, so off-mode is byte-identical).
+    """
+
+    __slots__ = ("tenant", "rid", "sid", "cls", "budget", "started",
+                 "segments", "start_cycle", "start_us", "end_cycle",
+                 "end_us", "outcome", "_phase", "_pc", "_pus")
+
+    def __init__(self, tenant: str, rid: int, sid: int,
+                 cls: Optional[str] = None,
+                 budget: Optional[int] = None):
+        self.tenant = tenant
+        self.rid = rid
+        #: ledger-unique span id — doubles as the Perfetto flow id
+        self.sid = sid
+        #: SLO class name ("latency_critical"/"best_effort"/None)
+        self.cls = cls
+        #: slack budget in drain cycles (None = unbudgeted: always
+        #: attained on completion)
+        self.budget = budget
+        self.started = False
+        self.segments: List[Tuple[str, int, int, float, float]] = []
+        self.start_cycle = 0
+        self.start_us = 0.0
+        self.end_cycle = 0
+        self.end_us = 0.0
+        #: terminal state: "complete" | "evicted" | "withdrawn"
+        self.outcome: Optional[str] = None
+        self._phase: Optional[str] = None
+        self._pc = 0
+        self._pus = 0.0
+
+    def begin(self, cycle: int, us: float) -> None:
+        """Start the clock (phase ``queue``).  Paged requests with a
+        future ``arrive`` stamp begin when they become visible to
+        admission, not at submit — queueing they asked for is not
+        queueing the system imposed."""
+        self.started = True
+        self.start_cycle = cycle
+        self.start_us = us
+        self._phase = "queue"
+        self._pc = cycle
+        self._pus = us
+
+    def phase(self, name: str, cycle: int, us: float) -> None:
+        """Transition to ``name`` at drain-cycle ``cycle``.  No-op when
+        unstarted, finished, or already in that phase."""
+        if (not self.started or self.outcome is not None
+                or name == self._phase):
+            return
+        if cycle > self._pc:
+            self.segments.append(
+                (self._phase, self._pc, cycle, self._pus, us))
+            self._pc = cycle
+            self._pus = us
+        self._phase = name
+
+    def finish(self, outcome: str, cycle: int, us: float) -> None:
+        """Stamp the terminal state and close the pending segment.  An
+        unstarted span (deferred, then withdrawn/evicted before its
+        clock began) closes zero-length."""
+        if self.outcome is not None:
+            return
+        if not self.started:
+            self.begin(cycle, us)
+        if cycle > self._pc:
+            self.segments.append(
+                (self._phase, self._pc, cycle, self._pus, us))
+        self.end_cycle = cycle
+        self.end_us = us
+        self.outcome = outcome
+        self._phase = None
+
+    @property
+    def e2e_cycles(self) -> int:
+        return self.end_cycle - self.start_cycle
+
+    @property
+    def e2e_us(self) -> float:
+        return self.end_us - self.start_us
+
+    def components(self) -> Dict[str, int]:
+        """Per-phase drain-cycle totals.  For every finished span,
+        ``sum(components().values()) == e2e_cycles`` exactly."""
+        comps = {p: 0 for p in SPAN_PHASES}
+        for phase, c0, c1, _us0, _us1 in self.segments:
+            comps[phase] += c1 - c0
+        return comps
+
+    def slack_cycles(self) -> int:
+        comps = self.components()
+        return sum(comps[p] for p in SLACK_PHASES)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"tenant": self.tenant, "rid": self.rid,
+                "class": self.cls, "outcome": self.outcome,
+                "e2e_cycles": self.e2e_cycles,
+                "components": self.components()}
+
+
+class SpanLedger:
+    """Owns every :class:`RequestSpan` and folds closed spans into the
+    per-tenant-class SLO attainment ledger.
+
+    A latency-critical span *attains* its SLO when it completes with
+    slack (queue+hold+preempt+stall cycles) within the class's
+    ``queue_age_budget``; everything else — over-budget completions,
+    evictions, withdrawals — is a violation with a cause (the dominant
+    slack phase, or the terminal outcome).  Closing a span also emits
+    its per-request Perfetto track (one ``X`` slice per phase segment,
+    flow-linked back to the submit instant) and feeds the
+    ``request_e2e_cycles`` / ``request_e2e_us`` histograms.
+
+    All methods are None-tolerant and off-mode no-ops: with telemetry
+    disabled :meth:`open` returns None and every other method returns
+    immediately, so the serve hot paths stay byte-identical.
+    """
+
+    #: closed spans retained for audit (tests, macro-bench reconciliation)
+    CLOSED_KEEP = 4096
+
+    def __init__(self, tel: "Telemetry"):
+        self.tel = tel
+        self._open: Dict[int, RequestSpan] = {}
+        self._next_id = 1
+        self.closed: Deque[RequestSpan] = deque(maxlen=self.CLOSED_KEEP)
+        #: class name -> {"attained", "violated", "causes": {cause: n}}
+        self.classes: Dict[str, Dict[str, Any]] = {}
+        #: tenant -> {"attained", "violated"} (dropped on forget_tenant)
+        self.by_tenant: Dict[str, Dict[str, int]] = {}
+        #: lifetime terminal-outcome totals
+        self.totals: Dict[str, int] = {}
+
+    def open_count(self) -> int:
+        return len(self._open)
+
+    def open(self, tenant: str, rid: int, cls: Optional[str] = None,
+             budget: Optional[int] = None,
+             defer: bool = False) -> Optional[RequestSpan]:
+        """New span for request ``rid`` (None when telemetry is off).
+        ``defer=True`` registers the span without starting its clock —
+        :meth:`begin` starts it when the request becomes admissible."""
+        if not self.tel.enabled:
+            return None
+        sp = RequestSpan(tenant, rid, self._next_id, cls=cls,
+                         budget=budget)
+        self._next_id += 1
+        self._open[sp.sid] = sp
+        if not defer:
+            self.begin(sp)
+        return sp
+
+    def begin(self, sp: Optional[RequestSpan]) -> None:
+        if sp is None or sp.started:
+            return
+        trace = self.tel.trace
+        sp.begin(self.tel.cycle, trace.now_us())
+        trace.emit("req_submit", sp.tenant, sp.start_cycle,
+                   ts_us=sp.start_us, flow=("s", sp.sid), rid=sp.rid)
+
+    def phase(self, sp: Optional[RequestSpan], name: str) -> None:
+        """Transition ``sp`` at the current drain cycle (cheap no-op on
+        None / unstarted / same-phase — callers don't guard)."""
+        if sp is None or not sp.started or name == sp._phase:
+            return
+        sp.phase(name, self.tel.cycle, self.tel.trace.now_us())
+
+    def close(self, sp: Optional[RequestSpan], outcome: str) -> None:
+        """Terminal transition: fold the span into the ledger, feed the
+        latency histograms, emit its Perfetto track."""
+        if sp is None or sp.outcome is not None:
+            return
+        cycle = self.tel.cycle
+        trace = self.tel.trace
+        sp.finish(outcome, cycle, trace.now_us())
+        self._open.pop(sp.sid, None)
+        self.closed.append(sp)
+        self.totals[outcome] = self.totals.get(outcome, 0) + 1
+
+        reg = self.tel.registry
+        reg.inc(f"requests_{outcome}", tenant=sp.tenant)
+        reg.observe("request_e2e_cycles", float(sp.e2e_cycles),
+                    tenant=sp.tenant)
+        reg.observe("request_e2e_us", sp.e2e_us, tenant=sp.tenant,
+                    timing=True)
+
+        comps = sp.components()
+        slack = sum(comps[p] for p in SLACK_PHASES)
+        attained = (outcome == "complete"
+                    and (sp.budget is None or slack <= sp.budget))
+        row = self.by_tenant.get(sp.tenant)
+        if row is None:
+            row = self.by_tenant[sp.tenant] = {"attained": 0,
+                                               "violated": 0}
+        cls = sp.cls if sp.cls is not None else "unclassified"
+        crow = self.classes.get(cls)
+        if crow is None:
+            crow = self.classes[cls] = {"attained": 0, "violated": 0,
+                                        "causes": {}}
+        if attained:
+            reg.inc("slo_attained", tenant=sp.tenant)
+            row["attained"] += 1
+            crow["attained"] += 1
+        else:
+            reg.inc("slo_violated", tenant=sp.tenant)
+            row["violated"] += 1
+            crow["violated"] += 1
+            cause = outcome if outcome != "complete" else \
+                max(SLACK_PHASES, key=lambda p: comps[p])
+            crow["causes"][cause] = crow["causes"].get(cause, 0) + 1
+
+        track = f"{sp.tenant}:r{sp.rid}"
+        first = True
+        for name, c0, c1, us0, us1 in sp.segments:
+            trace.emit(name, track, c0, dur_us=max(us1 - us0, 0.0),
+                       ts_us=us0, cycles=c1 - c0,
+                       flow=("f", sp.sid) if first else None)
+            first = False
+        trace.emit(f"req_{outcome}", track, cycle, rid=sp.rid,
+                   e2e_cycles=sp.e2e_cycles, slack=slack,
+                   flow=("f", sp.sid) if first else None)
+
+    def forget_tenant(self, tenant_id: str) -> None:
+        """Eviction path: close the departed tenant's open spans (each
+        counts as a violated request with cause ``evicted``) before the
+        registry drops its series, then drop the per-tenant ledger row.
+        Class-level aggregates survive — fleet history, not tenant
+        state."""
+        for sid in [s for s, sp in self._open.items()
+                    if sp.tenant == tenant_id]:
+            self.close(self._open[sid], "evicted")
+        self.by_tenant.pop(tenant_id, None)
+
+    def to_dict(self) -> Dict[str, Any]:
+        classes: Dict[str, Any] = {}
+        for cls, row in sorted(self.classes.items()):
+            total = row["attained"] + row["violated"]
+            classes[cls] = {
+                "attained": row["attained"],
+                "violated": row["violated"],
+                "attainment": row["attained"] / total if total else 1.0,
+                "causes": dict(sorted(row["causes"].items())),
+            }
+        return {
+            "classes": classes,
+            "tenants": {t: dict(r)
+                        for t, r in sorted(self.by_tenant.items())},
+            "open_spans": len(self._open),
+            "completed": self.totals.get("complete", 0),
+            "evicted": self.totals.get("evicted", 0),
+            "withdrawn": self.totals.get("withdrawn", 0),
+        }
 
 
 class Telemetry:
@@ -482,6 +815,7 @@ class Telemetry:
         self.enabled = enabled
         self.registry = MetricsRegistry(enabled=enabled)
         self.trace = EventTrace(capacity=trace_capacity, enabled=enabled)
+        self.spans = SpanLedger(self)
 
     @property
     def cycle(self) -> int:
@@ -501,6 +835,9 @@ class Telemetry:
                         ts_us=ts_us, **args)
 
     def forget_tenant(self, tenant_id: str) -> None:
+        # spans first: closing an evicted tenant's open spans writes its
+        # counters, which the registry purge below then drops
+        self.spans.forget_tenant(tenant_id)
         self.registry.forget_tenant(tenant_id)
 
     # ------------------------------------------------------------------ #
@@ -598,6 +935,13 @@ class Telemetry:
                                                       tenant=t),
                 "queue_age": self.registry.percentiles(
                     "queue_age_cycles", tenant=t),
+                # request-span ledger: end-to-end latency percentiles
+                # (wall us) and SLO attainment counts for the serving
+                # plane (zeros/absent for non-serving tenants)
+                "latency": self.registry.percentiles(
+                    "request_e2e_us", tenant=t),
+                "slo": self.spans.by_tenant.get(
+                    t, {"attained": 0, "violated": 0}),
                 "violations": vio["tenants"].get(t, {}),
             }
         return {
@@ -627,7 +971,9 @@ class Telemetry:
                              self.registry.counters.items())},
             "gauges": {n: dict(sorted(s.items()))
                        for n, s in sorted(self.registry.gauges.items())},
+            "slo": self.spans.to_dict(),
             "trace": {"events": len(self.trace),
                       "emitted": self.trace.emitted,
+                      "dropped": self.trace.dropped,
                       "capacity": self.trace.capacity},
         }

@@ -64,7 +64,8 @@ def _pcts(d: Dict[str, float], unit: str = "") -> str:
 def format_tenants(report: Dict[str, Any]) -> List[str]:
     lines = [f"{'tenant':<18}{'state':<12}{'policy':<9}{'cls':>4}{'wt':>3}"
              f"{'extent':>15}{'util':>6}{'infl':>5}{'pg%':>5}"
-             f"{'q50':>5}{'q99':>5}{'viol':>6}"]
+             f"{'q50':>5}{'q99':>5}"
+             f"{'e2e50':>8}{'e2e99':>8}{'slo%':>6}{'viol':>6}"]
     short_cls = {"latency_critical": "lc", "best_effort": "be"}
     for name, row in sorted(report.get("tenants", {}).items()):
         part = row.get("partition", {})
@@ -74,6 +75,14 @@ def format_tenants(report: Dict[str, Any]) -> List[str]:
         pg = row.get("page_occupancy")
         age = row.get("queue_age", {})
         cls = short_cls.get(row.get("class"), "-")
+        # request-span ledger columns: end-to-end latency percentiles
+        # and SLO attainment (dashes for tenants that never served)
+        lat = row.get("latency", {})
+        slo = row.get("slo", {})
+        served = slo.get("attained", 0) + slo.get("violated", 0)
+        e50 = _us(lat["p50"]) if lat.get("count") else "-"
+        e99 = _us(lat["p99"]) if lat.get("count") else "-"
+        att = f"{slo.get('attained', 0) / served:.0%}" if served else "-"
         lines.append(
             f"{name:<18}{row.get('state', '?'):<12}"
             f"{row.get('policy', '?'):<9}{cls:>4}{row.get('weight', 1):>3}"
@@ -82,6 +91,7 @@ def format_tenants(report: Dict[str, Any]) -> List[str]:
             f"{('-' if infl is None else f'{int(infl)}'):>5}"
             f"{('-' if pg is None else f'{pg:.0%}'):>5}"
             f"{age.get('p50', 0.0):>5g}{age.get('p99', 0.0):>5g}"
+            f"{e50:>8}{e99:>8}{att:>6}"
             f"{row.get('violations', {}).get('total', 0):>6}")
     return lines
 
@@ -102,6 +112,7 @@ def format_report(report: Dict[str, Any],
     launch = report.get("launch", {})
     trace = report.get("trace", {})
     vio = report.get("violations", {})
+    slo = report.get("slo", {})
 
     lines: List[str] = [
         f"guardian flight recorder — {len(report.get('tenants', {}))} "
@@ -164,9 +175,25 @@ def format_report(report: Dict[str, Any],
         _rule("violations"),
         (f"transfer {len(vio.get('transfer_violations', []))}"
          f"  quarantine events {len(vio.get('events', []))}"),
+        _rule("slo ledger"),
+        (f"requests: {slo.get('completed', 0)} completed"
+         f"  {slo.get('evicted', 0)} evicted"
+         f"  {slo.get('withdrawn', 0)} withdrawn"
+         f"  ({slo.get('open_spans', 0)} spans open)"),
+        *(f"  {cls:<18}attained {row.get('attained', 0)}"
+          f"  violated {row.get('violated', 0)}"
+          f"  ({row.get('attainment', 1.0):.1%})"
+          + ("  causes: " + ",".join(
+              f"{c}={n}" for c, n in sorted(
+                  row.get("causes", {}).items()))
+             if row.get("causes") else "")
+          for cls, row in sorted(slo.get("classes", {}).items())),
         _rule("trace"),
         (f"{trace.get('events', 0)} event(s) buffered"
          f" ({trace.get('emitted', 0)} emitted,"
-         f" capacity {trace.get('capacity', 0)})"),
+         f" capacity {trace.get('capacity', 0)})"
+         + (f"  ! {trace.get('dropped', 0)} dropped (ring overflow — "
+            f"raise trace_capacity)"
+            if trace.get("dropped", 0) else "")),
     ]
     return "\n".join(lines)

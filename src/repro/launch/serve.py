@@ -327,6 +327,9 @@ class ServeEngine:
             self._pool.pages = PagePool(self._n_phys, n_slots)
         self.rejected: List[int] = []     # rids dropped by quarantine
         self._requests: List[Request] = []
+        #: rid -> RequestSpan handle (absent entirely when telemetry is
+        #: off — every ledger call is None-tolerant)
+        self._spans: Dict[int, Any] = {}
         self._rid = 0
         self.decode_steps = 0
         #: sampled decode steps thread a fresh PRNG key per cycle
@@ -507,6 +510,9 @@ class ServeEngine:
             self._requests = [r for r in self._requests
                               if r.done or r.tenant != tenant_id]
             self.rejected.extend(dropped)
+            tel = self.manager.telemetry
+            for rid in dropped:
+                tel.spans.close(self._spans.pop(rid, None), "evicted")
 
     def submit(self, tenant: str, prompt: np.ndarray,
                max_new: Optional[int] = None, arrive: int = 0) -> int:
@@ -535,6 +541,10 @@ class ServeEngine:
             tel = self.manager.telemetry
             if tel.enabled:
                 tel.registry.inc("requests", tenant=tenant)
+                # a future-arrival request defers its span clock: queue
+                # time the trace replay asked for is not queue time the
+                # system imposed (_cont_join begins it at eligibility)
+                self._open_span(tenant, rid, defer=arrive > 0)
             return rid
         used = {r.slot for r in self._requests if not r.done
                 and r.tenant == tenant}
@@ -562,11 +572,43 @@ class ServeEngine:
         tel = self.manager.telemetry
         if tel.enabled:
             tel.registry.inc("requests", tenant=tenant)
+            self._open_span(tenant, rid)
         # occupancy report: the pressure tracker sees serve tenants too
         # (non-shrinkable — the engine owns slot placement)
         self.manager.elastic.pressure.observe(
             tenant, len(used) + 1, part.size)
         return rid
+
+    def _open_span(self, tenant: str, rid: int,
+                   defer: bool = False) -> None:
+        """Open the request's span on the manager's ledger.  An SLO class
+        on the tenant attaches its slack budget (latency-critical only —
+        best-effort spans complete unbudgeted)."""
+        tel = self.manager.telemetry
+        if not tel.enabled:
+            return
+        cp = self.manager.class_policy_of(tenant)
+        cls = cp.tenant_class.value if cp is not None else None
+        budget = cp.queue_age_budget \
+            if cp is not None and cp.is_latency_critical else None
+        self._spans[rid] = tel.spans.open(tenant, rid, cls=cls,
+                                          budget=budget, defer=defer)
+
+    def withdraw(self, rid: int) -> bool:
+        """Remove a queued (never-ran) request; returns True when
+        withdrawn.  Refuses requests that are done, hold pool pages, or
+        while a run is in flight — withdrawal is a queue operation, not a
+        cancellation of device work."""
+        for r in self._requests:
+            if r.rid != rid:
+                continue
+            if r.done or r.pages or self._in_run:
+                return False
+            self._requests.remove(r)
+            self.manager.telemetry.spans.close(
+                self._spans.pop(rid, None), "withdrawn")
+            return True
+        return False
 
     # ------------------------------------------------------------------ #
     def _guard_for_rows(self, rows: List[Optional[Request]]
@@ -678,6 +720,14 @@ class ServeEngine:
         if not rows:
             return None
         self._in_run = True
+        tel = self.manager.telemetry
+        if tel.enabled:
+            # requests the wave left behind (batch full) are *held* for
+            # the whole run — _finalize reverts survivors to "queue"
+            picked = {r.rid for r in rows}
+            for r in self._requests:
+                if not r.done and r.rid not in picked:
+                    tel.spans.phase(self._spans.get(r.rid), "hold")
         B = self.max_batch
         plen = max(len(r.prompt) for r in rows)
         toks = np.zeros((B, plen), np.int32)
@@ -709,6 +759,11 @@ class ServeEngine:
         :func:`serve_engines`."""
         if st.has_check:
             self._attribute(st.rows, st.slot_ids)
+        tel = self.manager.telemetry
+        if tel.enabled:
+            name = "prefill" if st.batch is not None else "decode"
+            for r in st.rows:
+                tel.spans.phase(self._spans.get(r.rid), name)
         if st.batch is not None:       # prefill
             return self._client.launch_kernel(
                 self._steps.prefill_name,
@@ -750,11 +805,18 @@ class ServeEngine:
         # dropped + recorded in self.rejected: they must not also be
         # reported as served (their clamped generations are discarded)
         out: Dict[int, List[int]] = {}
+        tel = self.manager.telemetry
         for r in st.rows:
             state = self.manager.quarantine.state_of(r.tenant)
             if state is None or state.admissible:
                 r.done = True
                 out[r.rid] = r.generated
+                tel.spans.close(self._spans.pop(r.rid, None), "complete")
+        if tel.enabled:
+            # survivors the wave held now re-queue for the next run
+            for r in self._requests:
+                if not r.done:
+                    tel.spans.phase(self._spans.get(r.rid), "queue")
         return out
 
     def _apply_pending_scrubs(self) -> None:
@@ -822,18 +884,22 @@ class ServeEngine:
         """Cycle boundary: rows whose request exhausted its budget (or
         whose tenant lost admissibility) leave — their virtual pages
         return to the tenant's free pool immediately."""
+        tel = self.manager.telemetry
         for i, r in enumerate(st.rows):
             if r is None:
                 continue
             if not self._admissible(r.tenant):
                 r.pages = []
                 st.rows[i] = None
+                # span already closed by _on_transition; idempotent
+                tel.spans.close(self._spans.pop(r.rid, None), "evicted")
                 continue
             if st.left[i] <= 0:
                 r.pages = []
                 r.done = True
                 st.served.append(r.rid)
                 st.rows[i] = None
+                tel.spans.close(self._spans.pop(r.rid, None), "complete")
 
     def _cont_join(self, st: _ContState) -> List[int]:
         """Refill idle rows from the admission queue (FIFO, gated on the
@@ -845,7 +911,21 @@ class ServeEngine:
                    if not r.done and not r.pages
                    and r.arrive <= st.cycles
                    and self._admissible(r.tenant)]
+        tel = self.manager.telemetry
+        if tel.enabled:
+            # deferred spans (future-arrival submits) start their clock
+            # the cycle the request becomes eligible for admission
+            for r in waiting:
+                tel.spans.begin(self._spans.get(r.rid))
+        # latency-critical requests admit ahead of class-less /
+        # best-effort peers (stable: FIFO within a class — and a no-op
+        # ordering when no tenant carries a class)
+        def _lc_rank(req: Request) -> int:
+            cp = self.manager.class_policy_of(req.tenant)
+            return 0 if cp is not None and cp.is_latency_critical else 1
+        waiting.sort(key=_lc_rank)
         joiners: List[int] = []
+        stalled_rids: set = set()
         wi = 0
         for i in range(self.max_batch):
             if st.rows[i] is not None or active >= self.max_inflight:
@@ -855,7 +935,9 @@ class ServeEngine:
                 wi += 1
                 pages = self._alloc_pages(r.tenant)
                 if pages is None:
-                    continue    # tenant page-full: later arrivals may fit
+                    # tenant page-full: later arrivals may fit
+                    stalled_rids.add(r.rid)
+                    continue
                 r.pages = pages
                 st.rows[i] = r
                 st.left[i] = r.max_new if r.max_new is not None \
@@ -864,6 +946,25 @@ class ServeEngine:
                 joiners.append(i)
                 active += 1
                 break
+        if tel.enabled and waiting:
+            # attribute this cycle's wait for the left-behind requests:
+            # page-pool stall > bypassed-by-LC preempt > capacity hold >
+            # plain queueing
+            lc_joined = any(_lc_rank(st.rows[i]) == 0 for i in joiners)
+            full = active >= self.max_inflight \
+                or all(row is not None for row in st.rows)
+            for r in waiting:
+                if r.pages:
+                    continue           # joined this cycle
+                sp = self._spans.get(r.rid)
+                if r.rid in stalled_rids:
+                    tel.spans.phase(sp, "stall")
+                elif lc_joined and _lc_rank(r) == 1:
+                    tel.spans.phase(sp, "preempt")
+                elif full:
+                    tel.spans.phase(sp, "hold")
+                else:
+                    tel.spans.phase(sp, "queue")
         # allocator invariant: active requests never share a page, and
         # every page stays inside its owner's virtual extent (cheap host
         # ints — this is the join/leave-churn aliasing check)
@@ -909,6 +1010,14 @@ class ServeEngine:
         handles + row sets for :meth:`_cont_finish`."""
         continuers = [i for i, r in enumerate(st.rows)
                       if r is not None and i not in set(joiners)]
+        tel = self.manager.telemetry
+        if tel.enabled:
+            for i in joiners:
+                tel.spans.phase(self._spans.get(st.rows[i].rid),
+                                "prefill")
+            for i in continuers:
+                tel.spans.phase(self._spans.get(st.rows[i].rid),
+                                "decode")
         pre_req = dec_req = None
         plen = 0
         if joiners:

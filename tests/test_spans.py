@@ -1,0 +1,390 @@
+"""Request-span lifecycle and the SLO attainment ledger (core/telemetry
+RequestSpan/SpanLedger + the serve drivers' phase ticks).
+
+Proof obligations:
+
+* **reconciliation** — for every finished span, the per-phase cycle
+  components sum *exactly* to the end-to-end latency (the invariant the
+  production macro-bench re-asserts at scale);
+* **terminal states** — every opened span ends in exactly one of
+  complete | evicted | withdrawn; no span leaks (open_count drains to
+  zero) through completion, quarantine mid-run, eviction, or withdrawal;
+* **attribution** — the wait phases (queue / hold / preempt / stall)
+  land on the requests the scheduler actually made wait, for the reason
+  it made them wait;
+* **off-mode byte-identity** — with telemetry off the ledger records
+  nothing, allocates nothing, and the generated tokens are identical;
+* **export** — closed spans emit per-request Perfetto tracks linked by
+  flow events; ring overflow is counted, reported, and rendered.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core import TenantClassPolicy
+from repro.core.telemetry import (
+    EventTrace,
+    SLACK_PHASES,
+    SPAN_PHASES,
+    Telemetry,
+)
+from repro.launch.dashboard import format_report
+from repro.launch.serve import (
+    ServeEngine,
+    make_shared_manager,
+    serve_continuous,
+    serve_engines,
+)
+
+CFG = get_config("stablelm-3b").reduced()
+
+
+def _prompts(n, plen=6, salt=0):
+    return [[(7 * i + 3 * j + salt) % 211 + 1 for j in range(plen)]
+            for i in range(n)]
+
+
+def _assert_reconciled(tel):
+    """Every closed span is terminal and its components sum to e2e."""
+    assert tel.spans.open_count() == 0
+    assert len(tel.spans.closed) > 0
+    for sp in tel.spans.closed:
+        assert sp.outcome in ("complete", "evicted", "withdrawn")
+        comps = sp.components()
+        assert set(comps) == set(SPAN_PHASES)
+        assert sum(comps.values()) == sp.e2e_cycles, sp.to_dict()
+
+
+# --------------------------------------------------------------------- #
+# Reconciliation on the real drivers                                    #
+# --------------------------------------------------------------------- #
+def test_continuous_spans_reconcile_and_complete():
+    """Staggered continuous workload: one span per request, all
+    complete, components sum exactly to e2e, ledger totals match."""
+    n = 6
+    mgr = make_shared_manager(1, max_batch=2, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("t", 2)
+    rids = [eng.submit("t", p, max_new=1 + i % 3, arrive=i // 2)
+            for i, p in enumerate(_prompts(n))]
+    out = serve_continuous([eng], max_new_tokens=8)[0]
+    assert sorted(out) == sorted(rids)
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    assert tel.spans.totals == {"complete": n}
+    assert len(tel.spans.closed) == n
+    # deferred (future-arrival) spans started at eligibility, so no
+    # span charges queue time the trace replay itself asked for
+    for sp in tel.spans.closed:
+        assert sp.started and sp.e2e_cycles >= 1
+
+
+def test_lockstep_spans_reconcile_and_complete():
+    """The slab lockstep driver ticks the same span API: overflow
+    requests ride hold/queue across waves and still reconcile."""
+    mgr = make_shared_manager(2, max_batch=2)
+    eng = ServeEngine(CFG, max_batch=2, max_len=16, seed=0, manager=mgr)
+    eng.register_tenant("t", 4)
+    rids = [eng.submit("t", p) for p in _prompts(3)]
+    out: dict = {}
+    for _ in range(3):                   # one serve_engines call per wave
+        out.update(serve_engines([eng], max_new_tokens=3)[0])
+        if len(out) == len(rids):
+            break
+    assert sorted(out) == sorted(rids)
+
+    tel = eng.manager.telemetry
+    _assert_reconciled(tel)
+    assert tel.spans.totals == {"complete": 3}
+    # 3 requests on 2 rows: the wave-2 request waited at least one cycle
+    waited = [sp for sp in tel.spans.closed if sp.slack_cycles() > 0]
+    assert waited, "the overflow request recorded no wait"
+
+
+# --------------------------------------------------------------------- #
+# Wait attribution                                                      #
+# --------------------------------------------------------------------- #
+def test_preempt_phase_when_bypassed_by_latency_critical():
+    """A best-effort request bypassed by a later latency-critical
+    arrival charges the wait to ``preempt``, and the ledger books the
+    LC tenant's completion against its class."""
+    mgr = make_shared_manager(2, max_batch=1, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=1, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("be", 1)
+    eng.register_tenant("lc", 1,
+                        tenant_class=TenantClassPolicy.latency_critical(
+                            queue_age_budget=16))
+    p = _prompts(2)
+    rid_be = eng.submit("be", p[0], max_new=2)
+    rid_lc = eng.submit("lc", p[1], max_new=2)
+    out = serve_continuous([eng], max_new_tokens=4)[0]
+    assert len(out[rid_be]) == 2 and len(out[rid_lc]) == 2
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    by_rid = {sp.rid: sp for sp in tel.spans.closed}
+    # LC joined first despite submitting second; the bypassed BE
+    # request's wait is attributed to preempt
+    assert by_rid[rid_lc].components()["preempt"] == 0
+    assert by_rid[rid_be].components()["preempt"] > 0
+    ledger = tel.spans.to_dict()
+    assert ledger["classes"]["latency_critical"]["attained"] == 1
+    assert tel.registry.counter("slo_attained", tenant="lc") == 1
+
+
+def test_stall_phase_when_page_pool_full():
+    """A request blocked on its tenant's paged-KV extent (not on batch
+    capacity) charges the wait to ``stall``."""
+    mgr = make_shared_manager(1, max_batch=2, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("t", 1)          # one page: second request stalls
+    eng.register_tenant("f", 1)          # filler: the stall-time elastic
+    p = _prompts(2)                      # grow finds no free block
+    rid0 = eng.submit("t", p[0], max_new=3)
+    rid1 = eng.submit("t", p[1], max_new=1)
+    out = serve_continuous([eng], max_new_tokens=4)[0]
+    assert sorted(out) == sorted([rid0, rid1])
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    by_rid = {sp.rid: sp for sp in tel.spans.closed}
+    assert by_rid[rid1].components()["stall"] > 0
+
+
+def test_hold_phase_and_violation_cause():
+    """Batch-capacity waits charge ``hold``; a latency-critical span
+    that completes over budget is a violation whose cause is the
+    dominant slack phase."""
+    mgr = make_shared_manager(2, max_batch=1, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=1, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("lc", 2,
+                        tenant_class=TenantClassPolicy.latency_critical(
+                            queue_age_budget=0))
+    p = _prompts(2)
+    eng.submit("lc", p[0], max_new=3)
+    rid1 = eng.submit("lc", p[1], max_new=1)
+    serve_continuous([eng], max_new_tokens=4)
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    by_rid = {sp.rid: sp for sp in tel.spans.closed}
+    assert by_rid[rid1].components()["hold"] > 0
+    row = tel.spans.to_dict()["classes"]["latency_critical"]
+    # first request fit the zero budget; the held one violated it
+    assert row == {"attained": 1, "violated": 1,
+                   "attainment": 0.5, "causes": {"hold": 1}}
+
+
+# --------------------------------------------------------------------- #
+# Terminal-state edge cases                                             #
+# --------------------------------------------------------------------- #
+def test_withdrawn_request_closes_span():
+    """Withdrawing a queued (never-ran, deferred-clock) request closes
+    its span zero-length as ``withdrawn``; running/done requests refuse
+    withdrawal."""
+    mgr = make_shared_manager(1, max_batch=2, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("t", 2)
+    p = _prompts(2)
+    rid0 = eng.submit("t", p[0], max_new=2)
+    rid1 = eng.submit("t", p[1], max_new=2, arrive=50)
+    assert eng.withdraw(rid1) is True
+    assert eng.withdraw(rid1) is False          # already gone
+    out = serve_continuous([eng], max_new_tokens=4)[0]
+    assert rid1 not in out
+    assert eng.withdraw(rid0) is False          # done
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    assert tel.spans.totals == {"complete": 1, "withdrawn": 1}
+    wd = next(sp for sp in tel.spans.closed if sp.rid == rid1)
+    assert wd.outcome == "withdrawn" and wd.e2e_cycles == 0
+
+
+def test_quarantine_mid_run_closes_spans_evicted():
+    """Quarantining a tenant mid-continuous-run terminates every one of
+    its spans (queued and in-flight) as ``evicted``; co-tenant spans
+    complete; eviction then drops the per-tenant ledger row while class
+    aggregates survive."""
+    mgr = make_shared_manager(1, max_batch=2, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("good", 1)
+    eng.register_tenant("rogue", 1)
+    p = _prompts(4)
+    good_rids = [eng.submit("good", p[0], max_new=6),
+                 eng.submit("good", p[1], max_new=1, arrive=4)]
+    rogue_rids = [eng.submit("rogue", p[2], max_new=6),
+                  eng.submit("rogue", p[3], max_new=6, arrive=3)]
+
+    drains = {"n": 0}
+    orig = mgr.run_queued
+
+    def wrapped(*a, **k):
+        res = orig(*a, **k)
+        drains["n"] += 1
+        if drains["n"] == 2:
+            eng.quarantine_tenant("rogue", reason="test")
+        return res
+
+    mgr.run_queued = wrapped
+    try:
+        out = serve_continuous([eng], max_new_tokens=8)[0]
+    finally:
+        mgr.run_queued = orig
+
+    assert set(good_rids) <= set(out)
+    assert not (set(rogue_rids) & set(out))
+
+    tel = mgr.telemetry
+    _assert_reconciled(tel)
+    assert tel.spans.totals["complete"] == 2
+    assert tel.spans.totals["evicted"] == 2
+    for sp in tel.spans.closed:
+        assert sp.outcome == ("evicted" if sp.tenant == "rogue"
+                              else "complete")
+    assert tel.spans.to_dict()["classes"]["unclassified"]["causes"] \
+        == {"evicted": 2}
+
+    # eviction reclaims the tenant: per-tenant row gone, class history
+    # (and the closed spans) retained
+    assert "rogue" in tel.spans.by_tenant
+    eng.evict_tenant("rogue")
+    assert "rogue" not in tel.spans.by_tenant
+    assert tel.spans.totals["evicted"] == 2
+
+
+# --------------------------------------------------------------------- #
+# Off-mode byte-identity                                                #
+# --------------------------------------------------------------------- #
+def _cont_tokens(telemetry):
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      paged=True, telemetry=telemetry)
+    eng.register_tenant("t", 2)
+    rids = [eng.submit("t", p, max_new=2 + i % 2, arrive=i // 2)
+            for i, p in enumerate(_prompts(4))]
+    out = serve_continuous([eng], max_new_tokens=4)[0]
+    return [out[r] for r in rids], eng
+
+
+def test_telemetry_off_records_nothing_and_tokens_identical():
+    """With telemetry off the span plumbing is compiled in but inert:
+    no spans allocated, no ledger state, and the generated tokens are
+    identical to the telemetry-on run."""
+    toks_on, eng_on = _cont_tokens(True)
+    toks_off, eng_off = _cont_tokens(False)
+    assert toks_on == toks_off
+
+    tel_off = eng_off.manager.telemetry
+    assert not tel_off.enabled
+    assert eng_off._spans == {}
+    assert tel_off.spans.open_count() == 0
+    assert len(tel_off.spans.closed) == 0
+    assert tel_off.spans.totals == {}
+    assert len(tel_off.trace) == 0
+    assert eng_on.manager.telemetry.spans.totals == {"complete": 4}
+
+
+def test_ledger_methods_none_tolerant():
+    """Every SpanLedger entry point is a no-op on None / disabled — the
+    serve hot paths call them unguarded."""
+    tel = Telemetry(enabled=False)
+    led = tel.spans
+    assert led.open("t", 0) is None
+    led.begin(None)
+    led.phase(None, "decode")
+    led.close(None, "complete")
+    led.forget_tenant("t")
+    assert led.open_count() == 0 and led.totals == {}
+    assert led.to_dict()["completed"] == 0
+
+    # double-close is idempotent (quarantine + leave both fire)
+    tel_on = Telemetry(enabled=True)
+    sp = tel_on.spans.open("t", 0)
+    tel_on.spans.close(sp, "evicted")
+    tel_on.spans.close(sp, "complete")
+    assert tel_on.spans.totals == {"evicted": 1}
+
+
+# --------------------------------------------------------------------- #
+# Export: Perfetto tracks + ring-overflow accounting                    #
+# --------------------------------------------------------------------- #
+def test_perfetto_per_request_tracks_and_flow_events():
+    mgr = make_shared_manager(1, max_batch=2, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=2, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("t", 2)
+    rid = eng.submit("t", _prompts(1)[0], max_new=3)
+    serve_continuous([eng], max_new_tokens=3)
+
+    tel = mgr.telemetry
+    chrome = tel.trace.to_chrome()
+    evs = chrome["traceEvents"]
+    tracks = {e["args"]["name"] for e in evs if e.get("ph") == "M"
+              and e["name"] == "thread_name"}
+    assert f"t:r{rid}" in tracks
+
+    sp = tel.spans.closed[-1]
+    flows = [e for e in evs if e.get("cat") == "guardian.flow"
+             and e["id"] == sp.sid]
+    # one outgoing flow at submit, one incoming at the request track
+    assert [e["ph"] for e in flows] == ["s", "f"]
+    assert flows[1]["bp"] == "e"
+    # phase slices are complete events on the request's own track
+    rtid = next(e["tid"] for e in evs if e.get("ph") == "M"
+                and e["name"] == "thread_name"
+                and e["args"]["name"] == f"t:r{rid}")
+    slices = [e for e in evs if e.get("tid") == rtid
+              and e.get("ph") == "X"]
+    assert {e["name"] for e in slices} <= set(SPAN_PHASES)
+    assert sum(e["args"]["cycles"] for e in slices) == sp.e2e_cycles
+
+
+def test_event_trace_counts_ring_drops():
+    tr = EventTrace(capacity=2)
+    for i in range(5):
+        tr.emit(f"e{i}", "t", i)
+    assert len(tr) == 2 and tr.emitted == 5 and tr.dropped == 3
+    tr2 = EventTrace(capacity=8)
+    tr2.emit("only", "t", 0)
+    assert tr2.dropped == 0
+
+
+def test_dashboard_renders_spans_ledger_and_overflow_warning():
+    """metrics_report() carries the ledger + dropped counter and the
+    dashboard renders the new tenant columns, the slo-ledger section,
+    and the ring-overflow warning."""
+    mgr = make_shared_manager(2, max_batch=1, paged=True, max_len=64)
+    eng = ServeEngine(CFG, max_batch=1, max_len=64, seed=0,
+                      manager=mgr, paged=True)
+    eng.register_tenant("lc", 1,
+                        tenant_class=TenantClassPolicy.latency_critical(
+                            queue_age_budget=16))
+    eng.submit("lc", _prompts(1)[0], max_new=2)
+    serve_continuous([eng], max_new_tokens=2)
+
+    report = mgr.metrics_report()
+    assert report["slo"]["completed"] == 1
+    assert report["slo"]["classes"]["latency_critical"]["attained"] == 1
+    assert report["trace"]["dropped"] == 0
+    row = report["tenants"]["lc"]
+    assert row["slo"]["attained"] == 1
+    assert row["latency"]["count"] == 1
+
+    text = format_report(report)
+    assert "slo ledger" in text
+    assert "e2e50" in text and "slo%" in text
+    assert "latency_critical" in text
+    assert "100.0%" in text
+    assert "dropped" not in text        # no overflow -> no warning
+
+    mgr.telemetry.trace.dropped = 7
+    text = format_report(mgr.metrics_report())
+    assert "7 dropped (ring overflow" in text

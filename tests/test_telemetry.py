@@ -457,7 +457,8 @@ def test_format_report_renders_live_manager():
                          registry=mgr.telemetry.registry)
     assert "guardian flight recorder" in text
     for section in ("tenants", "scheduler", "drain cycles", "jit cache",
-                    "elastic", "memory", "launch path", "trace"):
+                    "elastic", "memory", "launch path", "slo ledger",
+                    "trace"):
         assert section in text
     assert "t0" in text and "t1" in text
     assert "▁" in text or "█" in text        # bucket sparklines present
